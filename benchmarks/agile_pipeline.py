@@ -1,0 +1,34 @@
+"""Beyond-paper framework benchmark: Agile stage assignment vs naive
+equal-depth cuts for pipeline parallelism over heterogeneous stacks
+(the pod-scale Fig. 14: bubble fraction = PE waste)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config, list_archs
+from repro.parallel.pipeline import plan_pipeline
+
+
+def run() -> list:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        est = plan_pipeline(cfg, seq_len=4096, num_stages=8, num_microbatches=16)
+        rows.append(
+            {
+                "arch": arch,
+                "naive_ii": est["naive"].plan.ii,
+                "agile_ii": est["agile"].plan.ii,
+                "ii_speedup": est["naive"].plan.ii / max(est["agile"].plan.ii, 1e-12),
+                "naive_bubble": est["naive"].bubble_fraction,
+                "agile_bubble": est["agile"].bubble_fraction,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+from repro.sim import ARCHS, BENCHMARKS, simulate
+
+
+def geo(xs: Sequence[float]) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def cycles(bench: str, arch: str) -> float:
+    return simulate(BENCHMARKS[bench], ARCHS[arch]).cycles
+
+
+def speedups(num_arch: str, den_arch: str, subset: Sequence[str]) -> Dict[str, float]:
+    return {n: cycles(n, num_arch) / cycles(n, den_arch) for n in subset}
+
+
+def emit(rows: List[dict]) -> None:
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c]) for c in cols))

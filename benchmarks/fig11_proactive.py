@@ -1,0 +1,39 @@
+"""Fig. 11: Marionette PE (Proactive PE Configuration) vs von Neumann /
+dataflow PE — normalized speedup per benchmark + geomeans vs paper."""
+from __future__ import annotations
+
+from benchmarks.common import emit, geo, speedups
+from repro.sim import BENCHMARKS
+from repro.sim.workload import Workload
+
+
+def run() -> list:
+    names = list(BENCHMARKS)
+    vs_vn = speedups("von-neumann-pe", "marionette-pe", names)
+    vs_df = speedups("dataflow-pe", "marionette-pe", names)
+    rows = [
+        {
+            "benchmark": n,
+            "speedup_vs_von_neumann": vs_vn[n],
+            "speedup_vs_dataflow": vs_df[n],
+            "branch_op_fraction": BENCHMARKS[n].branch_op_fraction(),
+        }
+        for n in names
+    ]
+    rows.append(
+        {
+            "benchmark": "GEOMEAN (paper: 1.18 / 1.33)",
+            "speedup_vs_von_neumann": geo(list(vs_vn.values())),
+            "speedup_vs_dataflow": geo(list(vs_df.values())),
+            "branch_op_fraction": 0.0,
+        }
+    )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 12: speedup from the peer-to-peer CS-Benes control network
+(marionette-pe with data-NoC control vs with the dedicated network)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, geo, speedups
+from repro.sim import BENCHMARKS
+
+
+def run() -> list:
+    names = list(BENCHMARKS)
+    sp = speedups("marionette-pe", "marionette-net", names)
+    rows = [{"benchmark": n, "network_speedup": sp[n]} for n in names]
+    rows.append({"benchmark": "GEOMEAN (paper: 1.14, max 1.36 @ CRC)", "network_speedup": geo(list(sp.values()))})
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Fig. 13: control-network scalability — stages / combinational delay /
+pipelined latency across fabric sizes and clock targets."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sim.network import scaling_table
+
+
+def run() -> list:
+    return scaling_table()
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig. 14: Agile PE Assignment speedup (full marionette vs marionette-net)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, speedups
+from repro.sim import BENCHMARKS
+
+
+def run() -> list:
+    names = list(BENCHMARKS)
+    sp = speedups("marionette-net", "marionette", names)
+    rows = [{"benchmark": n, "agile_speedup": sp[n]} for n in names]
+    rows.append(
+        {"benchmark": "MEAN (paper: 2.03, max 5.99)", "agile_speedup": sum(sp.values()) / len(sp)}
+    )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fig. 15: Agile PE Assignment effects on the multi-layer nested-loop
+benchmarks whose innermost loop pipelines: outer-BB PE utilization gain and
+pipeline utilization (paper: 21.57x outer-BB avg, GEMM 134x; 1.54x pipeline
+avg; FFT/Viterbi capped at 33% by II=2)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sim import ARCHS, BENCHMARKS, simulate
+from repro.sim.kernels import NESTED_PIPELINED
+
+
+def run() -> list:
+    rows = []
+    ratios_outer, ratios_pipe = [], []
+    for n in NESTED_PIPELINED:
+        w = BENCHMARKS[n]
+        base = simulate(w, ARCHS["marionette-net"])
+        agile = simulate(w, ARCHS["marionette"])
+        # "Outer-BB PE utilization": PEs statically owned by outer-loop BBs do
+        # only that BB's (rare) work; under agile assignment those PEs are
+        # reconfigured into inner-loop pipeline replicas, so their utilization
+        # rises to the whole mapping's average busy fraction.
+        static_outer_util = max(base.outer_util, 1e-12)
+        agile_pe_util = agile.work / (16 * agile.cycles)
+        outer_gain = agile_pe_util / static_outer_util
+        pipe_gain = agile.pipe_util / max(base.pipe_util, 1e-12)
+        # replication multiplies effective initiations per cycle
+        pipe_gain *= agile.inner_replicas
+        ratios_outer.append(outer_gain)
+        ratios_pipe.append(pipe_gain)
+        rows.append(
+            {
+                "benchmark": n,
+                "outer_bb_util_gain": outer_gain,
+                "pipeline_util": agile.pipe_util,
+                "pipeline_util_gain": pipe_gain,
+                "inner_replicas": agile.inner_replicas,
+            }
+        )
+    rows.append(
+        {
+            "benchmark": "MEAN (paper: 21.57x outer, 1.54x pipeline)",
+            "outer_bb_util_gain": sum(ratios_outer) / len(ratios_outer),
+            "pipeline_util": 0.0,
+            "pipeline_util_gain": sum(ratios_pipe) / len(ratios_pipe),
+            "inner_replicas": 0,
+        }
+    )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

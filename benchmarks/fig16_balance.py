@@ -1,0 +1,32 @@
+"""Fig. 16: per-benchmark balance between the control-network speedup and the
+Agile-PE-Assignment speedup (paper: CRC/ADPCM/MS/LDPC are network-dominant;
+Viterbi/Hough/SC-Decode/GEMM are agile-dominant)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, speedups
+from repro.sim import BENCHMARKS
+from repro.sim.kernels import INTENSIVE
+
+
+def run() -> list:
+    net = speedups("marionette-pe", "marionette-net", INTENSIVE)
+    agile = speedups("marionette-net", "marionette", INTENSIVE)
+    rows = []
+    for n in INTENSIVE:
+        rows.append(
+            {
+                "benchmark": n,
+                "network_speedup": net[n],
+                "agile_speedup": agile[n],
+                "dominant": "network" if net[n] >= agile[n] else "agile",
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

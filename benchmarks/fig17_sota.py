@@ -1,0 +1,35 @@
+"""Fig. 17: Marionette vs Softbrain / TIA / REVEL / RipTide on intensive and
+non-intensive benchmarks (paper geomeans: 2.88 / 3.38 / 1.55 / 2.66)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, geo, speedups
+from repro.sim import BENCHMARKS
+from repro.sim.kernels import INTENSIVE, NON_INTENSIVE
+
+PAPER = {"softbrain": 2.88, "tia": 3.38, "revel": 1.55, "riptide": 2.66}
+
+
+def run() -> list:
+    rows = []
+    for n in list(BENCHMARKS):
+        row = {"benchmark": n, "intensive": BENCHMARKS[n].intensive}
+        for base in PAPER:
+            row[f"vs_{base}"] = speedups(base, "marionette", [n])[n]
+        rows.append(row)
+    gm = {"benchmark": "GEOMEAN-intensive", "intensive": True}
+    for base, target in PAPER.items():
+        gm[f"vs_{base}"] = geo(list(speedups(base, "marionette", INTENSIVE).values()))
+    rows.append(gm)
+    paper_row = {"benchmark": "paper-geomean", "intensive": True}
+    for base, target in PAPER.items():
+        paper_row[f"vs_{base}"] = target
+    rows.append(paper_row)
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 6: network area vs state-of-the-art (normalized 28nm, 32-bit, 4x4
+fabric) — our analytic model for Marionette vs the published numbers."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sim.network import marionette_network_area_model, table6_rows
+
+
+def run() -> list:
+    rows = table6_rows()
+    parts = marionette_network_area_model()
+    rows.append(
+        {
+            "arch": "marionette-breakdown",
+            "pe_area_mm2": 0.0,
+            "network_area_mm2": round(parts["total"], 4),
+            "fabric_area_mm2": 0.0,
+            "network_ratio": 0.0,
+            "paper_network_area_mm2": 0.0118,
+            "paper_ratio": 0.115,
+        }
+    )
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

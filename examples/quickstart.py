@@ -1,0 +1,64 @@
+"""Quickstart: train a ~100M-parameter dense LM for a few hundred steps on
+the host devices, with checkpointing and metrics — the end-to-end driver.
+
+    PYTHONPATH=src python examples/quickstart.py --steps 200 --d-model 512
+
+On CPU this uses a reduced width by default; pass --d-model 768 --layers 12
+for the full ~100M configuration (slower).
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="checkpoints/quickstart")
+    args = ap.parse_args()
+
+    base = get_smoke_config("qwen3-32b")
+    cfg = dataclasses.replace(
+        base,
+        name="quickstart-lm",
+        num_layers=args.layers,
+        d_model=args.d_model,
+        num_heads=max(4, args.d_model // 64),
+        num_kv_heads=max(2, args.d_model // 128),
+        d_ff=args.d_model * 4,
+        vocab_size=4096,
+    )
+    cell = ShapeCell("quickstart", seq_len=args.seq_len, global_batch=args.batch, step="train")
+    mesh = make_host_mesh(1, 1)
+    n_params = cfg.num_params()
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    def log(step, metrics):
+        print(
+            f"step {step:5d}  loss {metrics['loss']:.4f}  ce {metrics['ce']:.4f}  "
+            f"grad_norm {metrics['grad_norm']:.3f}  {metrics['step_time_s']*1e3:.0f} ms/step"
+        )
+
+    tr = Trainer(
+        cfg, cell, mesh,
+        TrainerConfig(
+            num_steps=args.steps, checkpoint_every=max(args.steps // 4, 1),
+            checkpoint_dir=args.ckpt, log_every=10, lr=args.lr,
+        ),
+        on_metrics=log,
+    )
+    out = tr.run()
+    print(f"done: step={out['final_step']}  final loss={out['final_loss']:.4f}  restarts={out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

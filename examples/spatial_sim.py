@@ -1,0 +1,36 @@
+"""Run the paper's cycle-level simulator end-to-end: all 13 benchmarks on all
+9 architecture models, printing per-benchmark cycles and the Fig. 17 geomeans.
+
+    PYTHONPATH=src python examples/spatial_sim.py [--benchmark gemm]
+"""
+import argparse
+import math
+
+from repro.sim import ARCHS, BENCHMARKS, simulate
+from repro.sim.kernels import INTENSIVE
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--benchmark", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    names = [args.benchmark] if args.benchmark else list(BENCHMARKS)
+    archs = list(ARCHS)
+    print(f"{'benchmark':18s}" + "".join(f"{a:>16s}" for a in archs))
+    results = {}
+    for n in names:
+        row = {a: simulate(BENCHMARKS[n], ARCHS[a]) for a in archs}
+        results[n] = row
+        print(f"{n:18s}" + "".join(f"{row[a].cycles:16.0f}" for a in archs))
+
+    if not args.benchmark:
+        print("\nFig.17 intensive geomeans (ours vs paper):")
+        for base, paper in [("softbrain", 2.88), ("tia", 3.38), ("revel", 1.55), ("riptide", 2.66)]:
+            sp = [results[n][base].cycles / results[n]["marionette"].cycles for n in INTENSIVE]
+            g = math.exp(sum(math.log(x) for x in sp) / len(sp))
+            print(f"  vs {base:10s}: {g:5.2f}x   (paper {paper:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Marionette-JAX: a control-flow-plane framework for large-model training/serving.
+
+Reproduction of "Towards Efficient Control Flow Handling in Spatial
+Architecture via Architecting the Control Flow Plane" (Marionette, 2023),
+adapted to TPU pods: the paper's decoupled control-flow plane becomes a
+first-class control plane for dynamic model execution (MoE routing, hybrid
+stacks, decode loops), alongside a faithful cycle-level simulator of the
+paper's own evaluation.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,28 @@
+"""Architecture configs. One module per assigned architecture + the paper fabric.
+
+Use :func:`repro.configs.get_config` / :func:`repro.configs.list_archs`.
+"""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeCell,
+    SHAPE_CELLS,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    register,
+    cells_for,
+)
+
+# Importing the arch modules registers them.
+from repro.configs import (  # noqa: F401
+    musicgen_large,
+    recurrentgemma_2b,
+    qwen3_32b,
+    starcoder2_3b,
+    stablelm_12b,
+    qwen1_5_4b,
+    qwen3_moe_235b_a22b,
+    llama4_maverick_400b_a17b,
+    phi_3_vision_4_2b,
+    mamba2_2_7b,
+)

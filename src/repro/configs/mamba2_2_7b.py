@@ -1,0 +1,30 @@
+"""Mamba2-2.7B (SSD — state-space duality) [arXiv:2405.21060; unverified].
+
+Attention-free SSM: 64L, d_model=2560, expand=2 (d_inner=5120),
+ssm_state=128, head_dim=64 (80 SSD heads), vocab=50280.
+The routing technique is inapplicable (attention/FFN-free); agile stage
+assignment and decode-loop control plans apply.  Sub-quadratic: long_500k
+runs (O(1) recurrent state).
+"""
+from repro.configs.base import ModelConfig, register, shrink
+
+FULL = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=1,        # unused by SSD blocks
+    num_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50_280,
+    block_pattern=("ssm",),
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    conv1d_width=4,
+    tie_embeddings=True,
+)
+
+register(FULL, shrink(FULL, num_layers=2, d_ff=0))

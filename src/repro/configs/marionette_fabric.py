@@ -1,0 +1,38 @@
+"""The paper's own hardware configuration (Table 4): the 16-PE Marionette
+fabric @ 500 MHz, 28nm — exposed for the simulator/benchmarks side.
+
+This is NOT an LM architecture config; it parameterizes `repro.sim`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    n_pes: int = 16
+    n_nonlinear_pes: int = 4       # PEs with nonlinear-fitting FUs
+    clock_mhz: float = 500.0
+    tech_nm: int = 28
+    data_scratchpad_kb: int = 16
+    instr_scratchpad_kb: int = 2
+    # Table 4 area/power
+    area_mm2: float = 0.151
+    power_mw: float = 152.09
+    pe_area_share: float = 0.6011
+    network_area_share: float = 0.0560
+    memory_area_share: float = 0.2558
+    control_area_share: float = 0.0871
+
+
+MARIONETTE_FABRIC = FabricConfig()
+
+
+def cycles_to_us(cycles: float, fabric: FabricConfig = MARIONETTE_FABRIC) -> float:
+    """Convert simulator cycles to microseconds at the fabric clock."""
+    return cycles / fabric.clock_mhz
+
+
+def energy_uj(cycles: float, fabric: FabricConfig = MARIONETTE_FABRIC) -> float:
+    """Coarse energy estimate: power x time (the paper reports averages)."""
+    return fabric.power_mw * 1e-3 * cycles_to_us(cycles)

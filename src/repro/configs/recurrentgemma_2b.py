@@ -1,0 +1,27 @@
+"""RecurrentGemma-2B (Griffin) [arXiv:2402.19427; hf].
+
+Hybrid RG-LRU + local attention with 1:2 attn:recurrent pattern: 26L,
+d_model=2560, 10 heads (MQA, kv=1), d_ff=7680 (GeGLU), vocab=256000,
+lru_width=2560, local attention window 2048.
+"""
+from repro.configs.base import ModelConfig, register, shrink
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    attention_kind="local",
+    local_window=2048,
+    block_pattern=("rec", "rec", "attn"),
+    lru_width=2560,
+    conv1d_width=4,
+    tie_embeddings=True,
+)
+
+register(FULL, shrink(FULL, num_layers=3))

@@ -1,0 +1,19 @@
+"""StableLM-2-12B [hf:stabilityai/stablelm-2-1_6b family; hf].
+
+Dense GQA decoder: 40L, d_model=5120, 32 heads (kv=8, head_dim=160),
+d_ff=13824, vocab=100352.
+"""
+from repro.configs.base import ModelConfig, register, shrink
+
+FULL = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=13_824,
+    vocab_size=100_352,
+)
+
+register(FULL, shrink(FULL, num_kv_heads=2))

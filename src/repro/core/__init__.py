@@ -1,0 +1,24 @@
+"""The paper's primary contribution, adapted to JAX/TPU: a decoupled control
+flow plane for large-model execution.
+
+- :mod:`repro.core.cdfg` — CDFG program representation (BBs + control edges),
+  shared by the faithful simulator and the agile scheduler.
+- :mod:`repro.core.plans` — control-plane "configuration" tensors
+  (DispatchPlan for MoE branch divergence, StagePlan for pipelines).
+- :mod:`repro.core.control_plane` — plan computation (routing) in its three
+  modes: dense (predication baseline), sync (coupled baseline), lookahead
+  (Marionette proactive configuration).
+- :mod:`repro.core.agile` — Agile PE Assignment: time-extension folding and
+  balanced stage partitioning.
+"""
+from repro.core.cdfg import BasicBlock, CDFG  # noqa: F401
+from repro.core.plans import DispatchPlan, StagePlan  # noqa: F401
+from repro.core.control_plane import (  # noqa: F401
+    route_topk,
+    make_dispatch_plan,
+    dispatch,
+    combine,
+    dense_moe_predication,
+    load_balance_loss,
+)
+from repro.core.agile import assign_stages, time_extend_mapping  # noqa: F401

@@ -1,0 +1,172 @@
+"""Control-plane plan computation: MoE routing in three modes.
+
+Marionette mapping (paper §3-4):
+
+* ``dense``     — the von-Neumann *predication* baseline: both branch paths
+                  (all experts) execute on every token, results are
+                  mask-combined.  Maximum PE (FLOP) waste.
+* ``sync``      — the *switch-configuration* baseline: the router runs inline
+                  with the data plane; dispatch metadata serializes with the
+                  expert compute (control coupled to data, like a dataflow-PE
+                  tag).
+* ``lookahead`` — *Proactive PE Configuration*: the router for layer ``l+1``
+                  runs on layer ``l``'s intermediate hidden state, so the
+                  plan (permutation + counts + collective layout) is ready
+                  before the data plane needs it and its small control
+                  collectives overlap layer ``l``'s heavy compute.
+
+``route_topk``/``make_dispatch_plan`` are the control plane (tiny tensors);
+``dispatch``/``combine`` are the data-plane consumers of the plan.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plans import DispatchPlan
+
+
+class RouterAux(NamedTuple):
+    load_balance_loss: jnp.ndarray  # scalar
+    router_z_loss: jnp.ndarray  # scalar
+    fraction_dropped: jnp.ndarray  # scalar, fraction of assignments over capacity
+
+
+def capacity_for(num_tokens: int, num_experts: int, top_k: int, capacity_factor: float, *, align: int = 8) -> int:
+    """Static per-expert capacity C = ceil(cf * T * k / E), aligned up."""
+    raw = int(capacity_factor * num_tokens * top_k / num_experts) + 1
+    return max(align, -(-raw // align) * align)
+
+
+def route_topk(
+    x: jnp.ndarray,
+    w_router: jnp.ndarray,
+    top_k: int,
+    capacity: int,
+    *,
+    renormalize: bool = True,
+) -> Tuple[DispatchPlan, RouterAux]:
+    """Compute the dispatch plan for tokens ``x`` (T, d) with router (d, E).
+
+    Router math runs in f32 regardless of activation dtype (control plane is
+    numerically cheap and precision-sensitive).
+    """
+    T = x.shape[0]
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(w_router, jnp.float32)  # (T, E)
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)  # (T, k)
+    if renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    plan = make_dispatch_plan(top_e, top_w, E, capacity)
+    aux = RouterAux(
+        load_balance_loss=load_balance_loss(probs, top_e),
+        router_z_loss=jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        fraction_dropped=1.0 - plan.combine_w.astype(bool).mean() if top_k else jnp.float32(0),
+    )
+    return plan, aux
+
+
+def make_dispatch_plan(
+    expert_ids: jnp.ndarray,  # (T, k) int32
+    weights: jnp.ndarray,  # (T, k) f32
+    num_experts: int,
+    capacity: int,
+) -> DispatchPlan:
+    """Build the static-shape plan from router decisions.
+
+    Token-order capacity priority (earlier tokens win slots), implemented with
+    a stable sort by expert — the CS-Benes permutation analogue: a conflict-free
+    assignment of control words (slots) computed entirely on the control plane.
+    """
+    T, k = expert_ids.shape
+    E, C = num_experts, capacity
+    flat_e = expert_ids.reshape(-1).astype(jnp.int32)  # (T*k,)
+    tok = (jnp.arange(T * k, dtype=jnp.int32) // k)  # token of each assignment
+
+    # Stable sort groups assignments by expert, preserving token order.
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(pos_sorted)
+
+    valid = pos < C
+    slot = flat_e * C + pos  # flat slot id where valid
+
+    # dispatch: scatter token index into slots (invalid -> dump slot E*C).
+    scatter_to = jnp.where(valid, slot, E * C)
+    disp = jnp.full((E * C + 1,), T, jnp.int32).at[scatter_to].set(tok)[:-1]
+    disp_valid = jnp.zeros((E * C + 1,), bool).at[scatter_to].set(valid)[:-1]
+
+    combine_idx = jnp.where(valid, slot, -1).reshape(T, k)
+    combine_w = jnp.where(valid, weights.reshape(-1).astype(jnp.float32), 0.0).reshape(T, k)
+    return DispatchPlan(
+        dispatch_idx=disp.reshape(E, C),
+        dispatch_valid=disp_valid.reshape(E, C),
+        combine_idx=combine_idx,
+        combine_w=combine_w,
+    )
+
+
+def dispatch(x: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:
+    """Data plane: gather tokens (T, d) into expert slots (E, C, d)."""
+    T, d = x.shape
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    idx = jnp.where(plan.dispatch_valid, plan.dispatch_idx, T)
+    return x_pad[idx.reshape(-1)].reshape(plan.num_experts, plan.capacity, d)
+
+
+def combine(y_slots: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:
+    """Data plane: weighted scatter of expert outputs (E, C, d) back to (T, d)."""
+    E, C, d = y_slots.shape
+    T, k = plan.combine_idx.shape
+    y_flat = jnp.concatenate([y_slots.reshape(E * C, d), jnp.zeros((1, d), y_slots.dtype)], axis=0)
+    idx = jnp.where(plan.combine_idx >= 0, plan.combine_idx, E * C)
+    gathered = y_flat[idx.reshape(-1)].reshape(T, k, d)
+    w = plan.combine_w.astype(y_slots.dtype)[..., None]
+    return (gathered * w).sum(axis=1)
+
+
+def load_balance_loss(probs: jnp.ndarray, top_e: jnp.ndarray) -> jnp.ndarray:
+    """Switch-transformer auxiliary loss: E * sum_e f_e * P_e."""
+    T, E = probs.shape
+    k = top_e.shape[-1]
+    sel = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    mean_p = probs.mean(axis=0)
+    return E * jnp.sum(sel * mean_p)
+
+
+def dense_moe_predication(
+    x: jnp.ndarray,
+    probs: jnp.ndarray,
+    expert_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    expert_params,
+) -> jnp.ndarray:
+    """Predication baseline (paper Fig. 3c right): every expert computes every
+    token; outputs are probability-masked and summed.  FLOPs scale with E —
+    the "not taken PEs left idle" pathology, visible directly in HLO_FLOPs.
+
+    expert_fn(params_e, x) -> y; expert_params has leading axis E.
+    """
+    y_all = jax.vmap(expert_fn, in_axes=(0, None))(expert_params, x)  # (E, T, d)
+    return jnp.einsum("etd,te->td", y_all.astype(jnp.float32), probs.astype(jnp.float32)).astype(x.dtype)
+
+
+def lookahead_pair(
+    h_source: jnp.ndarray,
+    w_router_next: jnp.ndarray,
+    top_k: int,
+    capacity: int,
+) -> Tuple[DispatchPlan, RouterAux]:
+    """Proactive configuration: compute layer l+1's plan from layer l's
+    intermediate hidden state (the Control Flow Sender's DFG-operator mode —
+    current and next PE are in the same BB so control can be sent early).
+
+    h_source: the *post-attention* hidden of layer l (pre-gate of Pre-gated
+    MoE [arXiv:2308.12066]); w_router_next: layer l+1's router weights.
+    """
+    return route_topk(h_source, w_router_next, top_k, capacity)

@@ -1,0 +1,72 @@
+"""Control-plane "configuration" tensors.
+
+In Marionette the control flow plane carries *instruction addresses* between
+PEs; the data plane executes whatever configuration those addresses select.
+The TPU analogue: small integer tensors that fully determine what the data
+plane does — which expert processes which token slot (DispatchPlan), which
+layers run on which pipeline stage (StagePlan).  They are deliberately tiny
+(int32 indices + f32 weights, KBs) next to the activations (GBs): the
+paper's 11.5%-area control network becomes a <1% byte-share control channel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class DispatchPlan(NamedTuple):
+    """Static-shape MoE dispatch configuration for one shard's T tokens.
+
+    dispatch_idx   (E, C) int32   token feeding each expert slot; T = padding
+    dispatch_valid (E, C) bool    slot occupied?
+    combine_idx    (T, k) int32   flat slot (e*C + c) per assignment; -1 = dropped
+    combine_w      (T, k) f32     router weight per assignment (0 if dropped)
+
+    The plan is a pure function of the router decision — it is the
+    "instruction address" stream.  ``dispatch``/``combine`` in
+    :mod:`repro.core.control_plane` consume it on the data plane.
+    """
+
+    dispatch_idx: jnp.ndarray
+    dispatch_valid: jnp.ndarray
+    combine_idx: jnp.ndarray
+    combine_w: jnp.ndarray
+
+    @property
+    def num_experts(self) -> int:
+        return self.dispatch_idx.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.dispatch_idx.shape[1]
+
+    def control_bytes(self) -> int:
+        """Bytes of control-plane state (the Table-6 analogue numerator)."""
+        return sum(int(x.size) * x.dtype.itemsize for x in self)
+
+
+class StagePlan(NamedTuple):
+    """Pipeline-stage configuration from Agile PE Assignment.
+
+    boundaries  tuple of (start, end) block index per stage (contiguous)
+    fold        per-stage time-extension factor (1 = fully spatial)
+    cost        per-stage steady-state cost (max = pipeline II)
+    """
+
+    boundaries: Tuple[Tuple[int, int], ...]
+    fold: Tuple[int, ...]
+    cost: Tuple[float, ...]
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.boundaries)
+
+    @property
+    def ii(self) -> float:
+        return max(self.cost) if self.cost else 0.0
+
+    @property
+    def waste(self) -> float:
+        """PE-waste analogue: total idle cost across stages per pipeline beat."""
+        return sum(self.ii - c for c in self.cost)

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical data-plane hot spots.
+
+Each kernel package has: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper; interpret=True on CPU), ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+
+  moe_dispatch     plan-driven token permute/combine (control-plane consumer;
+                   the CS-Benes permutation+broadcast analogue)
+  grouped_gemm     per-expert GEMM over dispatched slots (MXU-tiled)
+  flash_attention  blocked causal/local attention forward (online softmax)
+  rglru_scan       RG-LRU blocked linear recurrence (RecurrentGemma)
+  ssd_scan         Mamba-2 chunked state-space-dual scan
+"""
+
+
+def on_tpu() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: delegates to the model's blockwise online-softmax
+attention (the semantics source of truth shared with the LM stack)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import blockwise_attention
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, nq, hd)
+    k: jnp.ndarray,  # (B, Skv, nkv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    return blockwise_attention(q, k, v, causal=causal, local_window=window)

@@ -1,0 +1,1 @@
+from repro.kernels.grouped_gemm.ops import grouped_gemm, grouped_swiglu  # noqa: F401

@@ -1,0 +1,41 @@
+"""jit'd wrappers: grouped GEMM and the per-expert SwiGLU used as the MoE
+data-plane experts_fn (drop-in for repro.models.moe.local_experts_fn)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.grouped_gemm.kernel import grouped_gemm_pallas
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def grouped_gemm(
+    x: jnp.ndarray, w: jnp.ndarray, *, interpret: Optional[bool] = None, **tiles
+) -> jnp.ndarray:
+    return grouped_gemm_pallas(x, w, interpret=_resolve(interpret), **tiles)
+
+
+def grouped_swiglu(
+    x_slots: jnp.ndarray,  # (E, C, d)
+    w_gate: jnp.ndarray,   # (E, d, f)
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,   # (E, f, d)
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    it = _resolve(interpret)
+    g = grouped_gemm_pallas(x_slots, w_gate.astype(x_slots.dtype), interpret=it)
+    u = grouped_gemm_pallas(x_slots, w_up.astype(x_slots.dtype), interpret=it)
+    h = jax.nn.silu(g) * u
+    return grouped_gemm_pallas(h, w_down.astype(x_slots.dtype), interpret=it)
+
+
+def pallas_experts_fn(x_slots: jnp.ndarray, p) -> jnp.ndarray:
+    """experts_fn signature used by repro.models.moe.moe_ffn."""
+    return grouped_swiglu(x_slots, p["w_gate"], p["w_up"], p["w_down"])

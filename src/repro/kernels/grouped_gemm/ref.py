@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for grouped GEMM / grouped SwiGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(E, M, K) @ (E, K, N) -> (E, M, N)."""
+    return jnp.einsum("emk,ekn->emn", x, w)
+
+
+def grouped_swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(x.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(x.dtype))

@@ -1,0 +1,104 @@
+"""Pallas kernels: plan-driven token dispatch (gather into expert slots) and
+weighted combine (scatter-accumulate back to tokens).
+
+TPU adaptation of the control-plane permutation: the DispatchPlan's index
+tensors ride the scalar-prefetch path (SMEM — the control word channel),
+steering the BlockSpec index_maps so each grid step DMAs exactly one token
+row HBM->VMEM.  The data plane never inspects the control words; it only
+executes the pre-computed configuration — the Marionette decoupling, at the
+memory-system level.
+
+Layouts: token rows are (d,) with d a multiple of 128 in all assigned configs
+(lane-dim aligned); the row-per-step blocks are (1, d) — sublane-1 blocks are
+the canonical Pallas dynamic-gather tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# dispatch: slots[e, c] = x[idx[e, c]]
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_kernel(idx_ref, x_ref, out_ref):
+    # x block is already the gathered row (index_map reads the plan from SMEM)
+    out_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "capacity", "interpret"))
+def dispatch_pallas(
+    x_pad: jnp.ndarray,      # (T+1, d): token rows + zero pad row at index T
+    flat_idx: jnp.ndarray,   # (E*C,) int32 in [0, T]; T = padded/empty slot
+    *,
+    num_experts: int,
+    capacity: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    E, C = num_experts, capacity
+    d = x_pad.shape[-1]
+    out = pl.pallas_call(
+        _dispatch_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E * C,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E * C, d), x_pad.dtype),
+        interpret=interpret,
+    )(flat_idx, x_pad)
+    return out.reshape(E, C, d)
+
+
+# ---------------------------------------------------------------------------
+# combine: y[t] = sum_k w[t, k] * slots[cidx[t, k]]
+# ---------------------------------------------------------------------------
+
+
+def _combine_kernel(cidx_ref, w_ref, y_ref, out_ref, *, top_k: int):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[t * top_k + j]
+    out_ref[...] += (w * y_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "interpret"))
+def combine_pallas(
+    y_pad: jnp.ndarray,      # (E*C+1, d): slot rows + zero pad row
+    flat_cidx: jnp.ndarray,  # (T*k,) int32 in [0, E*C]; E*C = dropped
+    flat_w: jnp.ndarray,     # (T*k,) f32 (0 where dropped)
+    *,
+    top_k: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Tk = flat_cidx.shape[0]
+    T = Tk // top_k
+    d = y_pad.shape[-1]
+    kern = functools.partial(_combine_kernel, top_k=top_k)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T, top_k),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda t, j, cidx_ref, w_ref: (cidx_ref[t * top_k + j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda t, j, cidx_ref, w_ref: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=interpret,
+    )(flat_cidx, flat_w, y_pad)

@@ -1,0 +1,42 @@
+"""jit'd wrappers: DispatchPlan in, kernel invocations out.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.plans import DispatchPlan
+from repro.kernels import on_tpu
+from repro.kernels.moe_dispatch.kernel import combine_pallas, dispatch_pallas
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def dispatch(x: jnp.ndarray, plan: DispatchPlan, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Gather (T, d) tokens into (E, C, d) expert slots per the plan."""
+    T, d = x.shape
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    idx = jnp.where(plan.dispatch_valid, plan.dispatch_idx, T).reshape(-1).astype(jnp.int32)
+    return dispatch_pallas(
+        x_pad, idx,
+        num_experts=plan.num_experts, capacity=plan.capacity,
+        interpret=_resolve(interpret),
+    )
+
+
+def combine(y_slots: jnp.ndarray, plan: DispatchPlan, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Weighted scatter of (E, C, d) expert outputs back to (T, d) tokens."""
+    E, C, d = y_slots.shape
+    T, k = plan.combine_idx.shape
+    y_pad = jnp.concatenate(
+        [y_slots.reshape(E * C, d), jnp.zeros((1, d), y_slots.dtype)], axis=0
+    )
+    cidx = jnp.where(plan.combine_idx >= 0, plan.combine_idx, E * C).reshape(-1).astype(jnp.int32)
+    w = plan.combine_w.reshape(-1).astype(jnp.float32)
+    out = combine_pallas(y_pad, cidx, w, top_k=k, interpret=_resolve(interpret))
+    return out.astype(y_slots.dtype)

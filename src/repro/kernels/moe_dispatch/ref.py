@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the moe_dispatch kernels — delegates to the
+control-plane reference implementations (the semantics source of truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.control_plane import combine as _combine_ref
+from repro.core.control_plane import dispatch as _dispatch_ref
+from repro.core.plans import DispatchPlan
+
+
+def dispatch(x: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:
+    return _dispatch_ref(x, plan)
+
+
+def combine(y_slots: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:
+    return _combine_ref(y_slots, plan)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: the model's associative-scan linear recurrence."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.rglru import linear_scan
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    return linear_scan(a, b, h0=h0)

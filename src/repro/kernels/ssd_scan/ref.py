@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: the model's chunked SSD scan (layout-adapted)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan(
+    x: jnp.ndarray,    # (B, T, H, P)
+    dt: jnp.ndarray,   # (B, T, H)
+    a: jnp.ndarray,    # (H,) negative decay rates
+    bm: jnp.ndarray,   # (B, T, N)
+    cm: jnp.ndarray,   # (B, T, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return ssd_chunked(x, dt, a, bm, cm, chunk, h0=h0)

@@ -1,0 +1,7 @@
+"""Launchers: production mesh construction, step builders (train / prefill /
+serve), the multi-pod dry-run (lower + compile + roofline terms for every
+arch x shape x mesh), and the real train/serve drivers.
+
+NOTE: importing this package must NOT touch jax device state — meshes are
+built by functions only (dryrun.py sets XLA_FLAGS before any jax import).
+"""

@@ -1,0 +1,290 @@
+"""Dry-run artifact analysis: cost/memory extraction + HLO collective parsing
++ the three-term roofline.
+
+cost_analysis() has no collective accounting, so collective bytes are parsed
+from the optimized HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute contributes its result-buffer bytes, scaled
+by a ring-transfer factor to per-device wire bytes.  Collectives on small
+integer/fp32 tensors (dispatch plans, counts) are ALSO tallied separately as
+*control-plane bytes* — the framework analogue of the paper's Table 6 claim
+that a dedicated control network costs 11.5% of fabric area.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# -- TPU v5e-class hardware constants (per chip) ------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# control-plane heuristic: integer payloads, or tiny (<=256 KiB) fp payloads
+CONTROL_BYTES_LIMIT = 256 * 1024
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        members = [t for t in first.replace("{", "").split(",") if t.strip() != ""]
+        if members:
+            return len(members)
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict[str, Any]:
+    """Per-device collective byte accounting from optimized HLO."""
+    per_op: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "result_bytes": 0, "wire_bytes": 0} for op in _COLLECTIVES
+    }
+    control_bytes = 0.0
+    total_wire = 0.0
+
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        rhs = rhs.strip()
+        op = next(
+            (
+                c for c in _COLLECTIVES
+                if rhs.split("(")[0].strip().split(" ")[-1].startswith(c)
+                and not rhs.split("(")[0].strip().split(" ")[-1].startswith(c + "-done")
+            ),
+            None,
+        )
+        if op is None:
+            continue
+        head = rhs.split("(")[0]
+        if f"{op}-done" in head:
+            continue  # bytes counted at -start
+        # result shapes live between '=' and the op name
+        result_part = head
+        shapes = _SHAPE_RE.findall(result_part)
+        rbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if rbytes == 0:
+            continue
+        g = _group_size(stripped, n_devices)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2.0 * rbytes * ring        # reduce-scatter + all-gather phases
+        elif op == "collective-permute":
+            wire = float(rbytes)
+        else:
+            wire = rbytes * ring
+        per_op[op]["count"] += 1
+        per_op[op]["result_bytes"] += rbytes
+        per_op[op]["wire_bytes"] += wire
+        total_wire += wire
+        ints_only = all(dt.startswith(("s", "u", "pred")) for dt, _ in shapes)
+        if ints_only or rbytes <= CONTROL_BYTES_LIMIT:
+            control_bytes += wire
+
+    return {
+        "per_op": per_op,
+        "wire_bytes": total_wire,
+        "control_wire_bytes": control_bytes,
+        "control_share": control_bytes / total_wire if total_wire else 0.0,
+    }
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {k: float(v) for k, v in dict(cost).items() if isinstance(v, (int, float))}
+
+
+def extract_memory(compiled) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return out
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    if not out and mem is not None:
+        out["repr"] = 0.0
+    return out
+
+
+def analytic_memory_bytes(cfg, cell, n_model: int, n_data: int) -> Dict[str, float]:
+    """Per-device HBM traffic model for the TPU target (bytes / step).
+
+    cost_analysis' "bytes accessed" on the CPU backend counts every operand of
+    every unfused op (~100x the HBM traffic a fused TPU program sees), so the
+    memory roofline term uses this explicit model instead; the HLO number is
+    still reported alongside.  Assumptions (documented in EXPERIMENTS.md):
+
+    * weights: f32, sharded over `model`, replicated over `data`.
+      train: 3 reads (fwd, remat-recompute, bwd) + grad write/read + optimizer
+      read-modify-write  -> ~10x param bytes (adamw) / ~6x (adafactor).
+      prefill/decode: 1 read of every (active) weight.
+    * activations: residual stream replicated over `model`; projection
+      intermediates sharded.  Per layer ~6 residual-sized tensors + ~4
+      sharded FFN-width tensors materialize; x4 for train (fwd + recompute +
+      bwd read&write), x1 otherwise.
+    * decode reads the full KV cache (or recurrent state) per token — the
+      canonical decode memory wall.
+    * MoE: only top-k expert weights are touched per token on average, but
+      whole expert shards stream when every expert receives tokens; we charge
+      min(local expert bytes, token-driven traffic).
+    """
+    d = cfg.d_model
+    pf = 4  # param bytes (f32 master)
+    ab = 2 if cell.step != "train" or cfg.dtype == "bfloat16" else 2  # bf16 acts
+    B, S = cell.global_batch, cell.seq_len
+    # tokens per device: batch over data, sequence kept whole
+    B_loc = max(B // n_data, 1)
+    T_loc = B_loc * (S if cell.step in ("train", "prefill") else 1)
+
+    counts = cfg.param_counts()
+    total_param_b = cfg.num_params() * pf
+    active_param_b = cfg.num_active_params() * pf
+    pb_local = total_param_b / n_model
+    pb_active_local = active_param_b / n_model
+
+    if cell.step == "train":
+        opt_mult = 10.0 if cfg.optimizer == "adamw" else 6.0
+        weight_traffic = opt_mult * pb_local
+        act_mult = 4.0
+    else:
+        weight_traffic = pb_active_local
+        act_mult = 1.0
+
+    A_res = T_loc * d * ab
+    traffic = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in ("attn", "local", "moe"):
+            dff = (cfg.d_ff_expert or cfg.d_ff) if kind == "moe" else cfg.d_ff
+            width = dff * (cfg.top_k if kind == "moe" else 1)
+            layer = 6 * A_res + 4 * T_loc * (width / n_model if kind != "moe" else width) * ab
+            ctx = min(S, cfg.local_window or S)
+            if cell.step == "decode":
+                # full KV cache read per token
+                layer += B_loc * ctx * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * ab
+            else:
+                layer += T_loc * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * ab
+        elif kind == "rec":
+            layer = 6 * A_res + 6 * T_loc * (cfg.lru_width / n_model) * ab * 2  # f32 scan
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * d
+            layer = 4 * A_res + 8 * T_loc * (d_in / n_model) * ab
+            if cell.step == "decode":
+                layer += B_loc * (d_in // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim / n_model * 4 * 2
+        else:
+            layer = 6 * A_res
+        traffic += layer * act_mult
+
+    # embeddings + logits (vocab sharded over model when divisible)
+    v_shard = cfg.vocab_size / (n_model if cfg.vocab_size % n_model == 0 else 1)
+    traffic += T_loc * d * ab + act_mult * T_loc * v_shard * 4
+
+    return {
+        "weight_bytes": weight_traffic,
+        "activation_bytes": traffic,
+        "total_bytes": weight_traffic + traffic,
+    }
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training (fwd+bwd), 2*N_active*D for a
+    forward-only step (prefill processes D=B*S tokens; decode D=B tokens)."""
+    n = cfg.num_active_params()
+    if cell.step == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.step == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def roofline(
+    cost: Dict[str, float],
+    coll: Dict[str, Any],
+    cfg,
+    cell,
+    n_devices: int,
+    mesh_shape: Optional[Dict[str, int]] = None,
+) -> Dict[str, Any]:
+    """Three roofline terms in seconds (per-device, per-step).
+
+    cost_analysis() of the SPMD-partitioned executable reports PER-DEVICE
+    flops/bytes (the compiled module is the per-device program), so terms
+    divide by single-chip peaks.  memory_s uses the analytic HBM-traffic
+    model (see :func:`analytic_memory_bytes`); the raw CPU-backend HLO bytes
+    are reported as ``memory_s_hlo`` with their fusion caveat.
+    """
+    n_model = (mesh_shape or {}).get("model", 16)
+    n_data = 1
+    for a in ("pod", "data"):
+        n_data *= (mesh_shape or {"data": n_devices // n_model}).get(a, 1)
+
+    flops = cost.get("flops", 0.0)
+    bytes_hlo = cost.get("bytes accessed", 0.0)
+    mem_model = analytic_memory_bytes(cfg, cell, n_model, n_data)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_model["total_bytes"] / HBM_BW
+    collective_s = coll["wire_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell)
+    mf_per_dev = mf / n_devices
+    step_s = max(terms.values())
+    useful = mf_per_dev / flops if flops else 0.0
+    # achievable fraction of compute roofline given the dominant term
+    roofline_frac = (mf_per_dev / PEAK_FLOPS) / step_s if step_s else 0.0
+    return {
+        **terms,
+        "memory_s_hlo": bytes_hlo / HBM_BW,
+        "memory_bytes_model": mem_model,
+        "bottleneck": bottleneck,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_dev,
+        "hlo_flops_per_device": flops,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": roofline_frac,
+        "control_share_of_wire": coll.get("control_share", 0.0),
+    }

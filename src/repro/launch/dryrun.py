@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory / cost / collective analysis.
+
+MUST be run as its own process (the two lines above force 512 host devices
+before jax initializes — never set that globally).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --cell train_4k --out results/dryrun
+    python -m repro.launch.dryrun --arch qwen3-32b --cell train_4k --multi-pod ...
+    python -m repro.launch.dryrun --all --out results/dryrun            # sequential
+    python -m repro.launch.dryrun --list                                 # print cells
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def _twin_extrapolate(cfg, cell, mesh, n_dev, strategy="tp"):
+    """Exact per-layer costs via two small compiled twins.
+
+    HloCostAnalysis counts while-loop (lax.scan) bodies ONCE regardless of
+    trip count, so the full model's cost_analysis underreports by ~num_layers.
+    The twins unroll every inner scan (KV blocks, SSD chunks) and use scan
+    length 1 over one / two superblocks, making their compiled counts exact;
+    the full-depth cost is then c1 + (L/P - 1) * (c2 - c1).
+    """
+    import dataclasses
+
+    from repro.launch.analysis import extract_cost, parse_collectives
+    from repro.launch.steps import build_step
+
+    P = len(cfg.block_pattern)
+    twin1 = dataclasses.replace(cfg, num_layers=P, analysis_unroll=True)
+    twin2 = dataclasses.replace(
+        cfg, block_pattern=cfg.block_pattern * 2, num_layers=2 * P, analysis_unroll=True
+    )
+    out = []
+    for tw in (twin1, twin2):
+        with mesh:
+            compiled = build_step(tw, mesh, cell, strategy=strategy).lower().compile()
+        cost = extract_cost(compiled)
+        coll = parse_collectives(compiled.as_text(), n_dev)
+        out.append(
+            {
+                "flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes accessed", 0.0),
+                "transcendentals": cost.get("transcendentals", 0.0),
+                "wire_bytes": coll["wire_bytes"],
+                "control_wire_bytes": coll["control_wire_bytes"],
+            }
+        )
+    n_eff = cfg.num_layers / P
+    est = {
+        # clamp: per-layer deltas can be sub-noise at decode scale
+        k: max(out[0][k] + (n_eff - 1.0) * (out[1][k] - out[0][k]), 0.0)
+        for k in out[0]
+    }
+    est["twin1"] = out[0]
+    est["twin2"] = out[1]
+    est["superblocks_effective"] = n_eff
+    return est
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path, strategy: str = "tp",
+             capacity_factor: float = None) -> dict:
+    import jax
+
+    from repro.configs import SHAPE_CELLS, cells_for, get_config
+    from repro.launch.analysis import extract_cost, extract_memory, parse_collectives, roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    cell = SHAPE_CELLS[cell_name]
+    if cell not in cells_for(cfg):
+        return {
+            "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "long_500k needs sub-quadratic sequence mixing (full attention arch)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "cell": cell_name, "multi_pod": multi_pod, "strategy": strategy,
+        "mesh": dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        "step": cell.step, "status": "error",
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            bundle = build_step(cfg, mesh, cell, strategy=strategy)
+            lowered = bundle.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = extract_cost(compiled)
+        mem = extract_memory(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = parse_collectives(hlo, n_dev)
+
+        # twin extrapolation for exact per-step counts (single-pod roofline
+        # table only; the multi-pod pass proves the pod axis shards)
+        est = None
+        if not multi_pod:
+            try:
+                est = _twin_extrapolate(cfg, cell, mesh, n_dev, strategy=strategy)
+                cost_x = dict(cost, **{"flops": est["flops"], "bytes accessed": est["bytes"]})
+                coll_x = dict(
+                    coll,
+                    wire_bytes=est["wire_bytes"],
+                    control_wire_bytes=est["control_wire_bytes"],
+                    control_share=(
+                        est["control_wire_bytes"] / est["wire_bytes"]
+                        if est["wire_bytes"]
+                        else 0.0
+                    ),
+                )
+            except Exception as te:
+                est = {"error": f"{type(te).__name__}: {te}"}
+                cost_x, coll_x = cost, coll
+        else:
+            cost_x, coll_x = cost, coll
+        roof = roofline(cost_x, coll_x, cfg, cell, n_dev, mesh_shape=rec["mesh"])
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=n_dev,
+            cost=cost,
+            memory=mem,
+            collectives={
+                "wire_bytes": coll["wire_bytes"],
+                "control_wire_bytes": coll["control_wire_bytes"],
+                "control_share": coll["control_share"],
+                "per_op": {
+                    k: v for k, v in coll["per_op"].items() if v["count"]
+                },
+            },
+            roofline=roof,
+            twin_extrapolation=est,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # a dry-run failure is a bug in the system
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{cell_name}__{'pod2' if multi_pod else 'pod1'}"
+    if strategy != "tp":
+        tag += f"__{strategy}"
+    if capacity_factor is not None:
+        tag += f"__cf{capacity_factor}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="architecture id (see --list)")
+    ap.add_argument("--cell", help="shape cell (train_4k|prefill_32k|decode_32k|long_500k)")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh (512 chips)")
+    ap.add_argument("--all", action="store_true", help="run every (arch, cell) sequentially")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--strategy", default="tp", choices=("tp", "fsdp"))
+    ap.add_argument("--cf", type=float, default=None, help="MoE capacity_factor override")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import cells_for, get_config, list_archs
+
+    if args.list:
+        for a in list_archs():
+            cfg = get_config(a)
+            print(a, "->", ",".join(c.name for c in cells_for(cfg)))
+        return 0
+
+    out = Path(args.out)
+    if args.all:
+        ok = True
+        for a in list_archs():
+            for c in cells_for(get_config(a)):
+                for mp in (False, True):
+                    rec = run_cell(a, c.name, mp, out)
+                    print(
+                        f"{a:26s} {c.name:12s} {'pod2' if mp else 'pod1':5s} "
+                        f"{rec['status']:8s} {rec.get('error', '')}"
+                    )
+                    ok &= rec["status"] in ("ok", "skipped")
+        return 0 if ok else 1
+
+    rec = run_cell(args.arch, args.cell, args.multi_pod, out, strategy=args.strategy,
+                   capacity_factor=args.cf)
+    print(json.dumps({k: v for k, v in rec.items() if k not in ("traceback",)}, indent=2, default=float))
+    if rec["status"] == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Production training driver: the same step the dry-run compiles, wrapped in
+the fault-tolerant runtime.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --smoke --steps 50 --data 1 --model 1
+
+On a real pod, omit --smoke and pass --data/--model matching the slice; the
+trainer handles checkpoint/restart and straggler observation.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="checkpoints/train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import ShapeCell
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cell = ShapeCell("cli", seq_len=args.seq_len, global_batch=args.batch, step="train")
+    mesh = make_host_mesh(args.data, args.model)
+
+    def log(step, m):
+        print(f"step {step:6d}  loss {m['loss']:.4f}  {m['step_time_s']*1e3:.0f} ms")
+
+    tr = Trainer(
+        cfg, cell, mesh,
+        TrainerConfig(
+            num_steps=args.steps, checkpoint_every=args.checkpoint_every,
+            checkpoint_dir=args.ckpt, lr=args.lr, log_every=10,
+        ),
+        on_metrics=log,
+    )
+    out = tr.run()
+    print(f"finished: step {out['final_step']}, loss {out['final_loss']:.4f}, "
+          f"restarts {out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

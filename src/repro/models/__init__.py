@@ -1,0 +1,7 @@
+"""Model zoo: unified decoder-stack models for all assigned architectures.
+
+Entry point: :class:`repro.models.model.Model` — init / train forward /
+prefill / decode for dense, MoE, hybrid (RG-LRU), SSM (Mamba-2 SSD), VLM and
+audio-backbone configs.
+"""
+from repro.models.model import Model  # noqa: F401

@@ -1,0 +1,318 @@
+"""Shared layer math: norms, RoPE, GQA attention (full/local, train & decode),
+SwiGLU, embeddings.  Pure-functional: params are pytrees of jnp arrays.
+
+Attention uses a blockwise (flash-style) lax.scan over KV chunks by default so
+that 32k-token prefill never materializes an S x S score matrix — required for
+the compile-time memory analysis to be meaningful, and it is the jnp oracle
+for the Pallas flash kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Fan-in scaled normal init; out_shape may be a tuple (multi-head)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, *out_shape)) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype)  # (1 + scale) parameterization
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, (nq, hd), dtype=dtype),
+        "wk": dense_init(ks[1], d, (nkv, hd), dtype=dtype),
+        "wv": dense_init(ks[2], d, (nkv, hd), dtype=dtype),
+        "wo": dense_init(ks[3], nq * hd, d, scale=1.0 / math.sqrt(nq * hd * 2 * cfg.num_layers), dtype=dtype).reshape(nq, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    return p
+
+
+def _qkv(x: jnp.ndarray, p: Params, cfg: ModelConfig, positions: jnp.ndarray):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # (B, Sq, nq, hd)
+    k: jnp.ndarray,  # (B, Skv, nkv, hd)
+    v: jnp.ndarray,  # (B, Skv, nkv, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    local_window: int = 0,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # (B,) valid kv prefix length
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention via lax.scan over KV blocks.
+
+    Never materializes (Sq, Skv) scores for more than one KV block — the
+    memory-bounded jnp path used for 32k prefill and the oracle for the
+    Pallas kernel.  GQA: nq must be a multiple of nkv.
+
+    ``unroll=True`` replaces the scan with a python loop (analysis twins:
+    exact compiled cost counts).
+
+    GQA layout (perf iteration H-B1, EXPERIMENTS.md §Perf): KV heads are
+    REPEATED to nq up front and all einsums stay 4-D with a single head axis.
+    The grouped 5-D layout (B, S, nkv, g, hd) cannot be sharded on a 16-way
+    model axis when nkv and g are both < 16 (qwen3: 8x8), which made GSPMD
+    fall back to "involuntary full rematerialization" — f32 replicate+reshard
+    copies that dominated the wire.  With one nq-sized head axis the
+    activations shard cleanly end-to-end.
+    """
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    groups = nq // nkv
+    if groups > 1:
+        # KV-head expansion as a matmul against a constant one-hot (NOT
+        # jnp.repeat): repeat's transpose is a reshape+reduce over the group
+        # axis, which GSPMD lowers to an all-gather of the FULL dk/dv
+        # (~2 GB f32 per layer at qwen3 scale); the einsum transpose is a
+        # contraction whose sharded partial sums reduce locally (H-B5).
+        expand = (
+            jnp.arange(nq)[None, :] // groups == jnp.arange(nkv)[:, None]
+        ).astype(k.dtype)  # (nkv, nq) one-hot
+        k = jnp.einsum("btkh,kn->btnh", k, expand)
+        v = jnp.einsum("btkh,kn->btnh", v, expand)
+    scale = 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, Skv)
+    n_blocks = -(-Skv // block_kv)
+    pad = n_blocks * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (n_blocks, B, block, nq, hd)
+    kb = k.reshape(B, n_blocks, block_kv, nq, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block_kv, nq, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        m, l, acc, blk_idx = carry
+        kblk, vblk = blk
+        kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bsnh,btnh->bnst", q.astype(jnp.float32), kblk.astype(jnp.float32)) * scale
+        mask = jnp.ones((Sq, block_kv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if local_window:
+            mask &= q_pos[:, None] - kv_pos[None, :] < local_window
+        mask &= (kv_pos < Skv)[None, :]
+        if kv_valid_len is not None:
+            bmask = kv_pos[None, :] < kv_valid_len[:, None]  # (B, block)
+            s = jnp.where(bmask[:, None, None, :], s, NEG_INF)
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bnst,btnh->bnsh", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, blk_idx + 1), None
+
+    m0 = jnp.full((B, nq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, nq, Sq, hd), jnp.float32)
+    if unroll:
+        carry = (m0, l0, acc0, jnp.int32(0))
+        for i in range(n_blocks):
+            carry, _ = step(carry, (kb[i], vb[i]))
+        m, l, acc, _ = carry
+    else:
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)  # (B, nq, Sq, hd) -> (B, Sq, nq, hd)
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    x: jnp.ndarray,
+    p: Params,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    local_window: int = 0,
+    block_kv: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full attention sub-block for train/prefill (Sq >= 1, causal).
+
+    If ``cache`` is given (prefill), K/V are written at offset 0 and the
+    updated cache is returned; decode uses :func:`decode_attention`.
+    """
+    q, k, v = _qkv(x, p, cfg, positions)
+    new_cache = None
+    if cache is not None:  # prefill: write the whole prefix
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        new_cache = {"k": ck, "v": cv}
+    out = blockwise_attention(
+        q, k, v, causal=True, local_window=local_window, block_kv=block_kv,
+        unroll=cfg.analysis_unroll,
+    )
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
+    return y, new_cache
+
+
+def decode_attention(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: Params,
+    cfg: ModelConfig,
+    cache: Dict[str, jnp.ndarray],
+    cache_index: jnp.ndarray,  # scalar int32: current length (write position)
+    *,
+    local_window: int = 0,
+    block_kv: int = 1024,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode with KV cache; window masking for local attention."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_index, jnp.int32)
+    q, k, v = _qkv(x, p, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+    S_max = ck.shape[1]
+    kv_pos = jnp.arange(S_max)
+    valid = kv_pos <= cache_index
+    if local_window:
+        valid &= kv_pos > cache_index - local_window
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.resolved_head_dim)
+    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(x.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d: int, d_ff: int, num_layers: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[2], d_ff, d, scale=1.0 / math.sqrt(d_ff * 2 * num_layers), dtype=dtype),
+    }
+
+
+def swiglu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(x.dtype))
+
+
+def swiglu_tokens(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """SwiGLU on a flat token axis (used per expert)."""
+    g = x @ w_gate.astype(x.dtype)
+    u = x @ w_up.astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ w_down.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray, dtype) -> jnp.ndarray:
+    return table.astype(dtype)[tokens]
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Logits in f32 (softmax-precision-sensitive)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), table.astype(jnp.float32))

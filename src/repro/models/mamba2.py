@@ -1,0 +1,206 @@
+"""Mamba-2 SSD block (state-space duality [arXiv:2405.21060]).
+
+Per head h with state size N and head dim P:
+
+    h_t = exp(dt_t * a_h) * h_{t-1} + dt_t * B_t (x) x_t      (N x P state)
+    y_t = C_t^T h_t + D_h * x_t
+
+Train/prefill uses the *chunked* SSD algorithm: intra-chunk attention-like
+matmuls (the "dual" quadratic form, O(Q^2) only within a chunk) + an
+inter-chunk recurrence over chunk states, carried by lax.scan so memory stays
+O(B*H*Q^2) per step.  This is the jnp oracle for the Pallas ``ssd_scan``
+kernel.  Decode carries (conv tail, state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def init_ssm_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    d_in, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    conv_ch = d_in + 2 * N
+    return {
+        "w_in": dense_init(ks[0], d, proj_out, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv1d_width, conv_ch)) / math.sqrt(cfg.conv1d_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), jnp.float32),
+        "w_out": dense_init(ks[2], d_in, d, scale=1.0 / math.sqrt(d_in * 2 * cfg.num_layers), dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    d_in, H, P, N = dims(cfg)
+    z, xs, Bm, Cm, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_chunked(
+    x: jnp.ndarray,   # (B, T, H, P)
+    dt: jnp.ndarray,  # (B, T, H) post-softplus
+    a: jnp.ndarray,   # (H,) negative
+    Bm: jnp.ndarray,  # (B, T, N)
+    Cm: jnp.ndarray,  # (B, T, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (B,T,H,P), final state (B,H,N,P)).  f32.
+
+    ``unroll=True`` replaces the chunk scan with a python loop (analysis
+    twins: exact compiled cost counts)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    nc = -(-T // Q)
+    pad = nc * Q - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    l = dtc * a  # (B, nc, Q, H), <= 0
+    cum = jnp.cumsum(l, axis=2)  # inclusive
+
+    h_init = jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def chunk_step(h_prev, inp):
+        xq, dtq, bq, cq, cumq = inp  # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N) (B,Q,H)
+        # intra-chunk quadratic ("dual") form
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)  # (B, Q, Q)
+        decay = jnp.exp(cumq[:, :, None, :] - cumq[:, None, :, :])  # (B, Qi, Qj, H)
+        ii, jj = jnp.mgrid[0:Q, 0:Q]
+        causal = (ii >= jj)[None, :, :, None]
+        scores = cb[..., None] * jnp.where(causal, decay, 0.0) * dtq[:, None, :, :]  # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xq)
+        # contribution of carried-in state
+        state_decay = jnp.exp(cumq)  # (B, Q, H)
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", cq, state_decay, h_prev)
+        # chunk state update
+        last = cumq[:, -1:, :]  # (B,1,H)
+        w = jnp.exp(last - cumq) * dtq  # (B,Q,H)
+        s_chunk = jnp.einsum("bjn,bjh,bjhp->bhnp", bq, w, xq)
+        h_new = jnp.exp(last[:, 0, :])[:, :, None, None] * h_prev + s_chunk
+        return h_new, y_intra + y_inter
+
+    xs_seq = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    if unroll:
+        h, ys_list = h_init, []
+        for i in range(nc):
+            h, y_i = chunk_step(h, tuple(x[i] for x in xs_seq))
+            ys_list.append(y_i)
+        h_final, ys = h, jnp.stack(ys_list)
+    else:
+        h_final, ys = jax.lax.scan(chunk_step, h_init, xs_seq)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nc * Q, H, P)[:, :T]
+    return y, h_final
+
+
+def ssm_block(
+    x: jnp.ndarray,  # (B, T, d)
+    p: Params,
+    cfg: ModelConfig,
+    h0: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Train (return_state=False) / prefill (True) path."""
+    d_in, H, P, N = dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"].astype(x.dtype))
+    z, xs, Bm, Cm, dt_raw = _split_proj(zxbcdt, cfg)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    K = p["conv_w"].shape[0]
+    padded = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = jnp.zeros_like(xbc)
+    for i in range(K):
+        conv = conv + padded[:, i : i + xbc.shape[1], :] * p["conv_w"][i].astype(xbc.dtype)
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    y, h_final = ssd_chunked(
+        xh, dt, a, Bm, Cm, cfg.ssm_chunk, h0=h0, unroll=cfg.analysis_unroll
+    )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        # conv state holds PRE-activation inputs (the raw projection tail)
+        _, raw_x, raw_B, raw_C, _ = _split_proj(zxbcdt, cfg)
+        raw_tail = jnp.concatenate([raw_x, raw_B, raw_C], axis=-1)[:, -(K - 1):, :]
+        return out, {"h": h_final, "conv": raw_tail}
+    return out
+
+
+def init_ssm_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d_in, H, P, N = dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, d_in + 2 * N), dtype),
+    }
+
+
+def ssm_block_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: Params,
+    cfg: ModelConfig,
+    state: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    d_in, H, P, N = dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"].astype(x.dtype))[:, 0]
+    z, xs, Bm, Cm, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B, conv_ch)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B, K, ch)
+    conv = (window * p["conv_w"].astype(xbc.dtype)[None]).sum(axis=1) + p["conv_b"].astype(xbc.dtype)
+    xbc_act = jax.nn.silu(conv)
+    xs_c, Bm_c, Cm_c = jnp.split(xbc_act, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B, H)
+    xh = xs_c.reshape(-1, H, P).astype(jnp.float32)
+    h = decay[:, :, None, None] * state["h"] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm_c.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm_c.astype(jnp.float32), h) + p["D"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, p["w_out"].astype(x.dtype))
+    return out[:, None], {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,235 @@
+"""Unified Model facade: init / train loss / prefill / decode for every
+assigned architecture, with scan-over-superblocks and injectable MoE apply
+(so the distributed runtime can substitute sharded expert parallelism).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        moe_apply: Optional[T.MoeApply] = None,
+        constrain: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    ):
+        self.cfg = cfg
+        self.moe_apply = moe_apply or T._default_moe_apply(cfg)
+        # Residual-stream sharding constraint injected by the distributed
+        # runtime (launch.steps): pins the post-embedding activations to
+        # (batch-sharded, replicated-over-model).  Without it, a d-sharded
+        # embedding table propagates a d-sharded residual through the
+        # optimization barriers and every projection all-gathers its input
+        # (perf iteration B-6, EXPERIMENTS.md §Perf).
+        self.constrain = constrain or (lambda x: x)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        return T.init_params(key, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return T.init_cache(self.cfg, batch, max_len)
+
+    # ------------------------------------------------------------------
+    # embedding / stack plumbing
+    # ------------------------------------------------------------------
+    def _embed(self, params: Params, tokens: jnp.ndarray, frontend: Optional[jnp.ndarray]):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed(tokens, params["embed"], dtype)
+        if cfg.frontend and frontend is not None:
+            F = frontend.shape[1]
+            fx = jnp.einsum("bfe,ed->bfd", frontend.astype(dtype), params["frontend"]["proj"].astype(dtype))
+            x = jnp.concatenate([fx, x[:, F:]], axis=1)
+        return self.constrain(x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(dtype))
+
+    def _pattern(self) -> Tuple[Tuple[str, ...], int, int]:
+        pat = self.cfg.block_pattern
+        n_sb, n_rest = divmod(self.cfg.num_layers, len(pat))
+        return pat, n_sb, n_rest
+
+    # ------------------------------------------------------------------
+    # train forward
+    # ------------------------------------------------------------------
+    def stack_train(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray):
+        cfg = self.cfg
+        pat, n_sb, n_rest = self._pattern()
+        route_src = x  # layer-0 control-plane source = embeddings
+
+        def sb_fn(carry, p_sb):
+            h, rs = carry
+            aux = jnp.zeros((2,), jnp.float32)
+            for j, kind in enumerate(pat):
+                h, rs, a = T.apply_layer_train(h, rs, p_sb[f"b{j}"], kind, cfg, positions, self.moe_apply)
+                aux = aux + a
+            return (h, rs), aux
+
+        f = jax.checkpoint(sb_fn) if cfg.remat else sb_fn
+        aux_total = jnp.zeros((2,), jnp.float32)
+        if n_sb:
+            (x, route_src), auxs = jax.lax.scan(f, (x, route_src), params["blocks"]["scan"])
+            aux_total = aux_total + auxs.sum(axis=0)
+        kinds = cfg.layer_kinds
+        for j, p in enumerate(params["blocks"]["rest"]):
+            kind = kinds[n_sb * len(pat) + j]
+            x, route_src, a = T.apply_layer_train(x, route_src, p, kind, cfg, positions, self.moe_apply)
+            aux_total = aux_total + a
+        return x, aux_total
+
+    def logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        x = L.rms_norm(x, params["final_norm"])
+        table = params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+        return L.unembed(x, table)
+
+    def forward_train(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, S)
+        frontend: Optional[jnp.ndarray] = None,  # (B, F, fd)
+        *,
+        lb_coef: float = 0.01,
+        z_coef: float = 1e-4,
+    ):
+        """Next-token cross-entropy over the backbone; frontend positions masked."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens, frontend)
+        x, aux = self.stack_train(params, x, positions)
+        logits = self.logits(params, x)  # (B, S, V) f32
+
+        targets = tokens[:, 1:]
+        lse = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+        tgt_logit = jnp.take_along_axis(logits[:, :-1], targets[..., None], axis=-1)[..., 0]
+        nll = lse - tgt_logit  # (B, S-1)
+        F = cfg.frontend_tokens if cfg.frontend else 0
+        mask = (jnp.arange(S - 1) >= F).astype(jnp.float32)[None, :]
+        denom = jnp.maximum(mask.sum() * B, 1.0)
+        ce = (nll * mask).sum() / denom
+        n_moe = max(sum(1 for k in cfg.layer_kinds if k == "moe"), 1)
+        loss = ce + lb_coef * aux[0] / n_moe + z_coef * aux[1] / n_moe
+        metrics = {"loss": loss, "ce": ce, "lb_loss": aux[0] / n_moe, "z_loss": aux[1] / n_moe}
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, S)
+        cache: Params,
+        frontend: Optional[jnp.ndarray] = None,
+    ):
+        """Fill the cache with the prompt; return (last-position logits, cache)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens, frontend)
+        pat, n_sb, n_rest = self._pattern()
+        route_src = x
+
+        def sb_fn(carry, xs):
+            h, rs = carry
+            p_sb, c_sb = xs
+            aux = jnp.zeros((2,), jnp.float32)
+            new_c = {}
+            for j, kind in enumerate(pat):
+                h, rs, nc, a = T.apply_layer_prefill(
+                    h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg, positions, self.moe_apply
+                )
+                new_c[f"b{j}"] = nc
+                aux = aux + a
+            return (h, rs), new_c
+
+        new_cache: Params = {"scan": {}, "rest": []}
+        if n_sb:
+            (x, route_src), new_scan = jax.lax.scan(
+                sb_fn, (x, route_src), (params["blocks"]["scan"], cache["scan"])
+            )
+            new_cache["scan"] = new_scan
+        kinds = cfg.layer_kinds
+        for j, (p, c) in enumerate(zip(params["blocks"]["rest"], cache["rest"])):
+            kind = kinds[n_sb * len(pat) + j]
+            x, route_src, nc, _ = T.apply_layer_prefill(x, route_src, p, c, kind, cfg, positions, self.moe_apply)
+            new_cache["rest"].append(nc)
+        last = self.logits(params, x[:, -1:, :])[:, 0]  # (B, V)
+        return last, new_cache
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_step(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,  # (B,) int32 — last generated token
+        cache_index: jnp.ndarray,  # scalar int32 — number of tokens already in cache
+    ):
+        """One serve step: logits for the next token + updated cache."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = L.embed(tokens[:, None], params["embed"], jnp.dtype(cfg.dtype))
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        pat, n_sb, n_rest = self._pattern()
+        route_src = x
+
+        def sb_fn(carry, xs):
+            h, rs = carry
+            p_sb, c_sb = xs
+            new_c = {}
+            for j, kind in enumerate(pat):
+                h, rs, nc, _ = T.apply_layer_decode(
+                    h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg, cache_index, self.moe_apply
+                )
+                new_c[f"b{j}"] = nc
+            return (h, rs), new_c
+
+        new_cache: Params = {"scan": {}, "rest": []}
+        if n_sb:
+            (x, route_src), new_scan = jax.lax.scan(
+                sb_fn, (x, route_src), (params["blocks"]["scan"], cache["scan"])
+            )
+            new_cache["scan"] = new_scan
+        kinds = cfg.layer_kinds
+        for j, (p, c) in enumerate(zip(params["blocks"]["rest"], cache["rest"])):
+            kind = kinds[n_sb * len(pat) + j]
+            x, route_src, nc, _ = T.apply_layer_decode(x, route_src, p, c, kind, cfg, cache_index, self.moe_apply)
+            new_cache["rest"].append(nc)
+        logits = self.logits(params, x)[:, 0]  # (B, V)
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {}
+    if cell.step in ("train", "prefill"):
+        specs["tokens"] = sds((B, S), jnp.int32)
+        if cfg.frontend:
+            specs["frontend"] = sds((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = sds((B,), jnp.int32)
+        specs["cache_index"] = sds((), jnp.int32)
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+        specs["cache"] = cache
+    return specs

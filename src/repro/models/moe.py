@@ -1,0 +1,156 @@
+"""MoE FFN with control-flow-plane routing (paper: Branch Divergence).
+
+Three execution strategies map to the paper's taxonomy:
+
+* ``dense``     — predication (von Neumann baseline): all experts run on all
+                  tokens, probability-masked combine.  FLOPs x E.
+* ``sync``      — switch-configuration (coupled baseline): router runs inline,
+                  plan computed on the data-plane critical path.
+* ``lookahead`` — Marionette: the plan arrives as an *input* (computed by the
+                  control plane one stage early); this module only executes
+                  dispatch -> expert GEMM -> combine on the data plane.
+
+``experts_fn`` is injectable so the distributed runtime can substitute the
+all-to-all sharded implementation (:mod:`repro.parallel.moe_parallel`) or the
+Pallas grouped-GEMM kernel without touching the routing semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.control_plane import (
+    RouterAux,
+    capacity_for,
+    combine,
+    dense_moe_predication,
+    dispatch,
+    route_topk,
+)
+from repro.core.plans import DispatchPlan
+from repro.models.layers import dense_init, swiglu_tokens
+
+Params = Dict[str, Any]
+
+# experts_fn(x_slots (E, C, d), expert_params) -> y_slots (E, C, d)
+ExpertsFn = Callable[[jnp.ndarray, Params], jnp.ndarray]
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    dff = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    down_scale = 1.0 / math.sqrt(dff * 2 * cfg.num_layers)
+    p: Params = {
+        "router": dense_init(ks[0], d, E, scale=0.02, dtype=jnp.float32),  # control plane: f32
+        "w_gate": (jax.random.normal(ks[1], (E, d, dff)) / math.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, dff)) / math.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, dff, d)) * down_scale).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        sh = cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kg, (d, sh * dff)) / math.sqrt(d)).astype(dtype),
+            "w_up": (jax.random.normal(ku, (d, sh * dff)) / math.sqrt(d)).astype(dtype),
+            "w_down": (jax.random.normal(kd, (sh * dff, d)) * down_scale).astype(dtype),
+        }
+    return p
+
+
+def local_experts_fn(x_slots: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """Default data-plane expert compute: batched per-expert SwiGLU GEMMs."""
+    g = jnp.einsum("ecd,edf->ecf", x_slots, p["w_gate"].astype(x_slots.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_slots, p["w_up"].astype(x_slots.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(x_slots.dtype))
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (B, S, d)
+    p: Params,
+    cfg: ModelConfig,
+    *,
+    plan: Optional[DispatchPlan] = None,
+    experts_fn: ExpertsFn = local_experts_fn,
+    capacity: Optional[int] = None,
+) -> Tuple[jnp.ndarray, RouterAux]:
+    """Apply the MoE FFN.  If ``plan`` is provided (lookahead mode) the router
+    is NOT run here — the control plane already produced the configuration.
+    """
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    T = B * S
+
+    if cfg.route_mode == "dense" and plan is None:
+        logits = jnp.asarray(xf, jnp.float32) @ p["router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        # mask to top-k then dense predication over all experts
+        mask = jnp.zeros_like(probs).at[jnp.arange(T)[:, None], top_e].set(top_w)
+
+        def one_expert(pe, xt):
+            return swiglu_tokens(xt, pe["w_gate"], pe["w_up"], pe["w_down"])
+
+        expert_params = {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+        y = dense_moe_predication(xf, mask, one_expert, expert_params)
+        aux = RouterAux(
+            load_balance_loss=jnp.float32(0.0),
+            router_z_loss=jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+            fraction_dropped=jnp.float32(0.0),
+        )
+    else:
+        if plan is None:  # sync mode: route inline (coupled control flow)
+            C = capacity if capacity is not None else capacity_for(T, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+            plan, aux = route_topk(xf, p["router"], cfg.top_k, C)
+        else:
+            aux = RouterAux(jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+        x_slots = dispatch(xf, plan)  # (E, C, d)
+        y_slots = experts_fn(x_slots, p)
+        y = combine(y_slots, plan).astype(x.dtype)
+
+    if "shared" in p:
+        sh = p["shared"]
+        g = xf @ sh["w_gate"].astype(xf.dtype)
+        u = xf @ sh["w_up"].astype(xf.dtype)
+        y = y + (jax.nn.silu(g) * u) @ sh["w_down"].astype(xf.dtype)
+    return y.reshape(B, S, d), aux
+
+
+def router_logits(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """Control-plane helper: raw router logits for (..., d) hidden states."""
+    return jnp.asarray(x, jnp.float32) @ p["router"]
+
+
+def moe_layer(
+    x_ffn: jnp.ndarray,  # (B, S, d) normalized FFN input (data plane)
+    route_src: Optional[jnp.ndarray],  # (B, S, d) control-plane routing source
+    p: Params,
+    cfg: ModelConfig,
+    *,
+    experts_fn: ExpertsFn = local_experts_fn,
+    capacity: Optional[int] = None,
+) -> Tuple[jnp.ndarray, RouterAux]:
+    """Mode-dispatching MoE layer.
+
+    lookahead: the plan is computed from ``route_src`` (the previous layer's
+    residual stream — available before this layer's attention finishes), so
+    the control plane (router matmul + sort + plan build) is independent of
+    the current layer's data plane and overlaps with it.  sync: the plan is
+    computed from ``x_ffn`` itself — serialized (coupled) control flow.
+    dense: predication baseline.
+    """
+    B, S, d = x_ffn.shape
+    T = B * S
+    if cfg.route_mode == "dense":
+        return moe_ffn(x_ffn, p, cfg)
+    C = capacity if capacity is not None else capacity_for(T, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+    src = x_ffn if (cfg.route_mode == "sync" or route_src is None) else route_src
+    plan, aux = route_topk(src.reshape(T, d), p["router"], cfg.top_k, C)
+    y, _ = moe_ffn(x_ffn, p, cfg, plan=plan, experts_fn=experts_fn)
+    return y, aux

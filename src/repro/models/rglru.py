@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Block:  y = W_out( RG-LRU(conv1d(W_x x)) * gelu(W_gate x) )
+
+RG-LRU (per channel, diagonal gates — the block-diagonal projections of the
+release are simplified to diagonal; noted in DESIGN.md):
+
+    r_t = sigmoid(alpha_r * u_t + b_r)            recurrence gate
+    i_t = sigmoid(alpha_i * u_t + b_i)            input gate
+    log a_t = -c * softplus(lam) * r_t            c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill runs a parallel associative scan (the jnp oracle for the Pallas
+``rglru_scan`` kernel); decode is a single fused step carrying (h, conv tail).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's gate sharpness constant
+
+
+def init_rec_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype=dtype),
+        "w_gate": dense_init(ks[1], d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, w)) / math.sqrt(cfg.conv1d_width)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "alpha_r": jnp.ones((w,), jnp.float32),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "alpha_i": jnp.ones((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # lam init so that a^c in [0.9, 0.999] at r=1 (Griffin's init range)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": dense_init(ks[3], w, d, scale=1.0 / math.sqrt(w * 2 * cfg.num_layers), dtype=dtype),
+    }
+
+
+def causal_conv1d(u: jnp.ndarray, conv_w: jnp.ndarray, conv_b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along time.  u: (B, T, W); conv_w: (K, W)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(K):  # K is tiny (4): unrolled taps fuse well
+        out = out + pad[:, i : i + u.shape[1], :] * conv_w[i].astype(u.dtype)
+    return out + conv_b.astype(u.dtype)
+
+
+def rg_lru_gates(u: jnp.ndarray, p: Params) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (a_t, gated input) in f32.  u: (..., W)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["alpha_r"] + p["b_r"])
+    i = jax.nn.sigmoid(uf * p["alpha_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 via associative scan (f32).
+
+    a, b: (B, T, W).  Returns all h_t (B, T, W).  The jnp oracle for the
+    Pallas blocked-scan kernel.
+    """
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rec_block(
+    x: jnp.ndarray,  # (B, T, d)
+    p: Params,
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Train/prefill path."""
+    u = jnp.einsum("btd,dw->btw", x, p["w_x"].astype(x.dtype))
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = rg_lru_gates(u, p)
+    h = linear_scan(a, b).astype(x.dtype)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"].astype(x.dtype)))
+    return jnp.einsum("btw,wd->btd", h * gate, p["w_out"].astype(x.dtype))
+
+
+def init_rec_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rec_block_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: Params,
+    cfg: ModelConfig,
+    state: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single decode step carrying (h, conv tail)."""
+    u = jnp.einsum("btd,dw->btw", x, p["w_x"].astype(x.dtype))[:, 0]  # (B, W)
+    window = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, W)
+    K = p["conv_w"].shape[0]
+    u_conv = (window * p["conv_w"].astype(u.dtype)[None]).sum(axis=1) + p["conv_b"].astype(u.dtype)
+    a, b = rg_lru_gates(u_conv, p)
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"].astype(x.dtype))[:, 0])
+    y = jnp.einsum("bw,wd->bd", h.astype(x.dtype) * gate, p["w_out"].astype(x.dtype))
+    return y[:, None], {"h": h, "conv": window[:, 1:]}
+
+
+def rec_block_prefill(
+    x: jnp.ndarray, p: Params, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill: run the train path and also return the final recurrent state."""
+    u = jnp.einsum("btd,dw->btw", x, p["w_x"].astype(x.dtype))
+    u_conv = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = rg_lru_gates(u_conv, p)
+    h_all = linear_scan(a, b)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"].astype(x.dtype)))
+    y = jnp.einsum("btw,wd->btd", h_all.astype(x.dtype) * gate, p["w_out"].astype(x.dtype))
+    K = p["conv_w"].shape[0]
+    state = {"h": h_all[:, -1].astype(jnp.float32), "conv": u[:, -(K - 1):, :]}
+    return y, state

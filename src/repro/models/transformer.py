@@ -1,0 +1,312 @@
+"""Unified decoder stack for all assigned architectures.
+
+Layer stacks are organised as *super-blocks* (one cycle of
+``cfg.block_pattern``), scanned with ``jax.lax.scan`` so 94-layer models
+compile one super-block regardless of depth; a remainder (pattern-incomplete
+tail) is unrolled.
+
+Control-flow plane integration: for MoE configs in ``lookahead`` mode the
+scan carry is ``(x, route_src)`` — ``route_src`` is the previous layer's
+residual stream, from which the *current* layer's dispatch plan is computed
+at the top of the iteration, concurrently with the attention data plane
+(Proactive PE Configuration).  ``moe_apply`` is injectable so the
+distributed runtime can substitute the shard_map expert-parallel
+implementation without touching stack logic.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe, rglru
+
+Params = Dict[str, Any]
+
+# moe_apply(x_ffn, route_src, params) -> (y, aux_losses (2,))
+MoeApply = Callable[[jnp.ndarray, Optional[jnp.ndarray], Params], Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def _res(x: jnp.ndarray) -> jnp.ndarray:
+    """Residual-stream barrier (perf iteration B-3, EXPERIMENTS.md §Perf).
+
+    The next rms_norm upcasts the residual to f32; without a barrier XLA
+    hoists that convert ABOVE the tensor-parallel all-reduce feeding the
+    residual, doubling the wire bytes (f32 instead of bf16 collectives).
+    optimization_barrier pins the convert below the all-reduce."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _default_moe_apply(cfg: ModelConfig) -> MoeApply:
+    def apply(x_ffn, route_src, p):
+        y, aux = moe.moe_layer(x_ffn, route_src, p, cfg)
+        return y, jnp.stack([aux.load_balance_loss, aux.router_z_loss])
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"ln1": L.init_rms_norm(d, jnp.float32), "ln2": L.init_rms_norm(d, jnp.float32)}
+    if kind in ("attn", "local"):
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+        p["ffn"] = L.init_swiglu(k2, d, cfg.d_ff, cfg.num_layers, dtype)
+    elif kind == "moe":
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+        p["moe"] = moe.init_moe(k2, cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru.init_rec_block(k1, cfg, dtype)
+        p["ffn"] = L.init_swiglu(k2, d, cfg.d_ff, cfg.num_layers, dtype)
+    elif kind == "ssm":
+        p["ssm"] = mamba2.init_ssm_block(k1, cfg, dtype)
+        del p["ln2"]  # mamba blocks have a single pre-norm
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    kinds = cfg.layer_kinds
+    pat = cfg.block_pattern
+    n_sb, n_rest = divmod(cfg.num_layers, len(pat))
+    keys = jax.random.split(key, cfg.num_layers + 3)
+
+    def init_superblock(sb_key) -> Params:
+        sub = jax.random.split(sb_key, len(pat))
+        return {f"b{j}": init_layer(sub[j], pat[j], cfg, dtype) for j in range(len(pat))}
+
+    sb_params = [init_superblock(keys[i]) for i in range(n_sb)]
+    scan_params = jax.tree.map(lambda *xs: jnp.stack(xs), *sb_params) if n_sb > 1 else (
+        jax.tree.map(lambda x: x[None], sb_params[0]) if n_sb == 1 else {}
+    )
+    rest_params = [init_layer(keys[n_sb + j], kinds[n_sb * len(pat) + j], cfg, dtype) for j in range(n_rest)]
+
+    params: Params = {
+        "embed": L.init_embedding(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": {"scan": scan_params, "rest": rest_params},
+        "final_norm": L.init_rms_norm(cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_embedding(keys[-2], cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.frontend:
+        params["frontend"] = {
+            "proj": L.dense_init(keys[-3], cfg.frontend_dim, cfg.d_model, dtype=dtype)
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache / state init
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        S = min(max_len, window) if window else max_len
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+        }
+    if kind == "rec":
+        return rglru.init_rec_state(batch, cfg, dtype)
+    if kind == "ssm":
+        return mamba2.init_ssm_state(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Decode cache pytree mirroring the params blocks structure.
+
+    For ``local`` attention the cache is a rolling window buffer of size
+    ``local_window`` (sub-quadratic memory: this is what makes long_500k
+    feasible for hybrid archs).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    pat = cfg.block_pattern
+    n_sb, n_rest = divmod(cfg.num_layers, len(pat))
+    kinds = cfg.layer_kinds
+
+    def one_sb():
+        return {f"b{j}": init_layer_cache(pat[j], cfg, batch, max_len, dtype) for j in range(len(pat))}
+
+    scan_cache = (
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[one_sb() for _ in range(n_sb)])
+        if n_sb > 1
+        else (jax.tree.map(lambda x: x[None], one_sb()) if n_sb == 1 else {})
+    )
+    rest_cache = [
+        init_layer_cache(kinds[n_sb * len(pat) + j], cfg, batch, max_len, dtype) for j in range(n_rest)
+    ]
+    return {"scan": scan_cache, "rest": rest_cache}
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def apply_layer_train(
+    x: jnp.ndarray,
+    route_src: Optional[jnp.ndarray],
+    p: Params,
+    kind: str,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    moe_apply: MoeApply,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray]:
+    """One layer, train/prefill-style full-sequence pass (no cache)."""
+    aux = jnp.zeros((2,), jnp.float32)
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        a, _ = L.attention_block(
+            L.rms_norm(x, p["ln1"]), p["attn"], cfg, positions=positions, local_window=window
+        )
+        h = _res(x + a)
+        ffn_in = L.rms_norm(h, p["ln2"])
+        if kind == "moe":
+            y, aux = moe_apply(ffn_in, route_src, p["moe"])
+            route_src = h  # next layer's control-plane source
+        else:
+            y = L.swiglu(ffn_in, p["ffn"])
+        x = _res(h + y)
+    elif kind == "rec":
+        h = _res(x + rglru.rec_block(L.rms_norm(x, p["ln1"]), p["rec"], cfg))
+        x = _res(h + L.swiglu(L.rms_norm(h, p["ln2"]), p["ffn"]))
+    elif kind == "ssm":
+        x = _res(x + mamba2.ssm_block(L.rms_norm(x, p["ln1"]), p["ssm"], cfg))
+    else:
+        raise ValueError(kind)
+    return x, route_src, aux
+
+
+def apply_layer_prefill(
+    x: jnp.ndarray,
+    route_src: Optional[jnp.ndarray],
+    p: Params,
+    cache: Params,
+    kind: str,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    moe_apply: MoeApply,
+):
+    """Like train, but fills the decode cache and returns it."""
+    aux = jnp.zeros((2,), jnp.float32)
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        xn = L.rms_norm(x, p["ln1"])
+        q, k, v = L._qkv(xn, p["attn"], cfg, positions)
+        S = x.shape[1]
+        W = cache["k"].shape[1]
+        # write the last min(W, S) positions at rolling slots (pos % W), so
+        # decode's rolling-window addressing continues seamlessly
+        take = min(W, S)
+        slots = jnp.arange(S - take, S, dtype=jnp.int32) % W
+        ck = cache["k"].at[:, slots].set(k[:, -take:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v[:, -take:].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        out = L.blockwise_attention(
+            q, k, v, causal=True, local_window=window, unroll=cfg.analysis_unroll
+        )
+        h = _res(x + jnp.einsum("bsnh,nhd->bsd", out, p["attn"]["wo"].astype(out.dtype)))
+        ffn_in = L.rms_norm(h, p["ln2"])
+        if kind == "moe":
+            y, aux = moe_apply(ffn_in, route_src, p["moe"])
+            route_src = h
+        else:
+            y = L.swiglu(ffn_in, p["ffn"])
+        x = _res(h + y)
+    elif kind == "rec":
+        r, new_cache = rglru.rec_block_prefill(L.rms_norm(x, p["ln1"]), p["rec"], cfg)
+        h = _res(x + r)
+        x = _res(h + L.swiglu(L.rms_norm(h, p["ln2"]), p["ffn"]))
+    elif kind == "ssm":
+        s, new_cache = mamba2.ssm_block(L.rms_norm(x, p["ln1"]), p["ssm"], cfg, return_state=True)
+        x = _res(x + s)
+    else:
+        raise ValueError(kind)
+    return x, route_src, new_cache, aux
+
+
+def apply_layer_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    route_src: Optional[jnp.ndarray],
+    p: Params,
+    cache: Params,
+    kind: str,
+    cfg: ModelConfig,
+    cache_index: jnp.ndarray,  # scalar int32
+    moe_apply: MoeApply,
+):
+    aux = jnp.zeros((2,), jnp.float32)
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        a, new_cache = _decode_attn_rolling(
+            L.rms_norm(x, p["ln1"]), p["attn"], cfg, cache, cache_index, window
+        )
+        h = _res(x + a)
+        ffn_in = L.rms_norm(h, p["ln2"])
+        if kind == "moe":
+            y, aux = moe_apply(ffn_in, route_src, p["moe"])
+            route_src = h
+        else:
+            y = L.swiglu(ffn_in, p["ffn"])
+        x = _res(h + y)
+    elif kind == "rec":
+        r, new_cache = rglru.rec_block_decode(L.rms_norm(x, p["ln1"]), p["rec"], cfg, cache)
+        h = _res(x + r)
+        x = _res(h + L.swiglu(L.rms_norm(h, p["ln2"]), p["ffn"]))
+    elif kind == "ssm":
+        s, new_cache = mamba2.ssm_block_decode(L.rms_norm(x, p["ln1"]), p["ssm"], cfg, cache)
+        x = _res(x + s)
+    else:
+        raise ValueError(kind)
+    return x, route_src, new_cache, aux
+
+
+def _decode_attn_rolling(
+    xn: jnp.ndarray,
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    cache_index: jnp.ndarray,
+    window: int,
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token attention against a (possibly rolling-window) KV cache."""
+    B = xn.shape[0]
+    W = cache["k"].shape[1]
+    positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
+    q, k, v = L._qkv(xn, p, cfg, positions)
+    write = jnp.remainder(cache_index, W)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
+    # validity: slot position must be within [cache_index - limit + 1, cache_index]
+    slot = jnp.arange(W)
+    # absolute position stored in slot s (rolling): the largest p <= cache_index with p % W == s
+    offset = jnp.remainder(write - slot, W)
+    abs_pos = cache_index - offset
+    limit = min(window, W) if window else W
+    valid = (abs_pos >= 0) & (abs_pos > cache_index - limit)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.resolved_head_dim)
+    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(xn.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}

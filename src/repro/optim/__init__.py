@@ -1,0 +1,12 @@
+"""Optimizers (functional, optax-like): AdamW and Adafactor (memory-factored
+second moments for the 235B/400B MoE configs), schedules, global-norm clip.
+"""
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    adafactor,
+    make_optimizer,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,181 @@
+"""Functional optimizers.
+
+``Optimizer`` is a (init, update) pair:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = jax.tree.map(lambda p, u: p + u, params, updates)
+
+AdamW keeps two f32 moments per parameter (3x param memory); Adafactor
+factors the second moment of >=2-D tensors into row/col statistics (the
+memory-roofline choice for the 235B/400B MoE configs — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., Tuple[Params, Any]]  # (grads, state, params, step)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    decay_mask: Optional[Callable[[Tuple, Any], bool]] = None,
+) -> Optimizer:
+    """AdamW with decoupled weight decay.  1-D params (norms, biases) are
+    excluded from decay by default."""
+
+    def _lr(step):
+        return lr(step) if callable(lr) else jnp.float32(lr)
+
+    def _decay(path, p) -> bool:
+        if decay_mask is not None:
+            return decay_mask(path, p)
+        return p.ndim >= 2
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** step_f
+        bc2 = 1.0 - b2 ** step_f
+        lr_t = _lr(step)
+
+        def upd(path, g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if _decay(path, p):
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype), m_new, v_new
+
+        out = jax.tree_util.tree_map_with_path(
+            upd, grads, state["m"], state["v"], params
+        )
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(
+    lr: Schedule | float,
+    *,
+    decay_rate: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), simplified: factored v for ndim>=2
+    (row/col means over the last two axes), full v otherwise; update RMS
+    clipping; no first moment (the memory point of using it at 235B scale)."""
+
+    def _lr(step):
+        return lr(step) if callable(lr) else jnp.float32(lr)
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - step_f ** (-decay_rate)
+        lr_t = _lr(step)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                c = vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(r * c, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # clip update RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * u
+            if weight_decay and p.ndim >= 2:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype), new_s
+
+        # state has an extra dict level per leaf: flatten grads/params to the
+        # param treedef and pick up the matching state sub-dicts.
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([t[0] for t in out])
+        new_state = treedef.unflatten([t[1] for t in out])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: Schedule | float, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

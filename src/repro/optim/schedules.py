@@ -1,0 +1,25 @@
+"""Learning-rate schedules (f32 step -> f32 lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def sched(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        return peak * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+    return sched
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*peak."""
+
+    def sched(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,12 @@
+"""Distribution layer: mesh-axis sharding rules, the shard_map expert-parallel
+MoE (the control-flow plane's data-plane consumer at pod scale), and
+collective helpers (hierarchical reductions, int8-compressed inter-pod hops).
+"""
+from repro.parallel.sharding import (  # noqa: F401
+    batch_spec,
+    cache_shardings,
+    param_pspecs,
+    param_shardings,
+    spec_for_param,
+)
+from repro.parallel.moe_parallel import make_sharded_moe_apply  # noqa: F401

@@ -1,0 +1,87 @@
+"""Collective helpers: the control/data plane split at the wire level.
+
+* ``compressed_psum`` — int8-quantized gradient all-reduce for the inter-pod
+  hop (DCN-class links): 4x fewer bytes on the slowest link of the
+  hierarchical reduction, with an f32 per-tensor scale (the control word).
+* ``hierarchical_grad_sync`` — reduce-scatter/all-reduce composition:
+  full-precision psum intra-pod (fast ICI), compressed psum inter-pod.
+* ``control_bytes``/``data_bytes`` pytree accounting used by tests and the
+  roofline report (the Table-6 "control network is 11.5% of fabric" analogue).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization; scale is the control word."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 all-reduce with a SHARED scale: pmax the amax first (a scalar —
+    the control word), quantize every member against the global scale, sum
+    int32 (no overflow for <=2^23 members), rescale.  Summing values
+    quantized with per-member scales would be wrong; the scalar pre-reduce
+    costs 4 bytes.  Wire bytes: 1/4 of f32."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)).astype(jnp.float32), axis_name)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return dequantize_int8(total, scale, x.dtype)
+
+
+def hierarchical_grad_sync(
+    grads: Any,
+    *,
+    intra_axes: Sequence[str] = ("data",),
+    inter_axis: Optional[str] = "pod",
+    compress_inter: bool = True,
+    mean: bool = True,
+    axis_sizes: Optional[dict] = None,
+) -> Any:
+    """Two-level gradient reduction for use inside shard_map:
+
+    1. full-precision psum over the intra-pod data axes (fast ICI links),
+    2. optionally int8-compressed psum over the pod axis (slow DCN links).
+    """
+
+    def sync(g):
+        for a in intra_axes:
+            g = jax.lax.psum(g, a)
+        if inter_axis is not None:
+            g = compressed_psum(g, inter_axis) if compress_inter else jax.lax.psum(g, inter_axis)
+        if mean and axis_sizes:
+            n = 1
+            for a in list(intra_axes) + ([inter_axis] if inter_axis else []):
+                n *= axis_sizes.get(a, 1)
+            g = g / n
+        return g
+
+    return jax.tree.map(sync, grads)
+
+
+# ---------------------------------------------------------------------------
+# control/data byte accounting
+# ---------------------------------------------------------------------------
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(x.size) * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(tree)
+    )
+
+
+def control_bytes(plan_like: Any) -> int:
+    """Bytes of control-plane tensors (dispatch plans, masks, schedules)."""
+    return tree_bytes(plan_like)

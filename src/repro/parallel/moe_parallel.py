@@ -1,0 +1,164 @@
+"""Expert-parallel MoE under shard_map: the pod-scale data plane driven by the
+control-flow plane's dispatch plans.
+
+Marionette mapping: the *control plane* (router matmul -> top-k -> plan: a few
+KB of int32/f32 per shard) runs decoupled from the *data plane* (expert GEMMs
+and bulk-activation all_to_alls).  In ``lookahead`` mode the plan source is
+the previous layer's residual stream, so the control computation overlaps the
+current layer's attention on the data plane (Proactive PE Configuration); the
+all_to_all "configures" the peer shards' expert slots peer-to-peer, with no
+host/CCU round trip (autonomous, peer-to-peer control).
+
+Two data-plane strategies (selected by token count, like the Control Flow
+Sender's operator modes):
+
+* ``a2a``  (train/prefill): tokens are additionally split along the model
+  axis (sequence parallelism); each shard routes its T/ep tokens, dispatches
+  into fixed-capacity slots (E, C, d), and ONE tiled all_to_all re-buckets
+  slots so each shard holds (E/ep, ep*C, d) for its local experts.  Reverse
+  a2a + local combine + all_gather restores (B, S, d).
+* ``psum`` (decode): token counts are tiny; every model shard routes the same
+  tokens, computes only its local expert slice, and partial outputs are
+  summed with one psum (cheaper than a2a at decode batch sizes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.control_plane import capacity_for, combine, dispatch, route_topk
+from repro.models.moe import local_experts_fn
+
+Params = Dict[str, Any]
+
+
+def _moe_param_specs(p_example: Params) -> Params:
+    """in_specs pytree for the MoE param dict: experts over model, rest replicated."""
+    specs: Params = {}
+    for k in p_example:
+        if k in ("w_gate", "w_up", "w_down"):
+            specs[k] = P("model", None, None)
+        elif k == "shared":
+            specs[k] = {kk: P() for kk in p_example[k]}
+        else:
+            specs[k] = P()
+    return specs
+
+
+def make_sharded_moe_apply(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...],
+    *,
+    ep_axis: str = "model",
+    experts_fn=local_experts_fn,
+    capacity_factor: Optional[float] = None,
+):
+    """Build the distributed MoeApply (x_ffn, route_src, params) -> (y, aux(2,)).
+
+    ``batch_axes`` shard the leading batch dim of x (may be empty for B=1).
+    """
+    E, k = cfg.num_experts, cfg.top_k
+    ep = mesh.shape[ep_axis]
+    assert E % ep == 0, f"{E} experts not divisible by ep={ep}"
+    E_loc = E // ep
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    all_axes = tuple(batch_axes) + (ep_axis,)
+
+    # ------------------------------------------------------------------
+    # strategy a2a: sequence-split + all_to_all (train / prefill)
+    # ------------------------------------------------------------------
+    def _a2a_body(x, rs, p):
+        B_loc, S, d = x.shape
+        Sc = S // ep
+        midx = jax.lax.axis_index(ep_axis)
+        xs = jax.lax.dynamic_slice_in_dim(x, midx * Sc, Sc, axis=1)
+        rss = jax.lax.dynamic_slice_in_dim(rs, midx * Sc, Sc, axis=1)
+        T_loc = B_loc * Sc
+        C = capacity_for(T_loc, E, k, cf)
+
+        # -- control plane: plan for this shard's tokens (tiny tensors) ----
+        plan, aux = route_topk(rss.reshape(T_loc, d), p["router"], k, C)
+
+        # -- data plane: dispatch -> a2a -> experts -> a2a -> combine ------
+        slots = dispatch(xs.reshape(T_loc, d), plan)  # (E, C, d)
+        slots = jax.lax.all_to_all(
+            slots, ep_axis, split_axis=0, concat_axis=1, tiled=True
+        )  # (E_loc, ep*C, d)
+        y_slots = experts_fn(slots, p)  # local experts, (E_loc, ep*C, d)
+        y_slots = jax.lax.all_to_all(
+            y_slots, ep_axis, split_axis=1, concat_axis=0, tiled=True
+        )  # (E, C, d)
+        y = combine(y_slots, plan).astype(x.dtype)  # (T_loc, d)
+
+        if "shared" in p:  # shared experts: replicated weights, local tokens
+            sh = p["shared"]
+            xf = xs.reshape(T_loc, d)
+            g = xf @ sh["w_gate"].astype(x.dtype)
+            u = xf @ sh["w_up"].astype(x.dtype)
+            y = y + (jax.nn.silu(g) * u) @ sh["w_down"].astype(x.dtype)
+
+        y = y.reshape(B_loc, Sc, d)
+        y = jax.lax.all_gather(y, ep_axis, axis=1, tiled=True)  # (B_loc, S, d)
+        aux_v = jnp.stack([aux.load_balance_loss, aux.router_z_loss])
+        aux_v = jax.lax.pmean(aux_v, all_axes)
+        return y, aux_v
+
+    # ------------------------------------------------------------------
+    # strategy psum: replicated routing + expert-sliced compute (decode)
+    # ------------------------------------------------------------------
+    def _psum_body(x, rs, p):
+        B_loc, S, d = x.shape
+        T_loc = B_loc * S
+        C = capacity_for(T_loc, E, k, cf)
+        midx = jax.lax.axis_index(ep_axis)
+
+        plan, aux = route_topk(rs.reshape(T_loc, d), p["router"], k, C)
+        slots = dispatch(x.reshape(T_loc, d), plan)  # (E, C, d) replicated
+        slots_loc = jax.lax.dynamic_slice_in_dim(slots, midx * E_loc, E_loc, axis=0)
+        y_loc = experts_fn(slots_loc, p)  # (E_loc, C, d)
+
+        # combine only assignments owned by this shard, then sum across shards
+        base = midx * E_loc * C
+        idx = plan.combine_idx - base
+        local = (idx >= 0) & (idx < E_loc * C)
+        shifted = plan._replace(
+            combine_idx=jnp.where(local, idx, -1),
+            combine_w=jnp.where(local, plan.combine_w, 0.0),
+        )
+        y = combine(y_loc, shifted)
+        y = jax.lax.psum(y, ep_axis).astype(x.dtype)
+
+        if "shared" in p:
+            sh = p["shared"]
+            xf = x.reshape(T_loc, d)
+            g = xf @ sh["w_gate"].astype(x.dtype)
+            u = xf @ sh["w_up"].astype(x.dtype)
+            y = y + (jax.nn.silu(g) * u) @ sh["w_down"].astype(x.dtype)
+
+        aux_v = jnp.stack([aux.load_balance_loss, aux.router_z_loss])
+        aux_v = jax.lax.pmean(aux_v, tuple(batch_axes)) if batch_axes else aux_v
+        return y.reshape(B_loc, S, d), aux_v
+
+    def moe_apply(x_ffn: jnp.ndarray, route_src: Optional[jnp.ndarray], p: Params):
+        rs = x_ffn if (route_src is None or cfg.route_mode != "lookahead") else route_src
+        S = x_ffn.shape[1]
+        body = _a2a_body if S % ep == 0 and S >= ep else _psum_body
+        specs_p = _moe_param_specs(p)
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(x_spec, x_spec, specs_p),
+            out_specs=(x_spec, P()),
+            check_rep=False,
+        )
+        return fn(x_ffn, rs, p)
+
+    return moe_apply

@@ -1,0 +1,254 @@
+"""Sharding rules: map every parameter / activation / cache tensor to a
+PartitionSpec over the production mesh axes.
+
+Axes:
+  pod    — inter-pod data parallelism (gradient reduction crosses pods)
+  data   — intra-pod data parallelism (batch)
+  model  — tensor/expert parallelism (heads, FFN hidden, experts, vocab)
+
+Rules are *preference lists* resolved against divisibility: for each param
+kind we try the preferred tensor axes in order and shard the first one whose
+size divides the mesh axis; otherwise the tensor is replicated.  This is what
+makes a single rule set work across all 10 assigned architectures (e.g. GQA
+with 1..32 KV heads: shard the head axis when it divides, else the head_dim
+axis, which is always a multiple of 16 in the assigned configs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Preference lists: param-name suffix -> ordered tensor axes to try sharding
+# over "model".  Axis indices refer to the parameter's own shape.
+_MODEL_AXIS_PREFS: Dict[str, Tuple[int, ...]] = {
+    # embeddings: vocab first, then d_model (mamba2's 50280 vocab is not
+    # divisible by 16 -> falls through to d_model)
+    "embed": (0, 1),
+    "unembed": (0, 1),
+    # attention
+    "wq": (1, 2),      # (d, nq, hd): heads, else head_dim
+    # KV projections: heads when divisible, else REPLICATE (H-B1): a
+    # hd-sharded K feeds the repeat-KV attention contraction over hd, which
+    # turns the (huge) score tensor into partial sums needing an all-reduce.
+    # nkv*hd is small; replication is the cheaper wire choice.
+    "wk": (1,),        # (d, nkv, hd)
+    "wv": (1,),
+    "wo": (0, 1),      # (nq, hd, d): heads, else head_dim (contracting side)
+    "bq": (0, 1),
+    "bk": (0,),
+    "bv": (0,),
+    # dense FFN (SwiGLU): hidden axis
+    "w_gate": (1,),    # (d, f) / shared (d, sh*f) / expert (E, d, f) handled below
+    "w_up": (1,),
+    "w_down": (0,),    # (f, d)
+    # recurrent (RG-LRU): width axis
+    "w_x": (1,),
+    "conv_w": (1,),
+    "conv_b": (0,),
+    "alpha_r": (0,),
+    "b_r": (0,),
+    "alpha_i": (0,),
+    "b_i": (0,),
+    "lam": (0,),
+    "w_out": (0,),     # (w, d) / ssm (d_in, d): contracting side
+    # SSM (Mamba-2): packed projection output axis (all segment boundaries are
+    # multiples of the mesh axis in the assigned configs)
+    "w_in": (1,),
+    "A_log": (0,),
+    "D": (0,),
+    "dt_bias": (0,),
+    # frontend stub
+    "proj": (1,),
+}
+
+# Expert-stacked params (leading E axis): shard experts over "model".
+_EXPERT_PARAMS = {"w_gate", "w_up", "w_down"}
+
+# Always-replicated small params.
+_REPLICATED = {"ln1", "ln2", "final_norm", "q_norm", "k_norm", "norm_scale", "router"}
+
+
+def _leaf_name(path) -> str:
+    """Last DictKey name along a tree path."""
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "name"):
+            return str(k.name)
+    return ""
+
+
+def _path_has(path, name: str) -> bool:
+    return any(getattr(k, "key", None) == name for k in path)
+
+
+def spec_for_param(path, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _leaf_name(path)
+    model_size = mesh.shape.get("model", 1)
+    ndim = len(shape)
+
+    def with_model_axis(axis: int) -> P:
+        spec = [None] * ndim
+        spec[axis] = "model"
+        return P(*spec)
+
+    if name in _REPLICATED:
+        return P()
+
+    # scanned parameter stacks have a leading layer axis; rules below index
+    # into the per-layer shape, so shift by the stack offset.
+    stack = 1 if _path_has(path, "scan") else 0
+
+    if name in _EXPERT_PARAMS and ndim - stack == 3 and not _path_has(path, "shared"):
+        # (E, d, f): expert parallelism over the model axis
+        if shape[stack] % model_size == 0:
+            return with_model_axis(stack)
+
+    prefs = _MODEL_AXIS_PREFS.get(name, ())
+    for ax in prefs:
+        ax = ax + stack
+        if ax < ndim and shape[ax] % model_size == 0 and shape[ax] >= model_size:
+            return with_model_axis(ax)
+    return P()
+
+
+def param_pspecs(abstract_params: Any, mesh: Mesh, *, strategy: str = "tp") -> Any:
+    """PartitionSpec pytree matching an (abstract) params pytree.
+
+    strategy="tp" (default): Megatron-style tensor parallelism over `model`.
+    strategy="fsdp": every parameter fully sharded over ALL mesh axes
+    (ZeRO-3); XLA inserts per-layer weight all-gathers and gradient
+    reduce-scatters.  At train_4k batch sizes the weight bytes are far below
+    the activation bytes TP would all-reduce, so FSDP wins the collective
+    roofline term for the dense archs (perf iteration B-4, EXPERIMENTS.md).
+    """
+    if strategy == "fsdp":
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: fsdp_spec_for_param(leaf.shape, mesh), abstract_params
+        )
+    tied = "unembed" not in (
+        abstract_params if isinstance(abstract_params, dict) else {}
+    )
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if name == "embed" and not tied:
+            # untied: gather rides a d-sharded table (no collective); the
+            # vocab-sharded *unembed* keeps the logits memory win (H-B2)
+            model = mesh.shape.get("model", 1)
+            if len(leaf.shape) == 2 and leaf.shape[1] % model == 0:
+                return P(None, "model")
+        return spec_for_param(path, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def fsdp_spec_for_param(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the first axis divisible by the full device count; else by the
+    largest single mesh axis that divides any dim; else replicate."""
+    axes = [a for a in ("data", "model", "pod") if a in mesh.shape]
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % total == 0 and shape[i] >= total:
+            spec = [None] * len(shape)
+            spec[i] = tuple(axes)
+            return P(*spec)
+    for a in sorted(axes, key=lambda a: -mesh.shape[a]):
+        for i in order:
+            if shape[i] % mesh.shape[a] == 0 and shape[i] >= mesh.shape[a]:
+                spec = [None] * len(shape)
+                spec[i] = a
+                return P(*spec)
+    return P()
+
+
+def param_shardings(abstract_params: Any, mesh: Mesh, *, strategy: str = "tp") -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(abstract_params, mesh, strategy=strategy),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / activations / cache
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the batch: ('pod','data') multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(batch: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over as many data axes as divide it.
+
+    long_500k has global_batch=1: nothing divides -> replicated.
+    """
+    axes = []
+    prod = 1
+    for a in data_axes(mesh):
+        if batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    first = tuple(axes) if axes else None
+    return P(first, *([None] * extra_dims))
+
+
+def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
+    """Decode-cache leaves: batch on data axes; heads/width/state on model.
+
+    KV cache (B, S, nkv, hd); RG-LRU h (B, W) / conv (B, K-1, W);
+    SSD h (B, H, N, P) / conv (B, K-1, ch).  A leading scan-stack axis may be
+    present.
+    """
+    name = _leaf_name(path)
+    model_size = mesh.shape.get("model", 1)
+    stack = 1 if _path_has(path, "scan") else 0
+    # leading batch dim partition (after optional stack axis)
+    baxes = batch_spec(batch, mesh)[0]
+
+    spec = [None] * len(shape)
+    if stack:
+        spec[0] = None
+    if len(shape) > stack:
+        spec[stack] = baxes
+
+    def try_model(ax: int) -> bool:
+        ax = ax + stack
+        if ax < len(shape) and shape[ax] % model_size == 0 and shape[ax] >= model_size:
+            spec[ax] = "model"
+            return True
+        return False
+
+    if name in ("k", "v"):          # (B, S, nkv, hd)
+        # perf iteration H-C1 (EXPERIMENTS.md §Perf): prefer the KV-head axis,
+        # THEN the sequence axis.  Sharding head_dim (the old fallback) forces
+        # the decode q@k contraction into an all-reduce of the full (B, nq, S)
+        # score tensor — ~1.4 s/token of wire for qwen3-32b decode_32k.  With
+        # the cache sharded on S, scores shard on S and softmax needs only
+        # tiny stat collectives.
+        try_model(2) or try_model(1) or try_model(3)
+    elif name == "h":
+        if len(shape) - stack == 2:  # RG-LRU (B, W)
+            try_model(1)
+        else:                        # SSD (B, H, N, P)
+            try_model(1) or try_model(2)
+    elif name == "conv":             # (B, K-1, ch)
+        try_model(2)
+    return P(*spec)
+
+
+def cache_shardings(abstract_cache: Any, batch: int, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec_for(path, leaf.shape, batch, mesh)
+        ),
+        abstract_cache,
+    )

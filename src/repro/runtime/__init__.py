@@ -1,0 +1,2 @@
+from repro.runtime.straggler import StragglerDetector, Mitigation  # noqa: F401
+from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector  # noqa: F401

@@ -1,0 +1,64 @@
+"""Elastic re-shard: rebuild the mesh after losing workers and restore state.
+
+The model axis is kept fixed (parameter shards stay valid); the data axis
+shrinks to the surviving device count.  Checkpoint leaves are re-placed with
+the new mesh's shardings; the data loader's determinism contract lets the
+stream resume at the restored step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager
+from repro.launch.steps import build_train_step
+from repro.parallel.sharding import param_shardings
+
+
+@dataclass
+class ElasticState:
+    mesh: Mesh
+    bundle: Any          # StepBundle for the new mesh
+    step_fn: Any         # jitted train step
+    params: Any
+    opt_state: Any
+    step: int
+
+
+def reshard_after_failure(
+    cfg,
+    cell,
+    ckpt: CheckpointManager,
+    *,
+    n_healthy: Optional[int] = None,
+    model_axis: Optional[int] = None,
+    devices: Optional[list] = None,
+) -> ElasticState:
+    """Rebuild the largest (data, model) mesh from the surviving devices and
+    restore the latest committed checkpoint onto it."""
+    devices = devices if devices is not None else jax.devices()
+    n = n_healthy if n_healthy is not None else len(devices)
+    model = model_axis or min(n, 1)
+    if n // model < 1:
+        raise ValueError(f"cannot build mesh: {n} devices, model={model}")
+    data = n // model
+    mesh = Mesh(np.asarray(devices[: data * model]).reshape(data, model), ("data", "model"))
+
+    bundle = build_train_step(cfg, mesh, cell)
+    params_abs, opt_abs = bundle.abstract_inputs[0], bundle.abstract_inputs[1]
+    p_shard, o_shard = bundle.in_shardings[0], bundle.in_shardings[1]
+    params, opt_state, step, _ = ckpt.restore(
+        params_abs, opt_abs, param_shardings=p_shard, opt_shardings=o_shard
+    )
+    return ElasticState(
+        mesh=mesh,
+        bundle=bundle,
+        step_fn=bundle.jit(),
+        params=params,
+        opt_state=opt_state,
+        step=step,
+    )

@@ -1,0 +1,69 @@
+"""Straggler detection & mitigation policy.
+
+At pod scale a single slow chip serializes every collective (the pipeline's
+II is set by the slowest participant — the spatial-architecture pathology the
+paper's Agile PE Assignment addresses at PE granularity).  The detector keeps
+per-worker EWMA step times and flags workers whose smoothed time exceeds
+``threshold`` x the healthy median for ``patience`` consecutive steps; the
+policy then decides between re-dispatching that worker's microbatch
+(transient hiccup) and excluding the worker (persistent — trigger elastic
+re-shard).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class Mitigation(enum.Enum):
+    NONE = "none"
+    REDISPATCH = "redispatch"   # retry the slow worker's shard this step
+    EXCLUDE = "exclude"         # drop the worker; caller re-shards elastically
+
+
+@dataclass
+class StragglerDetector:
+    n_workers: int
+    alpha: float = 0.3          # EWMA smoothing
+    threshold: float = 2.0      # x median EWMA => straggling
+    patience: int = 3           # consecutive flagged steps before EXCLUDE
+    warmup: int = 5             # steps before any verdicts (compile noise)
+
+    _ewma: Optional[np.ndarray] = field(default=None, init=False)
+    _flagged: Optional[np.ndarray] = field(default=None, init=False)
+    _steps: int = field(default=0, init=False)
+
+    def __post_init__(self) -> None:
+        self._ewma = np.zeros(self.n_workers)
+        self._flagged = np.zeros(self.n_workers, np.int64)
+
+    def observe(self, step_times: Sequence[float]) -> Dict[int, Mitigation]:
+        """Feed per-worker durations for one step; returns worker -> action."""
+        t = np.asarray(step_times, float)
+        if t.shape != (self.n_workers,):
+            raise ValueError(f"expected {self.n_workers} durations, got {t.shape}")
+        self._steps += 1
+        if self._steps == 1:
+            self._ewma[:] = t
+        else:
+            self._ewma = self.alpha * t + (1 - self.alpha) * self._ewma
+
+        verdict: Dict[int, Mitigation] = {}
+        if self._steps <= self.warmup:
+            return verdict
+        med = float(np.median(self._ewma))
+        slow = self._ewma > self.threshold * max(med, 1e-9)
+        self._flagged = np.where(slow, self._flagged + 1, 0)
+        for w in np.nonzero(slow)[0]:
+            if self._flagged[w] >= self.patience:
+                verdict[int(w)] = Mitigation.EXCLUDE
+            else:
+                verdict[int(w)] = Mitigation.REDISPATCH
+        return verdict
+
+    @property
+    def ewma(self) -> np.ndarray:
+        return self._ewma.copy()

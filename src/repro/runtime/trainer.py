@@ -1,0 +1,150 @@
+"""Fault-tolerant training loop.
+
+The step function comes from launch.steps (the same one the dry-run
+compiles); around it the trainer provides: periodic atomic checkpoints,
+failure injection + restart-from-checkpoint, straggler observation, and
+metric logging.  On an (injected or real) step failure the trainer restores
+the latest committed checkpoint, seeks the deterministic data stream back to
+that step, and continues — the recovery path the multi-pod deployment relies
+on, exercised end-to-end on the host mesh by tests/test_runtime.py and
+examples/elastic_restart.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data import MarkovLMDataset, ShardedLoader
+from repro.launch.steps import build_train_step
+from repro.runtime.straggler import Mitigation, StragglerDetector
+
+
+class FailureInjector:
+    """Deterministic fault schedule: raise at given steps (once each)."""
+
+    def __init__(self, fail_at: Optional[List[int]] = None):
+        self.fail_at = set(fail_at or [])
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    lr: float = 3e-4
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        cell: ShapeCell,
+        mesh,
+        tcfg: TrainerConfig,
+        *,
+        dataset=None,
+        failure_injector: Optional[FailureInjector] = None,
+        on_metrics: Optional[Callable[[int, Dict], None]] = None,
+    ):
+        self.cfg, self.cell, self.mesh, self.tcfg = cfg, cell, mesh, tcfg
+        self.bundle = build_train_step(cfg, mesh, cell, lr=tcfg.lr, total_steps=tcfg.num_steps)
+        self.step_fn = self.bundle.jit()
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+        self.injector = failure_injector or FailureInjector()
+        self.on_metrics = on_metrics
+        self.detector = StragglerDetector(n_workers=mesh.devices.size)
+        self.dataset = dataset or MarkovLMDataset(cfg.vocab_size, cell.seq_len, seed=tcfg.seed)
+        self.metrics_log: List[Dict] = []
+        self.restarts = 0
+
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = self.bundle.model.init(key)
+        params = jax.device_put(params, self.bundle.in_shardings[0])
+        from repro.optim import cosine_schedule, make_optimizer
+
+        opt = make_optimizer(self.cfg.optimizer, cosine_schedule(self.tcfg.lr, 100, self.tcfg.num_steps))
+        opt_state = jax.device_put(opt.init(params), self.bundle.in_shardings[1])
+        return params, opt_state, 0
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self._init_state()
+        params_abs, opt_abs = self.bundle.abstract_inputs[0], self.bundle.abstract_inputs[1]
+        params, opt_state, step, _ = self.ckpt.restore(
+            params_abs, opt_abs,
+            param_shardings=self.bundle.in_shardings[0],
+            opt_shardings=self.bundle.in_shardings[1],
+        )
+        return params, opt_state, step
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+        total = num_steps or self.tcfg.num_steps
+        params, opt_state, start = self._restore_or_init()
+        frontend_spec = (
+            (self.cfg.frontend_tokens, self.cfg.frontend_dim) if self.cfg.frontend else None
+        )
+        loader = ShardedLoader(
+            self.dataset, self.cell.global_batch, self.mesh,
+            start_step=start, frontend_spec=frontend_spec,
+        )
+        step = start
+        step_arr = jax.numpy.asarray(step, jax.numpy.int32)
+        try:
+            while step < total:
+                try:
+                    data_step, batch = next(loader)
+                    assert data_step == step, f"stream desync: {data_step} != {step}"
+                    self.injector.maybe_fail(step)
+                    t0 = time.perf_counter()
+                    args = [params, opt_state, step_arr, batch["tokens"]]
+                    if "frontend" in batch:
+                        args.append(batch["frontend"])
+                    params, opt_state, step_arr, metrics = self.step_fn(*args)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    dt = time.perf_counter() - t0
+                    # single-process: every worker observes the same wall time
+                    self.detector.observe(np.full(self.mesh.devices.size, dt))
+                    step += 1
+                    metrics["step_time_s"] = dt
+                    self.metrics_log.append({"step": step, **metrics})
+                    if self.on_metrics and step % self.tcfg.log_every == 0:
+                        self.on_metrics(step, metrics)
+                    if step % self.tcfg.checkpoint_every == 0 or step == total:
+                        self.ckpt.save(step, params, opt_state, {"loss": metrics.get("loss")})
+                except RuntimeError as e:
+                    if "injected node failure" not in str(e):
+                        raise
+                    # restart-from-checkpoint path
+                    self.restarts += 1
+                    params, opt_state, step = self._restore_or_init()
+                    step_arr = jax.numpy.asarray(step, jax.numpy.int32)
+                    loader.seek(step)
+        finally:
+            loader.close()
+        return {
+            "final_step": step,
+            "restarts": self.restarts,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "metrics": self.metrics_log,
+        }

@@ -1,0 +1,14 @@
+"""Faithful cycle-level performance simulator of the paper's evaluation (§5-7).
+
+Reproduces the paper's methodology: a parameterized performance model of
+spatial-architecture execution, driven by per-benchmark CDFG loop trees with
+the exact Table-5 data sizes, comparing PE execution models (von Neumann /
+dataflow / Marionette with Proactive PE Configuration), control transports
+(CCU / data-NoC / CS-Benes control network), and Agile PE Assignment, plus
+performance models of Softbrain, TIA, REVEL and RipTide normalized to the
+same 16-PE fabric (§6.1).
+"""
+from repro.sim.workload import Loop, Branch, Workload  # noqa: F401
+from repro.sim.archs import ArchModel, ARCHS, marionette, von_neumann_pe, dataflow_pe  # noqa: F401
+from repro.sim.engine import simulate, SimResult  # noqa: F401
+from repro.sim.kernels import BENCHMARKS, workload  # noqa: F401

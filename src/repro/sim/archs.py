@@ -1,0 +1,111 @@
+"""Architecture models (paper §6.1): parameter sets for the timing engine.
+
+The three PE execution models (Fig. 2/4) and the four SOTA comparison
+architectures (Softbrain, TIA, REVEL, RipTide), normalized to the same
+16-PE computing fabric (Table 4 / §6.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ArchModel:
+    name: str
+    # PE execution model ----------------------------------------------------
+    pe_model: str          # von_neumann | dataflow | marionette | hybrid
+    ii_base: int           # pipeline II floor per PE (dataflow: tag+config per firing)
+    branch_style: str      # predication | switch | tag | proactive | network_ops
+    # control flow transport --------------------------------------------------
+    ctrl_transport: str    # ccu | data_noc | benes | network_ops
+    ctrl_delay: int        # cycles per control-flow transfer
+    config_switch: int     # non-overlapped cycles to reconfigure a PE group
+    proactive: bool        # next-stage config overlaps current compute
+    # scheduling ---------------------------------------------------------------
+    agile: bool            # Agile PE Assignment (fold outer BBs + replicate inner)
+    overlap_outer: bool    # outer BB pipeline runs concurrently with inner (FIFOs)
+    inner_replicas_cap: int  # max replication of inner pipelines (0 = unlimited)
+    outer_fabric_pes: int  # PEs reserved for outer BBs (REVEL: 1 dataflow PE); 0 = shared
+    serial_reconfig: bool = False  # systolic fabrics re-configure per serial iteration
+    n_pes: int = 16
+
+
+# -- the three PE models of Fig. 11 (unified data network, no ctrl net, no agile)
+von_neumann_pe = ArchModel(
+    name="von-neumann-pe", pe_model="von_neumann", ii_base=1,
+    branch_style="predication", ctrl_transport="ccu", ctrl_delay=8,
+    config_switch=4, proactive=False, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+dataflow_pe = ArchModel(
+    name="dataflow-pe", pe_model="dataflow", ii_base=2,
+    branch_style="tag", ctrl_transport="data_noc", ctrl_delay=4,
+    config_switch=2, proactive=False, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+marionette_pe = ArchModel(  # Proactive PE Configuration only (Fig. 11 setting)
+    name="marionette-pe", pe_model="marionette", ii_base=1,
+    branch_style="proactive", ctrl_transport="data_noc", ctrl_delay=4,
+    config_switch=0, proactive=True, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+marionette_net = replace(  # + CS-Benes peer-to-peer control network (Fig. 12)
+    marionette_pe, name="marionette-net", ctrl_transport="benes", ctrl_delay=1,
+)
+
+marionette = replace(  # + Agile PE Assignment (Fig. 14) = full Marionette
+    marionette_net, name="marionette", agile=True, overlap_outer=True,
+    inner_replicas_cap=0,
+)
+
+# -- SOTA models (§6.1) -------------------------------------------------------
+softbrain = ArchModel(
+    # Stream-dataflow: vN PEs + stream engine; II=1 pipelines, predication,
+    # CCU-mediated config, static mapping (no agile).
+    name="softbrain", pe_model="von_neumann", ii_base=1,
+    branch_style="predication", ctrl_transport="ccu", ctrl_delay=8,
+    config_switch=4, proactive=False, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+tia = ArchModel(
+    # Triggered instructions: dataflow PEs, autonomous triggers (no CCU) but
+    # per-firing trigger resolution lengthens II; control rides data channels.
+    name="tia", pe_model="dataflow", ii_base=2,
+    branch_style="tag", ctrl_transport="data_noc", ctrl_delay=4,
+    config_switch=2, proactive=False, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+revel = ArchModel(
+    # Hybrid systolic-dataflow: inner loops on 15 systolic PEs (II=1),
+    # outer BBs on 1 tagged-dataflow PE; stream-decoupled (partial overlap).
+    # Systolic PEs cannot fire data-driven: serial loops re-issue their
+    # stream configuration every iteration (serial_reconfig).
+    name="revel", pe_model="hybrid", ii_base=1,
+    branch_style="predication", ctrl_transport="data_noc", ctrl_delay=4,
+    config_switch=2, proactive=False, agile=True, overlap_outer=True,
+    inner_replicas_cap=0, outer_fabric_pes=1, serial_reconfig=True,
+)
+
+riptide = ArchModel(
+    # Energy-minimal dataflow compiler: control operators placed in the NoC;
+    # no CCU round trips, but in-network control transfer is slow and the
+    # control ops steal network bandwidth (coupled control/data).
+    name="riptide", pe_model="von_neumann", ii_base=1,
+    branch_style="network_ops", ctrl_transport="network_ops", ctrl_delay=4,
+    config_switch=0, proactive=False, agile=False, overlap_outer=False,
+    inner_replicas_cap=1, outer_fabric_pes=0,
+)
+
+ARCHS: Dict[str, ArchModel] = {
+    a.name: a
+    for a in [
+        von_neumann_pe, dataflow_pe, marionette_pe, marionette_net, marionette,
+        softbrain, tia, revel, riptide,
+    ]
+}

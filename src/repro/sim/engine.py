@@ -1,0 +1,282 @@
+"""Cycle-level timing engine: walks a Workload loop tree under an ArchModel.
+
+Timing semantics follow the paper's Fig. 3/7 timelines:
+
+* Fully-pipelined innermost loops run at II = max(ii_min, ii_base) x mux (+
+  branch steering penalties), where mux is the time-multiplex fold when the
+  spatial footprint exceeds the fabric.
+* Partially-pipelined (serial) loops pay, per iteration: the body critical
+  path, one control-flow transfer (CCU round trip for von Neumann PEs, data
+  NoC hops for dataflow PEs, one CS-Benes hop for Marionette), and the
+  branch-resolution cost of the model's branch style.
+* Divergent branches: predication consumes both-path PEs (footprint); tag
+  steering resolves on the data path (serial chain cost + nested transfers);
+  in-network control ops serialize a hop; proactive configuration overlaps
+  the next-stage config with current-stage compute (zero exposed cost).
+* Imperfect loops serialize outer-BB work, control transfer, and inner loop
+  per outer iteration — except when the model overlaps them (Marionette's
+  Control FIFOs, REVEL's stream decoupling).
+* Agile PE Assignment folds outer BBs into few PEs (time-extension) and
+  replicates parallel inner pipelines over the spare fabric (Fig. 8/15).
+  Single-level parallel loops are statically unrolled by EVERY architecture
+  (spatial replication needs no control flow), which is why Fig. 17 shows
+  near-identical performance on the non-intensive benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.sim.archs import ArchModel
+from repro.sim.workload import Branch, Loop, Workload
+
+OUTER_FOLD_PES = 2  # time-extension target for rarely-executing outer BBs
+
+
+@dataclass(frozen=True)
+class SimResult:
+    benchmark: str
+    arch: str
+    cycles: float
+    footprint: int
+    mux: int
+    inner_replicas: int
+    outer_util: float      # utilization of PEs hosting outer-loop BBs
+    pipe_util: float       # ideal II / achieved II of the main pipeline
+    work: float            # total dynamic ops
+
+    @property
+    def ops_per_cycle(self) -> float:
+        return self.work / self.cycles if self.cycles else 0.0
+
+
+# ---------------------------------------------------------------------------
+# footprint
+# ---------------------------------------------------------------------------
+
+
+def loop_footprint(l: Loop, model: ArchModel) -> int:
+    f = l.ops
+    if l.branch:
+        if model.branch_style == "predication":
+            f += l.branch.both_ops  # both lanes mapped spatially
+        else:
+            f += max(l.branch.taken_ops, l.branch.not_taken_ops)  # one lane
+    return f
+
+
+def workload_footprint(w: Workload, model: ArchModel) -> int:
+    return sum(loop_footprint(l, model) for l in w.all_loops())
+
+
+# ---------------------------------------------------------------------------
+# branch handling costs
+# ---------------------------------------------------------------------------
+
+
+def _branch_pipelined(b: Optional[Branch], model: ArchModel) -> float:
+    """Cycles added to a *pipelined* loop's II per iteration by branches."""
+    if b is None:
+        return 0.0
+    style = model.branch_style
+    if style in ("predication", "proactive"):
+        return 0.0  # spatial / pre-configured: no exposed time
+    if style == "tag":
+        return float(b.nested)  # nested divergence re-steers on data channels
+    if style == "network_ops":
+        return 0.5 * (1 + b.nested)  # in-network steering hop per resolution
+    raise ValueError(style)
+
+
+def _branch_serial(b: Optional[Branch], model: ArchModel) -> float:
+    """Branch cost on the critical chain of a *serial* (non-pipelined) loop."""
+    if b is None:
+        return 0.0
+    style = model.branch_style
+    if style == "predication":
+        return 2.0 * b.nested  # nested divergence needs a second select wave
+    if style == "proactive":
+        return 0.0  # both targets pre-configured during compute
+    if style == "tag":
+        return 1.0 + b.nested  # per-firing tag resolution + nested transfers
+    if style == "network_ops":
+        return 1.0 + b.nested
+    raise ValueError(style)
+
+
+def _ctrl_transfer(model: ArchModel) -> float:
+    """One control-flow transfer between PE groups."""
+    return float(model.ctrl_delay)
+
+
+# ---------------------------------------------------------------------------
+# agile assignment: fold outer BBs, replicate inner pipelines
+# ---------------------------------------------------------------------------
+
+
+def _main_inner(w: Workload) -> Loop:
+    """The innermost loop carrying the most dynamic work."""
+    inners = [l for l in w.all_loops() if l.is_innermost]
+
+    def dyn_work(l: Loop) -> float:
+        return l.body_mean_ops() * _dyn_iters(w.root, l)
+
+    return max(inners, key=dyn_work)
+
+
+def _dyn_iters(root: Loop, target: Loop, mult: float = 1.0) -> float:
+    if root is target:
+        return mult * root.trip
+    for c in root.children:
+        r = _dyn_iters(c, target, mult * root.trip)
+        if r:
+            return r
+    return 0.0
+
+
+def _replicable(w: Workload, inner: Loop) -> bool:
+    """Pipeline replication is legal if the inner loop's iterations are
+    independent OR some ancestor's iterations are (replicas then process
+    different ancestor iterations — the paper's 'reconfigure outer-BB PEs as
+    inner loop pipelines')."""
+    if inner.parallel:
+        return True
+
+    def path_to(l: Loop, target: Loop) -> Optional[List[Loop]]:
+        if l is target:
+            return [l]
+        for c in l.children:
+            p = path_to(c, target)
+            if p is not None:
+                return [l] + p
+        return None
+
+    path = path_to(w.root, inner) or []
+    return any(a.parallel for a in path[:-1])
+
+
+def agile_allocation(w: Workload, model: ArchModel) -> Tuple[int, int, int]:
+    """Returns (inner_replicas, folded_other_footprint, mux)."""
+    inner = _main_inner(w)
+    inner_fp = loop_footprint(inner, model)
+    others = [l for l in w.all_loops() if l is not inner]
+    folded = sum(min(loop_footprint(l, model), OUTER_FOLD_PES) for l in others)
+    avail = model.n_pes - folded
+    if avail < inner_fp:
+        return 1, folded, max(1, math.ceil((inner_fp + folded) / model.n_pes))
+    replicas = 1
+    if inner.pipelineable and _replicable(w, inner):
+        replicas = max(1, avail // max(inner_fp, 1))
+        if model.inner_replicas_cap:
+            replicas = min(replicas, model.inner_replicas_cap)
+    return replicas, folded, 1
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+
+def simulate(w: Workload, model: ArchModel) -> SimResult:
+    F = workload_footprint(w, model)
+    inner = _main_inner(w)
+
+    # Single-level parallel loops: static spatial unrolling, available to every
+    # architecture (no dynamic control flow involved).
+    static_unroll = w.root.is_innermost and w.root.parallel and w.root.pipelineable
+
+    if static_unroll:
+        replicas = max(1, model.n_pes // max(F, 1))
+        mux = max(1, math.ceil(F / model.n_pes))
+    elif model.agile and not model.outer_fabric_pes:
+        replicas, _folded, mux = agile_allocation(w, model)
+    elif model.outer_fabric_pes:
+        # REVEL: inner loops on the systolic sub-fabric, outer BBs folded onto
+        # the small dataflow sub-fabric.
+        inner_fp = loop_footprint(inner, model)
+        inner_pes = model.n_pes - model.outer_fabric_pes
+        others_fp = sum(loop_footprint(l, model) for l in w.all_loops() if l is not inner)
+        replicas = (
+            max(1, inner_pes // max(inner_fp, 1))
+            if (inner.pipelineable and _replicable(w, inner))
+            else 1
+        )
+        if model.inner_replicas_cap:
+            replicas = min(replicas, model.inner_replicas_cap)
+        mux = max(1, math.ceil(others_fp / max(model.outer_fabric_pes * 4, 1)))
+    else:
+        replicas, mux = 1, max(1, math.ceil(F / model.n_pes))
+
+    cycles = _timed_root(w, model, mux, replicas)
+
+    ideal_ii = max(inner.ii_min, 1)
+    achieved_ii = max(inner.ii_min, model.ii_base) * mux + _branch_pipelined(inner.branch, model)
+    if inner.pipelineable:
+        pipe_util = min(1.0, ideal_ii / achieved_ii)
+    else:
+        pipe_util = ideal_ii / (inner.depth + _ctrl_transfer(model))
+
+    outer_work = sum(
+        l.body_mean_ops() * _dyn_iters(w.root, l) for l in w.all_loops() if not l.is_innermost
+    )
+    outer_pes = (
+        sum(min(loop_footprint(l, model), OUTER_FOLD_PES) for l in w.all_loops() if not l.is_innermost)
+        if model.agile
+        else sum(loop_footprint(l, model) for l in w.all_loops() if not l.is_innermost)
+    )
+    outer_util = min(1.0, outer_work / (max(outer_pes, 1) * cycles)) if cycles else 0.0
+
+    return SimResult(
+        benchmark=w.name,
+        arch=model.name,
+        cycles=cycles,
+        footprint=F,
+        mux=mux,
+        inner_replicas=replicas,
+        outer_util=outer_util,
+        pipe_util=pipe_util,
+        work=w.root.total_work(),
+    )
+
+
+def _timed_root(w: Workload, model: ArchModel, mux: int, replicas: int) -> float:
+    """Walk the tree threading the main-inner replication to the dominant loop."""
+    main = _main_inner(w)
+
+    def rec(l: Loop) -> float:
+        child_t = sum(rec(c) for c in l.children)
+        if l.is_innermost:
+            r = replicas if l is main else 1
+            if l.pipelineable:
+                ii = max(l.ii_min, model.ii_base) * mux + _branch_pipelined(l.branch, model)
+                return l.depth + ii * max(math.ceil(l.trip / r) - 1, 0)
+            # Partially pipelined: every iteration exposes its critical path,
+            # one control transfer, and the branch-resolution cost.
+            per_iter = (
+                l.depth
+                + _ctrl_transfer(model)
+                + _branch_serial(l.branch, model)
+                + (model.ii_base - 1)  # per-firing config (dataflow tokens)
+                + 2 * (mux - 1)
+                + (model.config_switch if model.serial_reconfig else 0)
+            )
+            return (l.trip / r if l is main and _replicable(w, l) else l.trip) * per_iter
+        t_body = (
+            l.depth + _branch_serial(l.branch, model) + 2 * (mux - 1)
+            if (l.ops or l.branch)
+            else 0.0
+        )
+        if model.overlap_outer:
+            # Control FIFOs: outer-BB control is pre-collected; the inner
+            # pipeline re-initiates without waiting on the outer BB.
+            per_iter = max(t_body, child_t) + model.ctrl_delay
+        else:
+            per_iter = t_body + _ctrl_transfer(model) + child_t
+            if model.ctrl_transport == "ccu":
+                per_iter += model.config_switch  # CCU re-issues inner config
+            elif model.pe_model == "von_neumann" and mux > 1:
+                per_iter += model.config_switch  # reconfig between folds
+        return l.trip * per_iter
+
+    return rec(w.root)

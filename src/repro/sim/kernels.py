@@ -1,0 +1,247 @@
+"""The paper's 13 evaluation benchmarks (Table 5) as Workload loop trees.
+
+Loop/branch structure follows Table 1's qualitative classification; op and
+depth counts come from the kernels' innermost-loop DFGs (MachSuite / MiBench
+/ HosNa sources); trip counts are the exact Table-5 data sizes.
+
+  benchmark        data size                  control flow (Table 1)
+  Merge Sort       1024                       nested innermost branches, imperfect nest
+  FFT              1024 points                innermost branch, imperfect nest (II=2)
+  Viterbi          64 st / 140 obs / 64 tok   imperfect nest (II=2)
+  NW               128x128                    nested innermost branches, nest
+  Hough Transform  120x180                    sub-inner branch, imperfect nest
+  CRC              64 bytes                   innermost branch, serial loops
+  ADPCM Encode     2000 bytes                 serial branches
+  SC Decode        2048 channels              innermost branch, imperfect nest + serial
+  LDPC Decode      20 iters x 128             nested branches, imperfect nest + serial
+  GEMM             64x64                      imperfect nest (no branch)
+  Conv-1d          16384                      single loop (non-intensive)
+  Sigmoid          2048                       single loop (non-intensive)
+  Gray Processing  16384                      single loop (non-intensive)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.sim.workload import Branch, Loop, Workload
+
+# ---------------------------------------------------------------------------
+# intensive control flow benchmarks
+# ---------------------------------------------------------------------------
+
+merge_sort = Workload(
+    "merge-sort",
+    # log2(1024) = 10 merge passes; each pass streams 1024 elements through a
+    # divergent compare-select with nested boundary checks.  The merge pointer
+    # advance is loop-carried (ii_min 2) and passes are serial.
+    Loop(
+        "pass", trip=10, ops=3, depth=4, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "merge", trip=1024, ops=2, depth=9, ii_min=2,
+                branch=Branch(taken_ops=3, not_taken_ops=3, p_taken=0.5, nested=1),
+                pipelineable=False, parallel=False,
+            ),
+        ),
+    ),
+)
+
+fft = Workload(
+    "fft",
+    # 10 butterfly stages; 512 butterflies per stage.  Twiddle-index logic is
+    # an innermost branch; the butterfly feeds itself across strides, limiting
+    # the practical pipeline to II=2 (paper Fig. 15: 33% utilization).
+    Loop(
+        "stage", trip=10, ops=3, depth=4, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "butterfly", trip=512, ops=6, depth=6, ii_min=2,
+                branch=Branch(taken_ops=1, not_taken_ops=1, p_taken=0.5),
+                pipelineable=True, parallel=True,
+            ),
+        ),
+    ),
+)
+
+viterbi = Workload(
+    "viterbi",
+    # 140 observations x 64 states x 64 predecessor states; the inner
+    # add-compare-select max-reduction is loop-carried (II=2).
+    Loop(
+        "obs", trip=140, ops=1, depth=3, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "state", trip=64, ops=2, depth=4, pipelineable=False, parallel=True,
+                children=(
+                    Loop(
+                        "prev", trip=64, ops=2, depth=5, ii_min=2,
+                        branch=Branch(taken_ops=2, not_taken_ops=2, p_taken=0.5),
+                        pipelineable=True, parallel=False,
+                    ),
+                ),
+            ),
+        ),
+    ),
+)
+
+nw = Workload(
+    "nw",
+    # Needleman-Wunsch 128x128 DP; the cell update picks max of three
+    # candidates (nested branches); anti-diagonal dependence gives II=2.
+    Loop(
+        "row", trip=128, ops=2, depth=3, pipelineable=False, parallel=True,
+        children=(
+            Loop(
+                "col", trip=128, ops=4, depth=7, ii_min=2,
+                branch=Branch(taken_ops=3, not_taken_ops=2, p_taken=0.5, nested=1),
+                pipelineable=True, parallel=False,
+            ),
+        ),
+    ),
+)
+
+hough = Workload(
+    "hough-transform",
+    # 120x180 pixels; the edge threshold is the sub-inner branch; edge pixels
+    # vote across 180 theta bins (independent -> replicable pipeline).
+    Loop(
+        "pixel", trip=21_600, ops=2, depth=4,
+        branch=Branch(taken_ops=2, not_taken_ops=1, p_taken=0.25),
+        pipelineable=False, parallel=True,
+        children=(
+            Loop(
+                "theta", trip=180, ops=2, depth=5, ii_min=2,
+                pipelineable=True, parallel=True,
+            ),
+        ),
+    ),
+)
+
+crc = Workload(
+    "crc",
+    # 64 input bytes x 8 bits; the polynomial-xor branch depends on the MSB of
+    # the running remainder -> fully serial (no pipelining).
+    Loop(
+        "byte", trip=64, ops=2, depth=3, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "bit", trip=8, ops=3, depth=7,
+                branch=Branch(taken_ops=2, not_taken_ops=1, p_taken=0.5),
+                pipelineable=False, parallel=False,
+            ),
+        ),
+    ),
+)
+
+adpcm = Workload(
+    "adpcm",
+    # 2000 samples; step-size adaptation is a chain of serial branches on the
+    # loop-carried predictor state -> serial.
+    Loop(
+        "sample", trip=2000, ops=8, depth=12,
+        branch=Branch(taken_ops=4, not_taken_ops=3, p_taken=0.5, nested=1),
+        pipelineable=False, parallel=False,
+    ),
+)
+
+sc_decode = Workload(
+    "sc-decode",
+    # Polar successive-cancellation, 2048 channels: 11 serial tree stages;
+    # within a stage the f/g node updates (innermost branch) are independent.
+    Loop(
+        "stage", trip=11, ops=3, depth=4, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "node", trip=1024, ops=2, depth=5, ii_min=1,
+                branch=Branch(taken_ops=1, not_taken_ops=1, p_taken=0.5),
+                pipelineable=True, parallel=True,
+            ),
+        ),
+    ),
+)
+
+ldpc = Workload(
+    "ldpc",
+    # 20 decoding iterations (serial); 128 check nodes; 6-edge min-sum update
+    # with nested compare branches.  Inter-iteration dependences limit
+    # replication (paper: LDPC gains are bounded by loop-carried deps).
+    Loop(
+        "iter", trip=20, ops=2, depth=3, pipelineable=False, parallel=False,
+        children=(
+            Loop(
+                "check", trip=128, ops=3, depth=4, pipelineable=False, parallel=False,
+                children=(
+                    Loop(
+                        "edge", trip=6, ops=5, depth=5, ii_min=1,
+                        branch=Branch(taken_ops=3, not_taken_ops=2, p_taken=0.5, nested=1),
+                        pipelineable=True, parallel=False,
+                    ),
+                ),
+            ),
+        ),
+    ),
+)
+
+gemm = Workload(
+    "gemm",
+    # 64x64x64 blocked matmul: classic imperfect nest (C-tile init/store in
+    # the outer bodies), branch-free, fully parallel inner pipeline.
+    Loop(
+        "i", trip=64, ops=1, depth=3, pipelineable=False, parallel=True,
+        children=(
+            Loop(
+                "j", trip=64, ops=2, depth=3, pipelineable=False, parallel=True,
+                children=(
+                    Loop(
+                        "k", trip=64, ops=2, depth=4, ii_min=1,
+                        pipelineable=True, parallel=True,
+                    ),
+                ),
+            ),
+        ),
+    ),
+)
+
+# ---------------------------------------------------------------------------
+# non-intensive (single-loop) benchmarks — the fairness controls of Fig. 17
+# ---------------------------------------------------------------------------
+
+conv1d = Workload(
+    "conv-1d",
+    Loop("i", trip=16_384, ops=6, depth=5, ii_min=1, pipelineable=True, parallel=True),
+    intensive=False,
+)
+
+sigmoid = Workload(
+    "sigmoid",
+    Loop("i", trip=2048, ops=8, depth=7, ii_min=1, pipelineable=True, parallel=True),
+    intensive=False,
+)
+
+gray = Workload(
+    "gray-processing",
+    Loop("i", trip=16_384, ops=4, depth=4, ii_min=1, pipelineable=True, parallel=True),
+    intensive=False,
+)
+
+
+BENCHMARKS: Dict[str, Workload] = {
+    w.name: w
+    for w in [
+        merge_sort, fft, viterbi, nw, hough, crc, adpcm, sc_decode, ldpc, gemm,
+        conv1d, sigmoid, gray,
+    ]
+}
+
+INTENSIVE = [n for n, w in BENCHMARKS.items() if w.intensive]
+NON_INTENSIVE = [n for n, w in BENCHMARKS.items() if not w.intensive]
+
+# Multi-layer nested loop benchmarks whose innermost loop pipelines (Fig. 15's
+# selection criterion).
+NESTED_PIPELINED = ["fft", "viterbi", "nw", "hough-transform", "sc-decode", "ldpc", "gemm"]
+
+
+def workload(name: str) -> Workload:
+    if name not in BENCHMARKS:
+        raise KeyError(f"unknown benchmark {name!r}; known: {sorted(BENCHMARKS)}")
+    return BENCHMARKS[name]

@@ -1,0 +1,161 @@
+"""CS-Benes control network model (paper §4.1, Fig. 6/13, Table 6).
+
+The control network is a Benes rearrangeable non-blocking permutation network
+augmented with a Consecutive-Spreading (CS) broadcast stage.  This module
+models its structure (stage/switch counts), synthesis behaviour (Fig. 13:
+combinational delay vs. clock target => pipelined network latency), and area
+(Table 6: the 11.5% network-to-fabric ratio), with constants calibrated to
+the paper's 28nm synthesis numbers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+# -- 28nm calibration constants ----------------------------------------------
+# A 16-endpoint CS-Benes control network synthesizes to 0.0022 mm^2 (Table 4).
+SWITCH_AREA_MM2 = 2.5e-5       # one 2x2 switch incl. config bit + wiring share
+SWITCH_DELAY_NS = 0.16         # combinational delay through one switch stage
+WIRE_DELAY_NS = 0.05           # inter-stage wire delay
+CTRL_WIDTH_BITS = 16           # instruction-address control words (not data!)
+
+# Data-network calibration (32-bit words, 4x4 mesh): Table 4's 0.0063 mm^2
+# over 2*4*3 + 2*4 = 32 bidirectional mesh + edge-I/O links.
+DATA_NOC_AREA_PER_LINK_MM2 = 1.97e-4
+MEM_XCONNECT_AREA_MM2 = 0.003
+
+
+def benes_stages(n: int) -> int:
+    """Benes(N): 2*log2(N) - 1 switch stages."""
+    if n < 2 or n & (n - 1):
+        raise ValueError("Benes network size must be a power of two >= 2")
+    return 2 * int(math.log2(n)) - 1
+
+
+def cs_stages(n: int) -> int:
+    """Consecutive-Spreading broadcast stage count: log2(N)."""
+    return int(math.log2(n))
+
+
+def total_stages(n: int) -> int:
+    return benes_stages(n) + cs_stages(n)
+
+
+def switch_count(n: int) -> int:
+    """2x2 switches: N/2 per stage across Benes + CS stages."""
+    return (n // 2) * total_stages(n)
+
+
+def control_network_area(n: int) -> float:
+    """mm^2 at 28nm for an N-endpoint CS-Benes control network."""
+    return switch_count(n) * SWITCH_AREA_MM2
+
+
+def crossbar_area(n: int) -> float:
+    """The rejected alternative: full crossbar crosspoint count x switch area."""
+    return n * n * SWITCH_AREA_MM2
+
+
+def combinational_delay_ns(n: int) -> float:
+    s = total_stages(n)
+    return s * SWITCH_DELAY_NS + (s - 1) * WIRE_DELAY_NS
+
+
+def network_latency_cycles(n: int, freq_mhz: float) -> int:
+    """Fig. 13: pipeline registers are inserted to meet the clock target, so
+    latency (cycles) = ceil(combinational delay / clock period)."""
+    period_ns = 1e3 / freq_mhz
+    return max(1, math.ceil(combinational_delay_ns(n) / period_ns))
+
+
+def scaling_table(
+    sizes: Tuple[int, ...] = (8, 16, 32, 64, 128),
+    freqs_mhz: Tuple[float, ...] = (250.0, 500.0, 1000.0, 2000.0),
+) -> List[Dict[str, float]]:
+    """Fig. 13 reproduction: stages / delay / critical path across sizes+clocks."""
+    rows = []
+    for n in sizes:
+        for f in freqs_mhz:
+            rows.append(
+                {
+                    "endpoints": n,
+                    "stages": total_stages(n),
+                    "freq_mhz": f,
+                    "comb_delay_ns": round(combinational_delay_ns(n), 3),
+                    "latency_cycles": network_latency_cycles(n, f),
+                    "critical_path_ns": round(
+                        min(combinational_delay_ns(n), 1e3 / f), 3
+                    ),
+                }
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 6: network area vs. state-of-the-art (normalized 28nm, 32-bit, 4x4)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetworkArea:
+    name: str
+    pe_area: float
+    network_area: float
+
+    @property
+    def fabric_area(self) -> float:
+        return self.pe_area + self.network_area
+
+    @property
+    def network_ratio(self) -> float:
+        return self.network_area / self.fabric_area
+
+
+# Published normalized areas of the comparison architectures (paper Table 6).
+PAPER_TABLE6: Dict[str, NetworkArea] = {
+    "softbrain": NetworkArea("softbrain", 0.0041, 0.0130),
+    "revel": NetworkArea("revel", 0.022, 0.028),
+    "dyser": NetworkArea("dyser", 0.058, 0.052),
+    "plasticine": NetworkArea("plasticine", 0.161, 0.294),
+    "spu": NetworkArea("spu", 0.050, 0.045),
+    "marionette": NetworkArea("marionette", 0.0908, 0.0118),
+}
+
+
+def marionette_network_area_model(n_pes: int = 16) -> Dict[str, float]:
+    """Analytic model of Marionette's network area: data mesh + memory
+    interconnect + CS-Benes control network.  For the 4x4 fabric this should
+    land on Table 6's 0.0118 mm^2 (the 11.5% ratio)."""
+    side = int(math.isqrt(n_pes))
+    mesh_links = 2 * side * (side - 1) + 2 * side  # bidirectional mesh + edge I/O
+    data = mesh_links * DATA_NOC_AREA_PER_LINK_MM2
+    ctrl = control_network_area(n_pes)
+    mem = MEM_XCONNECT_AREA_MM2 * (n_pes / 16)
+    return {
+        "data_network": data,
+        "control_network": ctrl,
+        "memory_interconnect": mem,
+        "total": data + ctrl + mem,
+    }
+
+
+def table6_rows() -> List[Dict[str, object]]:
+    """Model-vs-paper rows for the Table 6 benchmark."""
+    model_total = marionette_network_area_model()["total"]
+    rows: List[Dict[str, object]] = []
+    for name, a in PAPER_TABLE6.items():
+        net = model_total if name == "marionette" else a.network_area
+        fabric = a.pe_area + net
+        rows.append(
+            {
+                "arch": name,
+                "pe_area_mm2": a.pe_area,
+                "network_area_mm2": round(net, 4),
+                "fabric_area_mm2": round(fabric, 4),
+                "network_ratio": round(net / fabric, 3),
+                "paper_network_area_mm2": a.network_area,
+                "paper_ratio": round(a.network_ratio, 3),
+            }
+        )
+    return rows

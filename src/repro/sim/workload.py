@@ -1,0 +1,132 @@
+"""Benchmark workload representation: loop trees with branch structure.
+
+A Workload is a tree of Loops; each Loop iteration executes its body DFG
+(``ops``/``depth``), optional divergent Branch paths, and invokes its child
+loops.  Trip counts come from the paper's Table-5 data sizes, op counts from
+the benchmark kernels' inner-loop DFGs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Branch:
+    """A divergent conditional inside a loop body.
+
+    taken_ops / not_taken_ops: DFG size of the two target BBs.
+    p_taken: dynamic probability of the taken path.
+    nested: extra nesting depth of branches (nested branches add control
+    transfers per resolution).
+    """
+
+    taken_ops: int
+    not_taken_ops: int
+    p_taken: float = 0.5
+    nested: int = 0
+
+    @property
+    def mean_ops(self) -> float:
+        return self.p_taken * self.taken_ops + (1 - self.p_taken) * self.not_taken_ops
+
+    @property
+    def both_ops(self) -> int:
+        return self.taken_ops + self.not_taken_ops
+
+
+@dataclass(frozen=True)
+class Loop:
+    """One loop level.
+
+    trip          iterations per parent invocation
+    ops           non-branch body DFG ops executed every iteration at this level
+    depth         body DFG critical-path depth
+    branch        optional divergent branch in the body
+    children      nested loops invoked once per iteration (imperfect if ops>0)
+    ii_min        data-dependence-limited initiation interval
+    pipelineable  iterations can overlap (False => loop-carried serial body)
+    parallel      iterations independent => pipeline replication is legal
+    """
+
+    name: str
+    trip: int
+    ops: int = 0
+    depth: int = 4
+    branch: Optional[Branch] = None
+    children: tuple = ()
+    ii_min: int = 1
+    pipelineable: bool = True
+    parallel: bool = True
+
+    @property
+    def is_innermost(self) -> bool:
+        return not self.children
+
+    def body_mean_ops(self) -> float:
+        b = self.branch.mean_ops if self.branch else 0.0
+        return self.ops + b
+
+    def total_iterations(self) -> int:
+        """Dynamic iterations of the innermost descendants."""
+        if self.is_innermost:
+            return self.trip
+        return self.trip * sum(c.total_iterations() for c in self.children)
+
+    def total_work(self) -> float:
+        w = self.trip * self.body_mean_ops()
+        for c in self.children:
+            w += self.trip * c.total_work()
+        return w
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A benchmark: its loop tree + classification flags used in the paper.
+
+    intensive: counted in the "intensive control flow" geomeans (Fig. 17
+    excludes Conv-1d / Sigmoid / Gray from the intensive geomean).
+    """
+
+    name: str
+    root: Loop
+    intensive: bool = True
+
+    def all_loops(self) -> List[Loop]:
+        out: List[Loop] = []
+
+        def rec(l: Loop) -> None:
+            out.append(l)
+            for c in l.children:
+                rec(c)
+
+        rec(self.root)
+        return out
+
+    @property
+    def has_branch(self) -> bool:
+        return any(l.branch is not None for l in self.all_loops())
+
+    @property
+    def nest_depth(self) -> int:
+        def rec(l: Loop) -> int:
+            return 1 + max((rec(c) for c in l.children), default=0)
+
+        return rec(self.root)
+
+    def branch_op_fraction(self) -> float:
+        """Fraction of dynamic ops that live under divergent branches —
+        the paper's "proportion of operators under the branch" (Fig. 11)."""
+        under, total = 0.0, 0.0
+
+        def rec(l: Loop, iters: float) -> None:
+            nonlocal under, total
+            it = iters * l.trip
+            total += it * l.body_mean_ops()
+            if l.branch:
+                under += it * l.branch.mean_ops
+            for c in l.children:
+                rec(c, it)
+
+        rec(self.root, 1.0)
+        return under / total if total else 0.0

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a reduced
+config of the same family and runs one forward/train step on CPU with
+finite loss and correct shapes (spec deliverable f)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import cells_for, get_config, get_smoke_config, list_archs
+from repro.models.model import Model, input_specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = list_archs()
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = (
+        jnp.ones((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        if cfg.frontend
+        else None
+    )
+    loss, metrics = jax.jit(lambda p, t, f: m.forward_train(p, t, f))(params, toks, fe)
+    assert jnp.isfinite(loss), metrics
+    assert loss.shape == ()
+    # gradients flow and are finite
+    g = jax.grad(lambda p: m.forward_train(p, toks, fe)[0])(params)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = (
+        jnp.ones((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        if cfg.frontend
+        else None
+    )
+    cache = m.init_cache(B, max_len=S + 8)
+    logits, cache = m.prefill(params, toks, cache, fe)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = m.decode_step(params, cache, nxt, jnp.int32(S))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all()
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["starcoder2-3b", "qwen3-moe-235b-a22b", "recurrentgemma-2b", "mamba2-2.7b", "musicgen-large"],
+)
+def test_prefill_then_decode_matches_full_prefill(arch):
+    """Teacher-forced consistency: prefill(t[:k]) + decode over t[k:] must
+    produce the same final-position logits as prefill(t) — catches cache
+    indexing, rolling-window, and recurrent-state bugs."""
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S, k = 2, 24, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = (
+        jnp.ones((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        if cfg.frontend
+        else None
+    )
+
+    full_logits, _ = m.prefill(params, toks, m.init_cache(B, S), fe)
+
+    logits, cache = m.prefill(params, toks[:, :k], m.init_cache(B, S), fe)
+    for i in range(k, S):
+        logits, cache = m.decode_step(params, cache, toks[:, i], jnp.int32(i))
+    import numpy as np
+
+    np.testing.assert_allclose(
+        np.asarray(full_logits), np.asarray(logits), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_input_specs_cover_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for cell in cells_for(cfg):
+            specs = input_specs(cfg, cell)
+            assert "tokens" in specs
+            if cell.step == "decode":
+                assert "cache" in specs
+            if cfg.frontend and cell.step in ("train", "prefill"):
+                assert "frontend" in specs
+
+
+def test_long_500k_applicability():
+    """Full-attention archs skip long_500k; SSM/hybrid run it (spec rule)."""
+    runs = {a: any(c.name == "long_500k" for c in cells_for(get_config(a))) for a in ARCHS}
+    assert runs["mamba2-2.7b"] and runs["recurrentgemma-2b"]
+    for a in ARCHS:
+        if a not in ("mamba2-2.7b", "recurrentgemma-2b"):
+            assert not runs[a], a
+
+
+def test_moe_route_modes_agree_with_ample_capacity():
+    """dense (predication), sync (coupled) and lookahead (proactive) are the
+    same function when routed from the same source and nothing drops."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.models import moe as moe_mod
+
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.5
+
+    y_sync, _ = moe_mod.moe_layer(x, None, p, dataclasses.replace(cfg, route_mode="sync"))
+    y_dense, _ = moe_mod.moe_layer(x, None, p, dataclasses.replace(cfg, route_mode="dense"))
+    # lookahead with route_src == x_ffn reduces to sync
+    y_look, _ = moe_mod.moe_layer(x, x, p, dataclasses.replace(cfg, route_mode="lookahead"))
+    np.testing.assert_allclose(np.asarray(y_sync), np.asarray(y_look), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_sync), np.asarray(y_dense), rtol=1e-3, atol=1e-4)

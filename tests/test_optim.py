@@ -1,0 +1,64 @@
+"""Optimizer unit tests: descent, state shapes (adafactor factoring), clip."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule, global_norm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quad_problem():
+    target = {"a": jnp.asarray([[1.0, -2.0], [0.5, 3.0]]), "b": jnp.asarray([0.1, -0.4, 2.0])}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss(p):
+        return sum(jnp.sum((x - t) ** 2) for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    return params, loss
+
+
+@pytest.mark.parametrize("make", [lambda: adamw(1e-1), lambda: adafactor(5e-1)])
+def test_optimizers_descend(make):
+    params, loss = _quad_problem()
+    opt = make()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for step in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.int32(step))
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 128)), "b": jnp.zeros((128,))}
+    st = adafactor(1e-2).init(params)
+    assert set(st["w"]) == {"vr", "vc"}
+    assert st["w"]["vr"].shape == (64,) and st["w"]["vc"].shape == (128,)
+    assert set(st["b"]) == {"v"}
+    adam_st = adamw(1e-2).init(params)
+    factored = sum(x.size for x in jax.tree.leaves(st))
+    full = sum(x.size for x in jax.tree.leaves(adam_st))
+    assert factored < 0.1 * full  # the 235B/400B memory argument
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((5,), -4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(float(global_norm(g)), rel=1e-6)
+    small = {"a": jnp.asarray([0.1])}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.1])
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.int32(0))) < 1e-3 * 0.2
+    assert float(s(jnp.int32(10))) == pytest.approx(1e-3, rel=0.1)
+    assert float(s(jnp.int32(99))) == pytest.approx(1e-4, rel=0.2)
+    assert float(s(jnp.int32(50))) < 1e-3

@@ -1,0 +1,105 @@
+"""Runtime: fault-tolerant trainer (failure injection -> restart ->
+deterministic replay), straggler detector policy, data-stream determinism."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.runtime.straggler import Mitigation, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# straggler detector (pure policy; synthetic traces)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_quiet_on_healthy_fleet():
+    det = StragglerDetector(n_workers=8, warmup=3)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        v = det.observe(1.0 + 0.05 * rng.standard_normal(8))
+        assert v == {}
+
+
+def test_straggler_redispatch_then_exclude():
+    det = StragglerDetector(n_workers=8, warmup=3, patience=3, threshold=2.0)
+    verdicts = []
+    for step in range(20):
+        t = np.ones(8)
+        if step >= 8:
+            t[5] = 6.0  # worker 5 goes persistently slow
+        verdicts.append(det.observe(t))
+    # first flagged steps: redispatch; after patience: exclude
+    actions = [v.get(5) for v in verdicts if v]
+    assert actions[0] == Mitigation.REDISPATCH
+    assert Mitigation.EXCLUDE in actions
+    # exclusion persists
+    assert verdicts[-1][5] == Mitigation.EXCLUDE
+
+
+def test_straggler_transient_recovers():
+    det = StragglerDetector(n_workers=4, warmup=2, patience=4, threshold=2.0)
+    for step in range(30):
+        t = np.ones(4)
+        if step == 10:
+            t[2] = 5.0  # one-step hiccup
+        v = det.observe(t)
+        assert v.get(2) != Mitigation.EXCLUDE
+    assert det.observe(np.ones(4)) == {}
+
+
+def test_straggler_shape_validation():
+    det = StragglerDetector(n_workers=4)
+    with pytest.raises(ValueError):
+        det.observe(np.ones(5))
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end (host devices, small model)
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_failure_restart_determinism(tmp_path):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeCell
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+    cfg = get_smoke_config("starcoder2-3b")
+    cell = ShapeCell("smoke", seq_len=32, global_batch=4, step="train")
+    mesh = make_host_mesh(1, 1)
+    tcfg = TrainerConfig(
+        num_steps=10, checkpoint_every=4, checkpoint_dir=str(tmp_path), log_every=100
+    )
+    tr = Trainer(cfg, cell, mesh, tcfg, failure_injector=FailureInjector(fail_at=[6]))
+    out = tr.run()
+    assert out["final_step"] == 10
+    assert out["restarts"] == 1
+    # deterministic replay: the re-executed step 5 reproduces its loss exactly
+    per_step = {}
+    for m in out["metrics"]:
+        per_step.setdefault(m["step"], []).append(m["loss"])
+    replayed = {s: ls for s, ls in per_step.items() if len(ls) > 1}
+    assert replayed, "failure should force replay of some steps"
+    for s, ls in replayed.items():
+        assert len(set(round(x, 5) for x in ls)) == 1, f"non-deterministic replay at {s}"
+
+
+def test_markov_dataset_determinism_and_structure():
+    from repro.data import MarkovLMDataset
+
+    ds = MarkovLMDataset(vocab_size=64, seq_len=128, seed=3)
+    a = ds.batch(5, 4)["tokens"]
+    b = ds.batch(5, 4)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = ds.batch(6, 4)["tokens"]
+    assert (a != c).any()
+    # learnable structure: successor entropy far below uniform
+    trans = {}
+    flat = a.reshape(-1)
+    for x, y in zip(flat[:-1], flat[1:]):
+        trans.setdefault(int(x), []).append(int(y))
+    avg_unique = np.mean([len(set(v)) for v in trans.values() if len(v) > 3])
+    assert avg_unique < 16  # vocab 64, branching 4 + jumps

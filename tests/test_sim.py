@@ -1,0 +1,124 @@
+"""Faithful-simulator checks: reproduction headlines vs the paper's stated
+numbers (tolerances recorded in EXPERIMENTS.md), network model calibration."""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.sim import ARCHS, BENCHMARKS, simulate
+from repro.sim.kernels import INTENSIVE, NON_INTENSIVE
+from repro.sim.network import (
+    benes_stages,
+    combinational_delay_ns,
+    control_network_area,
+    crossbar_area,
+    marionette_network_area_model,
+    network_latency_cycles,
+    table6_rows,
+    total_stages,
+)
+
+
+def geo(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _speedups(num, den, subset):
+    return [
+        simulate(BENCHMARKS[n], ARCHS[num]).cycles / simulate(BENCHMARKS[n], ARCHS[den]).cycles
+        for n in subset
+    ]
+
+
+ALL = list(BENCHMARKS)
+
+
+def test_fig11_proactive_configuration():
+    vs_vn = _speedups("von-neumann-pe", "marionette-pe", ALL)
+    vs_df = _speedups("dataflow-pe", "marionette-pe", ALL)
+    assert geo(vs_vn) == pytest.approx(1.18, rel=0.10)   # paper: 1.18x
+    assert geo(vs_df) == pytest.approx(1.33, rel=0.15)   # paper: 1.33x
+    # paper: max vs vN is Merge Sort at 1.45x
+    assert ALL[vs_vn.index(max(vs_vn))] == "merge-sort"
+    assert max(vs_vn) == pytest.approx(1.45, rel=0.05)
+
+
+def test_fig12_control_network():
+    sp = _speedups("marionette-pe", "marionette-net", ALL)
+    assert geo(sp) == pytest.approx(1.14, rel=0.10)      # paper: 1.14x
+    assert ALL[sp.index(max(sp))] == "crc"               # paper: max @ CRC
+    assert max(sp) == pytest.approx(1.36, rel=0.10)
+
+
+def test_fig14_agile_assignment():
+    sp = _speedups("marionette-net", "marionette", ALL)
+    mean = sum(sp) / len(sp)
+    assert mean == pytest.approx(2.03, rel=0.20)         # paper: 2.03x avg
+    assert max(sp) == pytest.approx(5.99, rel=0.15)      # paper: up to 5.99x
+
+
+def test_fig17_sota_geomeans():
+    for base, target, tol in [
+        ("softbrain", 2.88, 0.15),
+        ("tia", 3.38, 0.20),
+        ("revel", 1.55, 0.15),
+        ("riptide", 2.66, 0.15),
+    ]:
+        sp = _speedups(base, "marionette", INTENSIVE)
+        assert geo(sp) == pytest.approx(target, rel=tol), base
+
+
+def test_fig17_non_intensive_not_deteriorated():
+    """Marionette's features must not hurt the simple single-loop kernels;
+    all architectures except TIA perform identically there."""
+    for n in NON_INTENSIVE:
+        w = BENCHMARKS[n]
+        m = simulate(w, ARCHS["marionette"]).cycles
+        for base in ("softbrain", "revel", "riptide", "von-neumann-pe"):
+            assert simulate(w, ARCHS[base]).cycles == pytest.approx(m, rel=0.05)
+        assert simulate(w, ARCHS["tia"]).cycles > 1.5 * m  # longer pipeline II
+
+
+def test_marionette_never_slower():
+    for n in ALL:
+        w = BENCHMARKS[n]
+        m = simulate(w, ARCHS["marionette"]).cycles
+        for base in ("softbrain", "tia", "riptide", "von-neumann-pe", "dataflow-pe"):
+            assert m <= simulate(w, ARCHS[base]).cycles * 1.001
+
+
+# ---------------------------------------------------------------------------
+# control network model
+# ---------------------------------------------------------------------------
+
+
+def test_network_structure():
+    assert benes_stages(16) == 7
+    assert total_stages(16) == 11
+    with pytest.raises(ValueError):
+        benes_stages(12)
+
+
+def test_network_area_calibration():
+    # Table 4: 16-PE control network = 0.0022 mm^2
+    assert control_network_area(16) == pytest.approx(0.0022, rel=0.02)
+    # Benes beats crossbar asymptotically
+    assert control_network_area(128) < crossbar_area(128)
+
+
+def test_table6_marionette_ratio():
+    rows = {r["arch"]: r for r in table6_rows()}
+    m = rows["marionette"]
+    assert m["network_ratio"] == pytest.approx(0.115, abs=0.01)  # paper: 11.5%
+    # every competitor spends a larger fabric share on network
+    for name, r in rows.items():
+        if name != "marionette":
+            assert r["network_ratio"] > m["network_ratio"]
+
+
+def test_fig13_latency_scaling():
+    # latency grows with size, shrinks-or-equal with slower clocks
+    assert network_latency_cycles(128, 1000) >= network_latency_cycles(16, 1000)
+    assert network_latency_cycles(16, 2000) >= network_latency_cycles(16, 500)
+    assert combinational_delay_ns(64) > combinational_delay_ns(16)

@@ -1,0 +1,89 @@
+"""Property-based invariants of the cycle-level timing engine (hypothesis):
+the simulator must behave like a performance model, not just fit the paper's
+numbers."""
+from __future__ import annotations
+
+import dataclasses
+
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.archs import ARCHS, ArchModel, marionette
+from repro.sim.engine import simulate, workload_footprint
+from repro.sim.kernels import BENCHMARKS
+from repro.sim.workload import Branch, Loop, Workload
+
+
+@st.composite
+def workloads(draw):
+    depth = draw(st.integers(1, 3))
+
+    def make(level):
+        branch = None
+        if draw(st.booleans()):
+            branch = Branch(
+                taken_ops=draw(st.integers(1, 4)),
+                not_taken_ops=draw(st.integers(1, 4)),
+                p_taken=draw(st.floats(0.1, 0.9)),
+                nested=draw(st.integers(0, 2)),
+            )
+        children = (make(level + 1),) if level < depth else ()
+        return Loop(
+            name=f"l{level}_{draw(st.integers(0, 999))}",
+            trip=draw(st.integers(1, 64)),
+            ops=draw(st.integers(1, 8)),
+            depth=draw(st.integers(1, 8)),
+            branch=branch,
+            children=children,
+            ii_min=draw(st.integers(1, 2)),
+            pipelineable=draw(st.booleans()),
+            parallel=draw(st.booleans()),
+        )
+
+    return Workload("synthetic", make(0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(workloads())
+def test_cycles_positive_and_bounded_below_by_critical_path(w):
+    for arch in ARCHS.values():
+        r = simulate(w, arch)
+        assert r.cycles > 0
+        # a workload can never finish faster than one innermost iteration
+        inner = [l for l in w.all_loops() if l.is_innermost][0]
+        assert r.cycles >= inner.depth
+
+
+@settings(max_examples=50, deadline=None)
+@given(workloads())
+def test_more_pes_never_slower_for_marionette(w):
+    small = dataclasses.replace(marionette, n_pes=16)
+    big = dataclasses.replace(marionette, n_pes=64)
+    assert simulate(w, big).cycles <= simulate(w, small).cycles * 1.0 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(workloads())
+def test_proactive_never_loses_to_coupled_baselines(w):
+    """The Marionette PE's branch/config handling strictly dominates the
+    von-Neumann and dataflow handling under identical scheduling."""
+    m = simulate(w, ARCHS["marionette-pe"]).cycles
+    assert m <= simulate(w, ARCHS["von-neumann-pe"]).cycles + 1e-9
+    assert m <= simulate(w, ARCHS["dataflow-pe"]).cycles + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(workloads())
+def test_benes_transport_never_loses_to_data_noc(w):
+    assert (
+        simulate(w, ARCHS["marionette-net"]).cycles
+        <= simulate(w, ARCHS["marionette-pe"]).cycles + 1e-9
+    )
+
+
+def test_footprint_monotone_in_branch_style():
+    """Predication maps both branch lanes; single-lane styles map one."""
+    for name, w in BENCHMARKS.items():
+        if w.has_branch:
+            assert workload_footprint(w, ARCHS["von-neumann-pe"]) >= workload_footprint(
+                w, ARCHS["marionette-pe"]
+            )
