@@ -27,7 +27,10 @@ def run() -> list:
         rs = x if mode == "lookahead" else None
         fn = jax.jit(lambda xx, m=c, r=rs: moe_mod.moe_layer(xx, r if r is not None else None, p, m)[0])
         compiled = fn.lower(x).compile()
-        flops = compiled.cost_analysis().get("flops", 0.0)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict]
+            cost = cost[0]
+        flops = cost.get("flops", 0.0)
         fn(x)  # warm
         t0 = time.perf_counter()
         for _ in range(10):

@@ -3,8 +3,12 @@ the control-flow plane's lookahead routing, reporting per-phase latency and
 the control-plane byte share.
 
     PYTHONPATH=src python examples/serve_moe.py --batch 4 --prompt-len 64 --gen 32
+
+``--fused`` serves through the fused Pallas data plane (kernels/moe_fused;
+interpret-mode off-TPU) instead of the reference dispatch/combine plane.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,9 +23,13 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--fused", action="store_true",
+                    help="use the fused gather->GEMM->scatter MoE data plane")
     args = ap.parse_args()
 
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    if args.fused:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
     model = Model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)

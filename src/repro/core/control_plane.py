@@ -20,6 +20,7 @@ Marionette mapping (paper §3-4):
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -36,7 +37,7 @@ class RouterAux(NamedTuple):
 
 def capacity_for(num_tokens: int, num_experts: int, top_k: int, capacity_factor: float, *, align: int = 8) -> int:
     """Static per-expert capacity C = ceil(cf * T * k / E), aligned up."""
-    raw = int(capacity_factor * num_tokens * top_k / num_experts) + 1
+    raw = math.ceil(capacity_factor * num_tokens * top_k / num_experts)
     return max(align, -(-raw // align) * align)
 
 
@@ -64,7 +65,9 @@ def route_topk(
     aux = RouterAux(
         load_balance_loss=load_balance_loss(probs, top_e),
         router_z_loss=jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
-        fraction_dropped=1.0 - plan.combine_w.astype(bool).mean() if top_k else jnp.float32(0),
+        # dropped == no slot assigned (combine_idx < 0); a legitimately zero
+        # router weight is still a placed assignment, not a drop
+        fraction_dropped=(plan.combine_idx < 0).mean().astype(jnp.float32) if top_k else jnp.float32(0),
     )
     return plan, aux
 
@@ -102,13 +105,22 @@ def make_dispatch_plan(
     disp = jnp.full((E * C + 1,), T, jnp.int32).at[scatter_to].set(tok)[:-1]
     disp_valid = jnp.zeros((E * C + 1,), bool).at[scatter_to].set(valid)[:-1]
 
+    flat_w = weights.reshape(-1).astype(jnp.float32)
     combine_idx = jnp.where(valid, slot, -1).reshape(T, k)
-    combine_w = jnp.where(valid, weights.reshape(-1).astype(jnp.float32), 0.0).reshape(T, k)
+    combine_w = jnp.where(valid, flat_w, 0.0).reshape(T, k)
+    # slot-major weight: the router weight of the assignment occupying each
+    # slot (0 = empty) — the scatter epilogue of the fused combine reads it
+    # from SMEM alongside flat_idx (slot -> source/destination token).
+    slot_w = jnp.zeros((E * C + 1,), jnp.float32).at[scatter_to].set(jnp.where(valid, flat_w, 0.0))[:-1]
     return DispatchPlan(
         dispatch_idx=disp.reshape(E, C),
         dispatch_valid=disp_valid.reshape(E, C),
         combine_idx=combine_idx,
         combine_w=combine_w,
+        flat_idx=disp,
+        slot_w=slot_w,
+        flat_cidx=jnp.where(valid, slot, E * C),
+        flat_cw=combine_w.reshape(-1),
     )
 
 

@@ -10,7 +10,7 @@ paper's 11.5%-area control network becomes a <1% byte-share control channel.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -23,6 +23,18 @@ class DispatchPlan(NamedTuple):
     combine_idx    (T, k) int32   flat slot (e*C + c) per assignment; -1 = dropped
     combine_w      (T, k) f32     router weight per assignment (0 if dropped)
 
+    Flat, SMEM-ready views (emitted once by ``make_dispatch_plan`` so the
+    Pallas kernels can scalar-prefetch them without per-call reshapes — they
+    are the literal control words ridden by the data plane):
+
+    flat_idx       (E*C,) int32   token feeding each flat slot; T = empty slot
+    slot_w         (E*C,) f32     combine weight of the assignment occupying
+                                  each slot (0 = empty) — the slot-major dual
+                                  of ``combine_w``, used by the fused
+                                  down-projection + scatter-combine kernel
+    flat_cidx      (T*k,) int32   flat slot per assignment; E*C = dropped
+    flat_cw        (T*k,) f32     weight per assignment (0 = dropped)
+
     The plan is a pure function of the router decision — it is the
     "instruction address" stream.  ``dispatch``/``combine`` in
     :mod:`repro.core.control_plane` consume it on the data plane.
@@ -32,6 +44,10 @@ class DispatchPlan(NamedTuple):
     dispatch_valid: jnp.ndarray
     combine_idx: jnp.ndarray
     combine_w: jnp.ndarray
+    flat_idx: Optional[jnp.ndarray] = None
+    slot_w: Optional[jnp.ndarray] = None
+    flat_cidx: Optional[jnp.ndarray] = None
+    flat_cw: Optional[jnp.ndarray] = None
 
     @property
     def num_experts(self) -> int:
@@ -42,8 +58,54 @@ class DispatchPlan(NamedTuple):
         return self.dispatch_idx.shape[1]
 
     def control_bytes(self) -> int:
-        """Bytes of control-plane state (the Table-6 analogue numerator)."""
-        return sum(int(x.size) * x.dtype.itemsize for x in self)
+        """Bytes of control-plane state (the Table-6 analogue numerator).
+
+        Counts only the canonical fields — the flat views are duplicate
+        layouts of the same control words, not additional state.
+        """
+        canonical = (self.dispatch_idx, self.dispatch_valid, self.combine_idx, self.combine_w)
+        return sum(int(x.size) * x.dtype.itemsize for x in canonical)
+
+    # -- flat SMEM-ready control words -----------------------------------
+    # Single source of truth for the flat layouts: kernels call these, which
+    # return the precomputed tensors when present and derive them otherwise
+    # (e.g. for plans built by ``_replace`` or loaded from old checkpoints —
+    # ``_replace`` of a 2-D field must null the flat fields, see
+    # ``replace_combine``).
+
+    def flat_dispatch_idx(self) -> jnp.ndarray:
+        """(E*C,) int32 token feeding each slot; T = empty."""
+        if self.flat_idx is not None:
+            return self.flat_idx
+        T = self.combine_idx.shape[0]
+        return jnp.where(self.dispatch_valid, self.dispatch_idx, T).reshape(-1).astype(jnp.int32)
+
+    def flat_combine_words(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """((T*k,) int32 slot per assignment with E*C = dropped, (T*k,) f32 weight)."""
+        if self.flat_cidx is not None and self.flat_cw is not None:
+            return self.flat_cidx, self.flat_cw
+        E, C = self.dispatch_idx.shape
+        cidx = jnp.where(self.combine_idx >= 0, self.combine_idx, E * C).reshape(-1).astype(jnp.int32)
+        return cidx, self.combine_w.reshape(-1).astype(jnp.float32)
+
+    def flat_slot_w(self) -> jnp.ndarray:
+        """(E*C,) f32 combine weight of the assignment occupying each slot."""
+        if self.slot_w is not None:
+            return self.slot_w
+        E, C = self.dispatch_idx.shape
+        cidx, cw = self.flat_combine_words()
+        return jnp.zeros((E * C + 1,), jnp.float32).at[cidx].set(cw)[:-1]
+
+    def replace_combine(self, combine_idx: jnp.ndarray, combine_w: jnp.ndarray) -> "DispatchPlan":
+        """``_replace`` for the combine words that also invalidates the flat
+        views (they would otherwise go stale and be silently preferred)."""
+        return self._replace(
+            combine_idx=combine_idx,
+            combine_w=combine_w,
+            slot_w=None,
+            flat_cidx=None,
+            flat_cw=None,
+        )
 
 
 class StagePlan(NamedTuple):

@@ -6,6 +6,9 @@ oracle used by the allclose test sweeps).
 
   moe_dispatch     plan-driven token permute/combine (control-plane consumer;
                    the CS-Benes permutation+broadcast analogue)
+  moe_fused        fused MoE data plane: plan-steered gather -> grouped GEMM
+                   -> weighted scatter in two launches (no (E, C, d) HBM
+                   round-trips; the default data plane when use_pallas)
   grouped_gemm     per-expert GEMM over dispatched slots (MXU-tiled)
   flash_attention  blocked causal/local attention forward (online softmax)
   rglru_scan       RG-LRU blocked linear recurrence (RecurrentGemma)
@@ -17,3 +20,12 @@ def on_tpu() -> bool:
     import jax
 
     return jax.default_backend() == "tpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """jax-version compat: ``pltpu.CompilerParams`` was ``TPUCompilerParams``
+    in older releases.  All kernels build their compiler params through this."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _gg_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(3) == 0)
@@ -74,7 +76,7 @@ def grouped_gemm_pallas(
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n, k: (e, m, n)),
         out_shape=jax.ShapeDtypeStruct((E, Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -21,9 +21,8 @@ def dispatch(x: jnp.ndarray, plan: DispatchPlan, *, interpret: Optional[bool] = 
     """Gather (T, d) tokens into (E, C, d) expert slots per the plan."""
     T, d = x.shape
     x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
-    idx = jnp.where(plan.dispatch_valid, plan.dispatch_idx, T).reshape(-1).astype(jnp.int32)
     return dispatch_pallas(
-        x_pad, idx,
+        x_pad, plan.flat_dispatch_idx(),
         num_experts=plan.num_experts, capacity=plan.capacity,
         interpret=_resolve(interpret),
     )
@@ -36,7 +35,6 @@ def combine(y_slots: jnp.ndarray, plan: DispatchPlan, *, interpret: Optional[boo
     y_pad = jnp.concatenate(
         [y_slots.reshape(E * C, d), jnp.zeros((1, d), y_slots.dtype)], axis=0
     )
-    cidx = jnp.where(plan.combine_idx >= 0, plan.combine_idx, E * C).reshape(-1).astype(jnp.int32)
-    w = plan.combine_w.reshape(-1).astype(jnp.float32)
+    cidx, w = plan.flat_combine_words()
     out = combine_pallas(y_pad, cidx, w, top_k=k, interpret=_resolve(interpret))
     return out.astype(y_slots.dtype)

@@ -1,0 +1,1 @@
+"""Fused MoE data plane: plan-steered gather -> grouped GEMM -> scatter."""

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused MoE data plane: the unfused
+dispatch -> grouped SwiGLU -> combine composition, expressed over the same
+flat slot-major control words the fused kernels consume."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_swiglu(
+    x: jnp.ndarray,         # (T, d)
+    flat_idx: jnp.ndarray,  # (E*C,) int32, T = empty
+    w_gate: jnp.ndarray,    # (E, d, f)
+    w_up: jnp.ndarray,
+) -> jnp.ndarray:
+    E, d, f = w_gate.shape
+    C = flat_idx.shape[0] // E
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    slots = x_pad[flat_idx].reshape(E, C, d)
+    g = jnp.einsum("ecd,edf->ecf", slots, w_gate.astype(slots.dtype))
+    u = jnp.einsum("ecd,edf->ecf", slots, w_up.astype(slots.dtype))
+    return jax.nn.silu(g) * u
+
+
+def down_combine(
+    h: jnp.ndarray,         # (E, C, f)
+    w_down: jnp.ndarray,    # (E, f, d)
+    flat_idx: jnp.ndarray,  # (E*C,) destination token per slot, T = empty
+    slot_w: jnp.ndarray,    # (E*C,) f32
+    num_tokens: int,
+) -> jnp.ndarray:
+    y_slots = jnp.einsum("ecf,efd->ecd", h, w_down.astype(h.dtype))
+    E, C, d = y_slots.shape
+    y = jnp.zeros((num_tokens + 1, d), jnp.float32)
+    y = y.at[flat_idx].add(slot_w[:, None] * y_slots.reshape(E * C, d).astype(jnp.float32))
+    return y[:num_tokens]
+
+
+def moe_apply(x, flat_idx, slot_w, w_gate, w_up, w_down) -> jnp.ndarray:
+    h = gather_swiglu(x, flat_idx, w_gate, w_up)
+    return down_combine(h, w_down, flat_idx, slot_w, x.shape[0]).astype(x.dtype)

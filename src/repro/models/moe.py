@@ -13,6 +13,16 @@ Three execution strategies map to the paper's taxonomy:
 ``experts_fn`` is injectable so the distributed runtime can substitute the
 all-to-all sharded implementation (:mod:`repro.parallel.moe_parallel`) or the
 Pallas grouped-GEMM kernel without touching the routing semantics.
+
+Two data planes execute a plan:
+
+* the reference plane — ``dispatch`` -> ``experts_fn`` -> ``combine`` (three
+  HBM round-trips of the (E, C, d) slot tensors); always used when a custom
+  ``experts_fn`` is injected.
+* the fused plane (default when ``cfg.use_pallas``) — the plan's flat SMEM
+  control words steer gather -> grouped GEMM -> scatter inside two Pallas
+  launches (:mod:`repro.kernels.moe_fused`); no (E, C, d) tensor ever hits
+  HBM.
 """
 from __future__ import annotations
 
@@ -38,6 +48,11 @@ Params = Dict[str, Any]
 
 # experts_fn(x_slots (E, C, d), expert_params) -> y_slots (E, C, d)
 ExpertsFn = Callable[[jnp.ndarray, Params], jnp.ndarray]
+
+# Largest f32 (T+1, d) block the fused kernels may keep whole in VMEM (gather
+# source + combine accumulator); beyond this the default data plane falls
+# back to the tiled unfused composition.  Conservative half of a 16 MB VMEM.
+_FUSED_VMEM_BYTES = 8 * 1024 * 1024
 
 
 def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
@@ -76,11 +91,17 @@ def moe_ffn(
     cfg: ModelConfig,
     *,
     plan: Optional[DispatchPlan] = None,
-    experts_fn: ExpertsFn = local_experts_fn,
+    experts_fn: Optional[ExpertsFn] = None,
     capacity: Optional[int] = None,
+    fused: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, RouterAux]:
     """Apply the MoE FFN.  If ``plan`` is provided (lookahead mode) the router
     is NOT run here — the control plane already produced the configuration.
+
+    ``fused`` selects the data plane: True forces the fused Pallas
+    gather->GEMM->scatter pipeline, False the reference
+    dispatch->experts_fn->combine composition, None (default) resolves to
+    ``cfg.use_pallas`` when no custom ``experts_fn`` is injected.
     """
     B, S, d = x.shape
     xf = x.reshape(B * S, d)
@@ -110,9 +131,32 @@ def moe_ffn(
             plan, aux = route_topk(xf, p["router"], cfg.top_k, C)
         else:
             aux = RouterAux(jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
-        x_slots = dispatch(xf, plan)  # (E, C, d)
-        y_slots = experts_fn(x_slots, p)
-        y = combine(y_slots, plan).astype(x.dtype)
+        if fused and experts_fn is not None:
+            raise ValueError(
+                "fused=True replaces the dispatch->experts_fn->combine "
+                "composition entirely; a custom experts_fn cannot apply. "
+                "Pass fused=False (or drop experts_fn)."
+            )
+        if fused is not None:
+            use_fused = fused
+        else:
+            # default to the fused plane only when it fits: the fused kernels
+            # keep the (T+1, d) token block and the f32 combine accumulator
+            # whole in VMEM (see kernels/moe_fused), so very large T*d must
+            # fall back to the tiled three-stage plane
+            use_fused = (
+                cfg.use_pallas
+                and experts_fn is None
+                and (T + 1) * d * 4 <= _FUSED_VMEM_BYTES
+            )
+        if use_fused:
+            from repro.kernels.moe_fused.ops import fused_moe_fn
+
+            y = fused_moe_fn(xf, plan, p).astype(x.dtype)
+        else:
+            x_slots = dispatch(xf, plan)  # (E, C, d)
+            y_slots = (experts_fn or local_experts_fn)(x_slots, p)
+            y = combine(y_slots, plan).astype(x.dtype)
 
     if "shared" in p:
         sh = p["shared"]
@@ -133,8 +177,9 @@ def moe_layer(
     p: Params,
     cfg: ModelConfig,
     *,
-    experts_fn: ExpertsFn = local_experts_fn,
+    experts_fn: Optional[ExpertsFn] = None,
     capacity: Optional[int] = None,
+    fused: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, RouterAux]:
     """Mode-dispatching MoE layer.
 
@@ -152,5 +197,5 @@ def moe_layer(
     C = capacity if capacity is not None else capacity_for(T, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
     src = x_ffn if (cfg.route_mode == "sync" or route_src is None) else route_src
     plan, aux = route_topk(src.reshape(T, d), p["router"], cfg.top_k, C)
-    y, _ = moe_ffn(x_ffn, p, cfg, plan=plan, experts_fn=experts_fn)
+    y, _ = moe_ffn(x_ffn, p, cfg, plan=plan, experts_fn=experts_fn, fused=fused)
     return y, aux

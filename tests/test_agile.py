@@ -5,6 +5,8 @@ from __future__ import annotations
 import itertools
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.agile import assign_stages, static_spatial_mapping, time_extend_mapping

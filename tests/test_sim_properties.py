@@ -5,6 +5,9 @@ from __future__ import annotations
 
 import dataclasses
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.sim.archs import ARCHS, ArchModel, marionette
