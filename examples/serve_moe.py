@@ -6,6 +6,10 @@ the control-plane byte share.
 
 ``--fused`` serves through the fused Pallas data plane (kernels/moe_fused;
 interpret-mode off-TPU) instead of the reference dispatch/combine plane.
+``--decode-plane`` serves decode through the Agile decode plane: the next
+step's DecodePlan is carried in the KV cache (router runs during the previous
+step's FFN), dispatch is capacity-sort-free, and attention reads only the
+valid cache prefix — the prefill-shaped machinery never runs per token.
 """
 import argparse
 import dataclasses
@@ -25,11 +29,16 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--fused", action="store_true",
                     help="use the fused gather->GEMM->scatter MoE data plane")
+    ap.add_argument("--decode-plane", action="store_true",
+                    help="decode through the Agile decode plane (plan in "
+                         "cache, no capacity sort, prefix-only attention)")
     args = ap.parse_args()
 
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
     if args.fused:
         cfg = dataclasses.replace(cfg, use_pallas=True)
+    if args.decode_plane:
+        cfg = dataclasses.replace(cfg, decode_plane=True)
     model = Model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)

@@ -1,0 +1,56 @@
+"""jax-version portability shims.
+
+The repo targets a range of jax releases (CI pins CPU jax; TPU pods run
+whatever the fleet ships).  Three API seams moved between releases and are
+centralized here so every call site stays version-agnostic:
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map.shard_map`` to
+  ``jax.shard_map``.  On releases that only have one of the two, the other
+  spelling raises ``AttributeError``/``ImportError``; import it from here.
+* ``cost_analysis_dict`` — ``Compiled.cost_analysis()`` returned a
+  one-element ``[dict]`` on older releases and a plain ``dict`` on newer
+  ones.
+* (see also :func:`repro.kernels.tpu_compiler_params` for the
+  ``pltpu.CompilerParams`` / ``TPUCompilerParams`` rename — kept next to the
+  kernels since only they build compiler params.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+try:  # old spelling (<= 0.4.x); removed after the public promotion
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+except ImportError:  # pragma: no cover - newer jax
+    _experimental_shard_map = None
+
+#: Version-agnostic ``shard_map`` — the public ``jax.shard_map`` when it
+#: exists, else the experimental one.
+shard_map = getattr(jax, "shard_map", None) or _experimental_shard_map
+if shard_map is None:  # pragma: no cover - defensive: no known release hits this
+    raise ImportError("no shard_map available in this jax installation")
+
+
+def install_shard_map():
+    """Expose ``jax.shard_map`` on releases that predate the promotion.
+
+    Test code (and user snippets pasted from current jax docs) spells it
+    ``jax.shard_map``; patching the alias in is safer than rewriting every
+    snippet for the oldest supported release.  Idempotent.
+    """
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    return jax.shard_map
+
+
+def cost_analysis_dict(compiled: Any) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a dict.
+
+    Older jax returns ``[dict]`` (one entry per computation), newer returns
+    the dict directly; some backends return ``None``.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -56,6 +56,11 @@ class ModelConfig:
     num_shared_experts: int = 0
     capacity_factor: float = 1.25
     route_mode: str = "lookahead"  # dense | sync | lookahead  (control plane)
+    # Agile decode plane: serve decode through the tiny-T control/data plane
+    # (DecodePlan carried in the KV cache, capacity-sort-free dispatch, and
+    # valid-prefix attention) instead of reusing the prefill-shaped plane per
+    # token.  See models/transformer.apply_layer_decode + kernels/moe_decode.
+    decode_plane: bool = False
 
     # -- recurrent (RG-LRU) ----------------------------------------------------
     lru_width: int = 0

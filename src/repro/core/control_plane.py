@@ -26,7 +26,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.plans import DispatchPlan
+from repro.core.plans import DecodePlan, DispatchPlan
 
 
 class RouterAux(NamedTuple):
@@ -122,6 +122,42 @@ def make_dispatch_plan(
         flat_cidx=jnp.where(valid, slot, E * C),
         flat_cw=combine_w.reshape(-1),
     )
+
+
+def route_topk_decode(
+    x: jnp.ndarray,
+    w_router: jnp.ndarray,
+    top_k: int,
+    *,
+    renormalize: bool = True,
+) -> DecodePlan:
+    """Decode-plane router: direct top-k assignment for tokens ``x`` (T, d).
+
+    The tiny-T counterpart of :func:`route_topk`: no capacity, no stable
+    sort, no scatter — the plan is just (expert id, weight) per assignment.
+    At decode batch sizes the sort is the dominant control cost and capacity
+    is meaningless (T*k slots always suffice), so the whole CS-Benes
+    permutation machinery collapses to two (T, k) tensors.
+
+    No RouterAux: decode never trains, so the balance/z losses are dead
+    weight on the serving critical path.
+    """
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(w_router, jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)  # (T, k)
+    if renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return DecodePlan(expert_ids=top_e.astype(jnp.int32), weights=top_w.astype(jnp.float32))
+
+
+def decode_plan_as_dispatch(plan: DecodePlan, num_experts: int) -> DispatchPlan:
+    """Lift a DecodePlan into the (E, C) DispatchPlan world (C = enough for
+    all T*k assignments — nothing can drop).  Reference/parity path only: the
+    decode data plane itself never builds slot tensors."""
+    T, k = plan.expert_ids.shape
+    # worst case every assignment picks the same expert: C = T*k (aligned)
+    C = capacity_for(T * k, 1, 1, 1.0)
+    return make_dispatch_plan(plan.expert_ids, plan.weights, num_experts, C)
 
 
 def dispatch(x: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:

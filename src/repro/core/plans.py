@@ -108,6 +108,43 @@ class DispatchPlan(NamedTuple):
         )
 
 
+class DecodePlan(NamedTuple):
+    """Capacity-free MoE configuration for T decode tokens (Agile decode plane).
+
+    expert_ids  (T, k) int32  expert per assignment (direct slot assignment)
+    weights     (T, k) f32    renormalized router weight per assignment
+
+    The decode-step dual of :class:`DispatchPlan`: at tiny T (one token per
+    in-flight sequence) the capacity sort and the (E, C) slot machinery are
+    pure control overhead — every assignment simply IS its own slot, nothing
+    can be dropped, and the per-assignment expert id is the literal control
+    word the data plane's weight-streaming index_map consumes
+    (:mod:`repro.kernels.moe_decode`).  No (E, C, d) tensor exists in this
+    plane at all.
+
+    The plan is carried in the decode cache alongside the KV entries: the
+    router for the *next* step runs during the current step's FFN
+    (temporally loosely-coupled control, Pre-gated-MoE-style look-ahead
+    [arXiv:2308.12066]), so at consumption time the plan is a cache read —
+    zero router latency on the decode critical path.
+    """
+
+    expert_ids: jnp.ndarray
+    weights: jnp.ndarray
+
+    @property
+    def num_tokens(self) -> int:
+        return self.expert_ids.shape[0]
+
+    @property
+    def top_k(self) -> int:
+        return self.expert_ids.shape[1]
+
+    def control_bytes(self) -> int:
+        """Bytes of control-plane state (decode dual of DispatchPlan's)."""
+        return sum(int(x.size) * x.dtype.itemsize for x in (self.expert_ids, self.weights))
+
+
 class StagePlan(NamedTuple):
     """Pipeline-stage configuration from Agile PE Assignment.
 

@@ -9,8 +9,13 @@ oracle used by the allclose test sweeps).
   moe_fused        fused MoE data plane: plan-steered gather -> grouped GEMM
                    -> weighted scatter in two launches (no (E, C, d) HBM
                    round-trips; the default data plane when use_pallas)
+  moe_decode       tiny-T decode MoE: DecodePlan-steered expert SwiGLU in ONE
+                   launch — the plan's expert ids drive the weight-tile DMA;
+                   no sort, no capacity, no slot tensors (Agile decode plane)
   grouped_gemm     per-expert GEMM over dispatched slots (MXU-tiled)
-  flash_attention  blocked causal/local attention forward (online softmax)
+  flash_attention  blocked causal/local attention forward (online softmax);
+                   decode.py adds the length-steered one-token variant that
+                   reads only the valid cache prefix
   rglru_scan       RG-LRU blocked linear recurrence (RecurrentGemma)
   ssd_scan         Mamba-2 chunked state-space-dual scan
 """

@@ -1,1 +1,2 @@
+from repro.kernels.flash_attention.decode import flash_decode  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

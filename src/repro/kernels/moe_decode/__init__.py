@@ -1,0 +1,3 @@
+from repro.kernels.moe_decode.ops import decode_moe
+
+__all__ = ["decode_moe"]

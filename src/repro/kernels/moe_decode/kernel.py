@@ -1,0 +1,119 @@
+"""Tiny-T decode MoE data plane: plan-steered expert SwiGLU in ONE Pallas
+launch, no slot tensors.
+
+The prefill-shaped path pays, per decode step and MoE layer: an argsort-based
+plan build over T*k assignments, a gather into (E, C, d) slots, grouped GEMMs
+over ALL E*C slots (mostly padding at decode T), and a scatter back — three
+HBM round-trips of tensors that are ~E*C/(T*k) times larger than the live
+work.  Here the DecodePlan's (T, k) control words ride the scalar-prefetch
+path instead and *steer the weight DMA itself*:
+
+* grid (T, k, f-tiles): for assignment (t, j) the expert id read from SMEM is
+  used inside the w_gate/w_up/w_down BlockSpec index_maps, so only the
+  selected expert's weight tiles are ever fetched from HBM — the dispatch IS
+  the weight stream.  Compute per step is exactly one token row through one
+  expert's SwiGLU tile; the f-tile axis keeps the three weight tiles within
+  VMEM at production d_ff.
+* the (T, d) f32 output block is revisited across the sequential grid:
+  per-assignment results accumulate in place scaled by the SMEM combine
+  weight (the scatter-combine is the GEMM epilogue, like moe_fused, but with
+  token-major slots so no slot->token indirection is needed at all).
+
+This is the Agile-PE-Assignment shape of the paper applied to decode: the
+loop body (one token per sequence) is far too small to fill the prefill
+plane's spatial capacity, so the plane is re-assigned — T*k assignment-steps
+that each fetch exactly the configuration (weights) the control plan names.
+The control plane ran one step earlier (plan carried in the decode cache);
+the data plane executes it with zero exposed control cost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, mult: int, value=0) -> jnp.ndarray:
+    r = (-a.shape[axis]) % mult
+    if r:
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, r)
+        a = jnp.pad(a, pad, constant_values=value)
+    return a
+
+
+def _decode_moe_kernel(ids_ref, w_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, k: int):
+    t, j, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((t == 0) & (j == 0) & (n == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = x_ref[...].astype(jnp.float32)  # (1, d) token row for assignment (t, j)
+    g = jnp.dot(row, wg_ref[0], preferred_element_type=jnp.float32)  # (1, bf)
+    u = jnp.dot(row, wu_ref[0], preferred_element_type=jnp.float32)
+    y = jnp.dot(jax.nn.silu(g) * u, wd_ref[0], preferred_element_type=jnp.float32)  # (1, d)
+
+    # combine epilogue: accumulate into the destination token row, scaled by
+    # the assignment's router weight from SMEM.  Padded f-tiles contribute
+    # silu(0)*0 = 0, so accumulating across n needs no masking.
+    w = w_ref[t * k + j]
+    cur = pl.load(o_ref, (pl.ds(t, 1), slice(None)))
+    pl.store(o_ref, (pl.ds(t, 1), slice(None)), cur + w * y)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def decode_moe_pallas(
+    x: jnp.ndarray,           # (T, d) decode tokens (one per sequence)
+    expert_ids: jnp.ndarray,  # (T, k) int32 plan control words
+    weights: jnp.ndarray,     # (T, k) f32 combine weights
+    w_gate: jnp.ndarray,      # (E, d, f)
+    w_up: jnp.ndarray,        # (E, d, f)
+    w_down: jnp.ndarray,      # (E, f, d)
+    *,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Plan-steered decode MoE, (T, d) -> (T, d) f32, single launch."""
+    T, d = x.shape
+    k = expert_ids.shape[1]
+    f = w_gate.shape[-1]
+    bf = min(bf, f)
+
+    ids = expert_ids.reshape(-1).astype(jnp.int32)  # (T*k,) SMEM control words
+    ws = weights.reshape(-1).astype(jnp.float32)
+    wg = _pad_axis(w_gate, 2, bf)
+    wu = _pad_axis(w_up, 2, bf)
+    wd = _pad_axis(w_down, 1, bf)
+    nf = wg.shape[-1] // bf
+    grid = (T, k, nf)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_moe_kernel, k=k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda t, j, n, ids_ref, w_ref: (t, 0)),
+                # the plan steers the DMA: only the selected expert's tiles move
+                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], 0, n)),
+                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], 0, n)),
+                pl.BlockSpec((1, bf, d), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], n, 0)),
+            ],
+            # whole (T, d) f32 accumulator revisited across the sequential
+            # grid, flushed to HBM once at the end
+            out_specs=pl.BlockSpec((T, d), lambda t, j, n, ids_ref, w_ref: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            # scatter-accumulate into a shared output block: strictly sequential
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ids, ws, x, wg, wu, wd)
+    return out

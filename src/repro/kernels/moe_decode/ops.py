@@ -1,0 +1,44 @@
+"""jit'd wrappers for the decode MoE data plane.
+
+``decode_moe`` executes a :class:`~repro.core.plans.DecodePlan` over the
+expert stacks in one plan-steered Pallas launch on TPU; off-TPU it runs the
+jnp gather oracle (which is also the fastest CPU shape at tiny T — the
+interpreter's per-step cost would dominate a T*k-step grid).  Pass
+``interpret=True`` to force the kernel through the interpreter (parity
+tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.plans import DecodePlan
+from repro.kernels import on_tpu
+from repro.kernels.moe_decode import ref
+from repro.kernels.moe_decode.kernel import decode_moe_pallas
+
+
+def decode_moe(
+    x: jnp.ndarray,  # (T, d)
+    plan: DecodePlan,
+    p,               # {"w_gate": (E,d,f), "w_up": ..., "w_down": (E,f,d)}
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Plan-steered decode expert pipeline, (T, d) -> (T, d), one launch."""
+    if interpret is None and not on_tpu():
+        y = ref.decode_moe(
+            x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"]
+        )
+    else:
+        y = decode_moe_pallas(
+            x,
+            plan.expert_ids,
+            plan.weights,
+            p["w_gate"].astype(x.dtype),
+            p["w_up"].astype(x.dtype),
+            p["w_down"].astype(x.dtype),
+            interpret=bool(interpret),
+        )
+    return y.astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the decode MoE data plane — and the off-TPU fast path.
+
+Two equivalent formulations, selected by how densely the plan covers the
+expert set (both sort-free, capacity-free, and slot-tensor-free):
+
+* gather form (``T*k < E``, the production decode shape): per-assignment
+  expert weights are gathered from the (E, ...) stacks — T*k weight tiles of
+  traffic, exactly what the Pallas kernel DMAs.
+* combine-matrix form (``T*k >= E``, e.g. smoke configs where top_k ~ E):
+  batched GEMMs over the full expert stacks with an exact (T, E) top-k
+  combine matrix.  When the plan hits most experts anyway, reading each
+  weight tile once beats gathering near-duplicate tiles per assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_moe(
+    x: jnp.ndarray,           # (T, d)
+    expert_ids: jnp.ndarray,  # (T, k) int32
+    weights: jnp.ndarray,     # (T, k) f32
+    w_gate: jnp.ndarray,      # (E, d, f)
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,      # (E, f, d)
+) -> jnp.ndarray:
+    T, k = expert_ids.shape
+    E = w_gate.shape[0]
+    xf = x.astype(jnp.float32)
+    if T * k < E:
+        wg = w_gate.astype(jnp.float32)[expert_ids]  # (T, k, d, f)
+        wu = w_up.astype(jnp.float32)[expert_ids]
+        wd = w_down.astype(jnp.float32)[expert_ids]  # (T, k, f, d)
+        g = jnp.einsum("td,tkdf->tkf", xf, wg)
+        u = jnp.einsum("td,tkdf->tkf", xf, wu)
+        y = jnp.einsum("tkf,tkfd->tkd", jax.nn.silu(g) * u, wd)
+        return jnp.einsum("tkd,tk->td", y, weights.astype(jnp.float32))
+    # exact top-k combine matrix (NOT predication: weights are the routed
+    # top-k weights, zero elsewhere — only the compute is dense over E)
+    sel = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], expert_ids
+    ].add(weights.astype(jnp.float32))
+    g = jnp.einsum("td,edf->etf", xf, w_gate.astype(jnp.float32))
+    u = jnp.einsum("td,edf->etf", xf, w_up.astype(jnp.float32))
+    y = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * u, w_down.astype(jnp.float32))
+    return jnp.einsum("etd,te->td", y, sel)

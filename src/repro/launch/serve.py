@@ -19,7 +19,13 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--decode-plane", action="store_true",
+                    help="serve decode through the Agile decode plane (plan "
+                         "carried in the cache, capacity-sort-free dispatch, "
+                         "valid-prefix attention)")
     args = ap.parse_args()
+
+    import dataclasses
 
     import jax
     import jax.numpy as jnp
@@ -30,6 +36,8 @@ def main() -> None:
     from repro.launch.steps import build_model, build_prefill_step, build_serve_step
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.decode_plane:
+        cfg = dataclasses.replace(cfg, decode_plane=True)
     mesh = make_host_mesh(args.data, args.model)
     B, S = args.batch, args.prompt_len
     max_len = S + args.gen

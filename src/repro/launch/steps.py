@@ -250,7 +250,15 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell) -> StepBun
 
 
 def build_serve_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell) -> StepBundle:
-    """One decode step: one new token per sequence against a seq_len cache."""
+    """One decode step: one new token per sequence against a seq_len cache.
+
+    ``cfg.decode_plane`` selects the Agile decode plane (DecodePlan slots in
+    the cache, capacity-sort-free MoE dispatch, valid-prefix attention).  It
+    changes the cache pytree this bundle shards/donates (plan slots per MoE
+    layer), so the prefill bundle that seeds the cache MUST be built from a
+    config with the same ``decode_plane`` setting — set it on ``cfg`` before
+    building either bundle (as launch/serve.py does), never on one side only.
+    """
     B, S = cell.global_batch, cell.seq_len
     model = build_model(cfg, mesh, B)
 

@@ -41,7 +41,7 @@ from repro.core.control_plane import (
     dispatch,
     route_topk,
 )
-from repro.core.plans import DispatchPlan
+from repro.core.plans import DecodePlan, DispatchPlan
 from repro.models.layers import dense_init, swiglu_tokens
 
 Params = Dict[str, Any]
@@ -76,6 +76,14 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
             "w_down": (jax.random.normal(kd, (sh * dff, d)) * down_scale).astype(dtype),
         }
     return p
+
+
+def _shared_experts(xf: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """Always-on shared-expert SwiGLU over flat tokens (T, d) -> (T, d)."""
+    sh = p["shared"]
+    g = xf @ sh["w_gate"].astype(xf.dtype)
+    u = xf @ sh["w_up"].astype(xf.dtype)
+    return (jax.nn.silu(g) * u) @ sh["w_down"].astype(xf.dtype)
 
 
 def local_experts_fn(x_slots: jnp.ndarray, p: Params) -> jnp.ndarray:
@@ -159,11 +167,32 @@ def moe_ffn(
             y = combine(y_slots, plan).astype(x.dtype)
 
     if "shared" in p:
-        sh = p["shared"]
-        g = xf @ sh["w_gate"].astype(xf.dtype)
-        u = xf @ sh["w_up"].astype(xf.dtype)
-        y = y + (jax.nn.silu(g) * u) @ sh["w_down"].astype(xf.dtype)
+        y = y + _shared_experts(xf, p)
     return y.reshape(B, S, d), aux
+
+
+def moe_decode_ffn(
+    x: jnp.ndarray,  # (B, 1, d) decode-step FFN input
+    plan: DecodePlan,
+    p: Params,
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Execute a cache-carried DecodePlan on the tiny-T decode data plane.
+
+    The router does NOT run here — the plan was computed one step earlier
+    (temporally loosely-coupled control) and arrives as a cache read.  The
+    data plane is one plan-steered launch (:mod:`repro.kernels.moe_decode`):
+    no capacity sort, no (E, C, d) slot tensors.
+    """
+    from repro.kernels.moe_decode import decode_moe
+
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    y = decode_moe(xf, plan, p, interpret=interpret)
+    if "shared" in p:
+        y = y + _shared_experts(xf, p)
+    return y.reshape(B, S, d)
 
 
 def router_logits(x: jnp.ndarray, p: Params) -> jnp.ndarray:

@@ -12,6 +12,17 @@ at the top of the iteration, concurrently with the attention data plane
 (Proactive PE Configuration).  ``moe_apply`` is injectable so the
 distributed runtime can substitute the shard_map expert-parallel
 implementation without touching stack logic.
+
+Agile decode plane (``cfg.decode_plane``): decode steps leave the
+prefill-shaped machinery entirely.  Each MoE layer's cache carries a
+:class:`~repro.core.plans.DecodePlan` alongside its KV entries; the plan
+consumed at step ``t`` was computed at step ``t-1`` (seeded by prefill for
+``t=0``) from the same control-plane source stream — the router runs
+temporally loosely-coupled, overlapping the previous step's FFN, and is a
+pure cache read on the decode critical path.  The data plane is the
+capacity-sort-free single-launch kernel (:mod:`repro.kernels.moe_decode`)
+and attention reads only the valid cache prefix
+(:mod:`repro.kernels.flash_attention.decode`).
 """
 from __future__ import annotations
 
@@ -23,6 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.control_plane import route_topk_decode
+from repro.core.plans import DecodePlan
 from repro.models import layers as L
 from repro.models import mamba2, moe, rglru
 
@@ -32,14 +45,32 @@ Params = Dict[str, Any]
 MoeApply = Callable[[jnp.ndarray, Optional[jnp.ndarray], Params], Tuple[jnp.ndarray, jnp.ndarray]]
 
 
+@jax.custom_vjp
 def _res(x: jnp.ndarray) -> jnp.ndarray:
     """Residual-stream barrier (perf iteration B-3, EXPERIMENTS.md §Perf).
 
     The next rms_norm upcasts the residual to f32; without a barrier XLA
     hoists that convert ABOVE the tensor-parallel all-reduce feeding the
     residual, doubling the wire bytes (f32 instead of bf16 collectives).
-    optimization_barrier pins the convert below the all-reduce."""
+    optimization_barrier pins the convert below the all-reduce.
+
+    custom_vjp because ``optimization_barrier`` has no differentiation rule
+    on the oldest supported jax: semantically the barrier is the identity, so
+    the fwd pass keeps the scheduling fence and the bwd pass passes
+    cotangents straight through (no barrier on the gradient — the backward
+    residual stream has its own collective schedule)."""
     return jax.lax.optimization_barrier(x)
+
+
+def _res_fwd(x: jnp.ndarray):
+    return _res(x), None
+
+
+def _res_bwd(_, g):
+    return (g,)
+
+
+_res.defvjp(_res_fwd, _res_bwd)
 
 
 def _default_moe_apply(cfg: ModelConfig) -> MoeApply:
@@ -117,10 +148,17 @@ def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtyp
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
         S = min(max_len, window) if window else max_len
         hd = cfg.resolved_head_dim
-        return {
+        c = {
             "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
         }
+        if kind == "moe" and cfg.decode_plane:
+            # Agile decode plane: the layer's next-step DecodePlan lives in
+            # the cache alongside the KV entries (uniform placeholder until
+            # prefill seeds it from the prompt's last control-plane source)
+            c["plan_e"] = jnp.zeros((batch, cfg.top_k), jnp.int32)
+            c["plan_w"] = jnp.full((batch, cfg.top_k), 1.0 / cfg.top_k, jnp.float32)
+        return c
     if kind == "rec":
         return rglru.init_rec_state(batch, cfg, dtype)
     if kind == "ssm":
@@ -224,6 +262,14 @@ def apply_layer_prefill(
         h = _res(x + jnp.einsum("bsnh,nhd->bsd", out, p["attn"]["wo"].astype(out.dtype)))
         ffn_in = L.rms_norm(h, p["ln2"])
         if kind == "moe":
+            if cfg.decode_plane:
+                # seed the first decode step's plan from the prompt's last
+                # control-plane source (the same route_src stream decode
+                # consumes one step later) — plan rides the cache from here on
+                src = (route_src if route_src is not None else h)[:, -1, :]
+                seed = route_topk_decode(src, p["moe"]["router"], cfg.top_k)
+                new_cache["plan_e"] = seed.expert_ids
+                new_cache["plan_w"] = seed.weights
             y, aux = moe_apply(ffn_in, route_src, p["moe"])
             route_src = h
         else:
@@ -254,13 +300,29 @@ def apply_layer_decode(
     aux = jnp.zeros((2,), jnp.float32)
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
-        a, new_cache = _decode_attn_rolling(
-            L.rms_norm(x, p["ln1"]), p["attn"], cfg, cache, cache_index, window
-        )
+        xn = L.rms_norm(x, p["ln1"])
+        if cfg.decode_plane and not window:
+            # Agile decode plane: full-attention caches are prefix-valid, so
+            # the length-steered kernel/jnp path reads only [0, cache_index]
+            a, new_cache = _decode_attn_prefix(xn, p["attn"], cfg, cache, cache_index)
+        else:
+            a, new_cache = _decode_attn_rolling(xn, p["attn"], cfg, cache, cache_index, window)
         h = _res(x + a)
         ffn_in = L.rms_norm(h, p["ln2"])
         if kind == "moe":
-            y, aux = moe_apply(ffn_in, route_src, p["moe"])
+            if cfg.decode_plane:
+                # consume the cache-carried plan (computed during the
+                # previous step — control is off this step's critical path),
+                # then run the router for the NEXT step from this step's
+                # control-plane source, overlapping this layer's FFN
+                plan = DecodePlan(cache["plan_e"], cache["plan_w"])
+                y = moe.moe_decode_ffn(ffn_in, plan, p["moe"])
+                src = (route_src if route_src is not None else h)[:, -1, :]
+                nxt = route_topk_decode(src, p["moe"]["router"], cfg.top_k)
+                new_cache["plan_e"] = nxt.expert_ids
+                new_cache["plan_w"] = nxt.weights
+            else:
+                y, aux = moe_apply(ffn_in, route_src, p["moe"])
             route_src = h
         else:
             y = L.swiglu(ffn_in, p["ffn"])
@@ -308,5 +370,45 @@ def _decode_attn_rolling(
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
     out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(xn.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def _decode_attn_prefix(
+    xn: jnp.ndarray,
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    cache_index: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token attention over the valid cache prefix [0, cache_index].
+
+    The decode-plane attention path for full-attention layers (non-rolling
+    caches: slot position == absolute position).  On TPU with
+    ``cfg.use_pallas`` this is the length-steered flash-decode kernel — the
+    cache length rides the scalar-prefetch path and only the valid prefix's
+    KV blocks are ever DMA'd (:mod:`repro.kernels.flash_attention.decode`);
+    off-TPU the same prefix semantics run as masked jnp.
+    """
+    B = xn.shape[0]
+    positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
+    q, k, v = L._qkv(xn, p, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode
+
+        out = flash_decode(q, ck, cv, cache_index)
+    else:
+        S = ck.shape[1]
+        valid = jnp.arange(S) <= cache_index
+        scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+        groups = cfg.num_heads // cfg.num_kv_heads
+        qg = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.resolved_head_dim)
+        s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
+        out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(xn.dtype)
     y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
     return y, {"k": ck, "v": cv}

@@ -28,8 +28,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core.control_plane import capacity_for, combine, dispatch, route_topk

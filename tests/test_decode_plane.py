@@ -1,0 +1,291 @@
+"""Agile decode plane: interpret-mode kernel parity vs the reference
+dispatch/combine data plane, the plan-carried-in-cache step semantics, and
+end-to-end decode equivalence with the prefill-shaped path.
+
+Plan semantics under test: the DecodePlan consumed at step t lives in the
+layer's cache and was computed at step t-1 (seeded by prefill) from the
+layer's control-plane source stream — so a step must (a) execute exactly the
+cached plan, not a fresh one, and (b) leave next step's plan in the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.control_plane import (
+    combine,
+    decode_plan_as_dispatch,
+    dispatch,
+    route_topk_decode,
+)
+from repro.core.plans import DecodePlan
+from repro.kernels.moe_decode import ops as dops
+from repro.kernels.moe_decode import ref as dref
+from repro.kernels.moe_decode.kernel import decode_moe_pallas
+from repro.models import transformer as T
+from repro.models.moe import local_experts_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+ULP = dict(rtol=1e-6, atol=1e-6)
+
+
+def _case(T_, d, E, k, f, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((T_, d)), jnp.float32)
+    wr = jnp.asarray(rng.standard_normal((d, E)) * 0.3, jnp.float32)
+    p = {
+        "w_gate": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((E, f, d)) * 0.1, jnp.float32),
+    }
+    return x, route_topk_decode(x, wr, k), p
+
+
+# ---------------------------------------------------------------------------
+# kernel parity (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+# ragged T, f; k from 1 to E; T both below and above E
+@pytest.mark.parametrize(
+    "T_,d,E,k,f",
+    [(4, 64, 8, 1, 128), (9, 64, 8, 3, 200), (16, 128, 4, 4, 96), (3, 96, 16, 2, 72)],
+)
+def test_decode_moe_kernel_matches_reference_dispatch_combine(T_, d, E, k, f):
+    """One plan-steered launch == the reference dispatch -> grouped SwiGLU ->
+    combine composition executing the same (lifted) plan."""
+    x, plan, p = _case(T_, d, E, k, f, seed=T_ + k)
+    got = dops.decode_moe(x, plan, p, interpret=True)
+    dplan = decode_plan_as_dispatch(plan, E)
+    want = combine(local_experts_fn(dispatch(x, dplan), p), dplan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **ULP)
+    # and the jnp oracle (also the off-TPU fast path) agrees
+    y_ref = dref.decode_moe(x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_ref), **ULP)
+
+
+def test_decode_moe_kernel_f_tiling():
+    """Small bf forces multiple f-tiles per assignment: the online f-axis
+    accumulation (including the zero-padded ragged tail) must be exact."""
+    x, plan, p = _case(6, 64, 8, 2, 200, seed=5)
+    got = decode_moe_pallas(
+        x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"],
+        bf=64, interpret=True,
+    )
+    want = dref.decode_moe(x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **ULP)
+
+
+def test_decode_plan_lift_places_every_assignment():
+    """decode_plan_as_dispatch must never drop: every (t, j) assignment gets
+    a slot even when all tokens pick the same expert."""
+    T_, k, E = 12, 2, 4
+    plan = DecodePlan(
+        expert_ids=jnp.zeros((T_, k), jnp.int32),  # worst case: all -> expert 0
+        weights=jnp.full((T_, k), 1.0 / k, jnp.float32),
+    )
+    dplan = decode_plan_as_dispatch(plan, E)
+    assert (np.asarray(dplan.combine_idx) >= 0).all()
+    np.testing.assert_allclose(np.asarray(dplan.combine_w), np.asarray(plan.weights))
+
+
+# ragged S (37) exercises the cache padding path; indices cover the first
+# block, a mid block, the ragged tail, and the very last slot
+@pytest.mark.parametrize(
+    "S,bkv,cache_index",
+    [(40, 16, 0), (40, 16, 5), (40, 16, 17), (40, 16, 39), (37, 16, 0), (37, 16, 17), (37, 16, 36)],
+)
+def test_flash_decode_matches_masked_prefix_attention(cache_index, S, bkv):
+    from repro.kernels.flash_attention.decode import flash_decode
+
+    rng = np.random.default_rng(S + cache_index)
+    B, nq, nkv, hd = 3, 8, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, 1, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    got = flash_decode(q, ck, cv, jnp.int32(cache_index), bkv=bkv, interpret=True)
+
+    valid = jnp.arange(S) <= cache_index
+    qg = q.reshape(B, 1, nkv, nq // nkv, hd)
+    s = jnp.einsum("bsngh,btnh->bngst", qg, ck) / np.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, -0.7 * np.finfo(np.float32).max)
+    w = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bngst,btnh->bsngh", w, cv).reshape(B, 1, nq, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# plan-carried-in-cache step semantics
+# ---------------------------------------------------------------------------
+
+
+def _moe_layer_setup(B=4, max_len=16):
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, top_k=2
+    )
+    key = jax.random.PRNGKey(0)
+    p = T.init_layer(key, "moe", cfg, jnp.float32)
+    cache = T.init_layer_cache("moe", cfg, B, max_len, jnp.float32)
+    return cfg, p, cache
+
+
+def _forced_plan_moe_apply(plan: DecodePlan, num_experts: int):
+    """Reference MoeApply executing a FIXED plan on the reference
+    dispatch/combine data plane (what the cached plan must reproduce)."""
+
+    def apply(ffn_in, rs, p):
+        B, S, d = ffn_in.shape
+        dplan = decode_plan_as_dispatch(plan, num_experts)
+        y = combine(local_experts_fn(dispatch(ffn_in.reshape(B * S, d), dplan), p), dplan)
+        return y.reshape(B, S, d), jnp.zeros((2,), jnp.float32)
+
+    return apply
+
+
+def test_decode_step_consumes_cached_plan_and_writes_next():
+    """Multi-step plan carry: step t must execute the plan already in the
+    cache (NOT a fresh one) and leave route_topk_decode(route_src_t) behind
+    for step t+1 — verified over two consecutive steps against the reference
+    dispatch/combine plane driven by force-fed plans."""
+    B = 4
+    cfg, p, cache0 = _moe_layer_setup(B=B)
+    cfg_base = dataclasses.replace(cfg, decode_plane=False)
+    rng = np.random.default_rng(1)
+    k = cfg.top_k
+
+    # handcrafted P0 (deliberately NOT what any router would produce)
+    P0 = DecodePlan(
+        expert_ids=jnp.asarray(rng.integers(0, cfg.num_experts, (B, k)), jnp.int32),
+        weights=jnp.asarray([[0.9, 0.1]] * B, jnp.float32),
+    )
+    cache0 = dict(cache0, plan_e=P0.expert_ids, plan_w=P0.weights)
+    cache0_base = {kk: cache0[kk] for kk in ("k", "v")}
+
+    def step(x, rs, cache, cache_base, idx, plan):
+        forced = _forced_plan_moe_apply(plan, cfg.num_experts)
+        # decode plane: moe_apply is ignored, the cached plan drives the layer
+        got, _, new_cache, _ = T.apply_layer_decode(
+            x, rs, p, cache, "moe", cfg, jnp.int32(idx), forced
+        )
+        # baseline plane force-fed the plan the cache is supposed to carry
+        want, _, new_cache_base, _ = T.apply_layer_decode(
+            x, rs, p, cache_base, "moe", cfg_base, jnp.int32(idx), forced
+        )
+        return got, want, new_cache, new_cache_base
+
+    x1 = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    rs1 = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    got1, want1, cache1, cache1_base = step(x1, rs1, cache0, cache0_base, 3, P0)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want1), rtol=1e-5, atol=1e-5)
+
+    # next step's plan must be the router applied to THIS step's route source
+    P1 = route_topk_decode(rs1[:, -1, :], p["moe"]["router"], k)
+    np.testing.assert_array_equal(np.asarray(cache1["plan_e"]), np.asarray(P1.expert_ids))
+    np.testing.assert_allclose(np.asarray(cache1["plan_w"]), np.asarray(P1.weights), **ULP)
+
+    # step 2 consumes P1 from the cache
+    x2 = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    rs2 = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    cache1_base = {kk: cache1[kk] for kk in ("k", "v")}
+    got2, want2, cache2, _ = step(x2, rs2, cache1, cache1_base, 4, P1)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want2), rtol=1e-5, atol=1e-5)
+    P2 = route_topk_decode(rs2[:, -1, :], p["moe"]["router"], k)
+    np.testing.assert_array_equal(np.asarray(cache2["plan_e"]), np.asarray(P2.expert_ids))
+
+
+def test_prefill_seeds_decode_plan_from_last_position():
+    """After prefill the cache must hold the plan for the FIRST decode step:
+    the router applied to the prompt's last control-plane source (layer 0's
+    source = the embedding stream)."""
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, num_layers=1, top_k=2
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, S + 4)
+    _, cache = model.prefill(params, prompts, cache)
+
+    src = model._embed(params, prompts, None)[:, -1, :]
+    router = params["blocks"]["scan"]["b0"]["moe"]["router"][0]
+    seed = route_topk_decode(src, router, cfg.top_k)
+    got_e = np.asarray(cache["scan"]["b0"]["plan_e"])[0]
+    got_w = np.asarray(cache["scan"]["b0"]["plan_w"])[0]
+    np.testing.assert_array_equal(got_e, np.asarray(seed.expert_ids))
+    np.testing.assert_allclose(got_w, np.asarray(seed.weights), **ULP)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end decode
+# ---------------------------------------------------------------------------
+
+
+def test_decode_plane_matches_baseline_multistep_uniform_routing():
+    """With a zero router every step's plan is identical on both planes
+    (uniform top-k), so prefill + multi-step decode logits must agree between
+    the Agile decode plane and the prefill-shaped path — exercising the full
+    plan-in-cache carry chain end to end."""
+    from repro.models.model import Model
+
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    B, S, gen = 2, 8, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    def zero_router(params):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, l: jnp.zeros_like(l)
+            if any(getattr(kk, "key", "") == "router" for kk in path)
+            else l,
+            params,
+        )
+
+    logits_by_plane = {}
+    for plane in (False, True):
+        c = dataclasses.replace(cfg, decode_plane=plane)
+        m = Model(c)
+        params = zero_router(m.init(jax.random.PRNGKey(0)))
+        cache = m.init_cache(B, S + gen)
+        logits, cache = jax.jit(m.prefill)(params, prompts, cache)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        seq = [np.asarray(logits)]
+        dec = jax.jit(m.decode_step)
+        for i in range(gen - 1):
+            logits, cache = dec(params, cache, toks, jnp.int32(S + i))
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+            seq.append(np.asarray(logits))
+        logits_by_plane[plane] = seq
+
+    for a, b in zip(logits_by_plane[False], logits_by_plane[True]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_plane_hlo_has_no_slot_tensors():
+    """The acceptance signal: a decode-plane decode step must not materialize
+    any (E, C, d) slot tensor, while the prefill-shaped step does."""
+    from repro.core.control_plane import capacity_for
+    from repro.models.model import Model
+
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    B, S = 2, 8
+    C = capacity_for(B, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+    ecd = f"tensor<{cfg.num_experts}x{C}x{cfg.d_model}x"
+
+    def lowered(plane):
+        c = dataclasses.replace(cfg, decode_plane=plane)
+        m = Model(c)
+        params = m.init(jax.random.PRNGKey(0))
+        cache = m.init_cache(B, S)
+        toks = jnp.zeros((B,), jnp.int32)
+        return jax.jit(m.decode_step).lower(params, cache, toks, jnp.int32(4)).as_text()
+
+    assert ecd in lowered(False)
+    assert ecd not in lowered(True)

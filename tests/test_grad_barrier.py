@@ -1,0 +1,56 @@
+"""Regression: the residual-stream optimization barrier must differentiate.
+
+``jax.lax.optimization_barrier`` has no differentiation rule on the oldest
+supported jax, which broke every train-step test (the barrier sits on the
+residual stream inside a remat'd scan).  ``transformer._res`` wraps it in a
+custom_vjp identity — barrier on the forward pass, pass-through cotangents —
+so the gradient must exist AND equal the barrier-free gradient exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import _res
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _stack(res_fn):
+    """A remat+scan block shaped like the model's superblock scan: the barrier
+    sits on the carried residual stream inside jax.checkpoint, exactly where
+    the train path differentiates it."""
+
+    def loss(w, xs):
+        def body(c, x):
+            c = res_fn(jnp.tanh(c @ w) + x)
+            return c, c
+
+        c, ys = jax.lax.scan(jax.checkpoint(body), jnp.ones((4, 8)), xs)
+        return (ys**2).sum()
+
+    return loss
+
+
+def test_barrier_differentiates_through_remat_scan():
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 4, 8))
+    g = jax.jit(jax.grad(_stack(_res)))(w, xs)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_barrier_grads_match_identity():
+    """The barrier is semantically the identity: grads must match the
+    barrier-free computation bit-for-bit (pass-through cotangents, no extra
+    rounding)."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 8)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(3), (5, 4, 8))
+    g_barrier = jax.jit(jax.grad(_stack(_res)))(w, xs)
+    g_plain = jax.jit(jax.grad(_stack(lambda x: x)))(w, xs)
+    np.testing.assert_array_equal(np.asarray(g_barrier), np.asarray(g_plain))
+
+
+def test_barrier_forward_value_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 7))
+    np.testing.assert_array_equal(np.asarray(_res(x)), np.asarray(x))
