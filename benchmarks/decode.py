@@ -1,42 +1,49 @@
-"""Agile decode plane vs prefill-shaped decode: ms/token, control-plane
-placement, and slot-tensor materialization on the smoke MoE config.
+"""Decode-plane benchmarks: Agile vs prefill-shaped decode, speculative
+multi-token launches, and rolling-window byte bounds — with a
+machine-readable ``BENCH_decode.json`` so the perf trajectory is tracked
+across PRs.
 
-The prefill-shaped path runs, per generated token and MoE layer, the full
-prefill control plane (argsort-based capacity plan over T*k assignments) and
-data plane (gather to (E, C, d) slots, grouped GEMMs over all E*C slots —
-mostly padding at decode T — scatter back).  The decode plane consumes a
-DecodePlan carried in the KV cache (router ran during the *previous* step's
-FFN), dispatches with direct top-k slot assignment (no sort), and never forms
-a slot tensor; attention reads only the valid cache prefix.
+Three sections:
 
-Reported per plane:
-
-* ``ms_per_token``        — wall-clock decode loop (CPU; directional)
-* ``ecd_intermediates``   — (E, C, d)-shaped tensors in the decode step HLO
-                            (the acceptance signal: 0 on the decode plane)
-* ``control_us``          — wall-clock of one layer's router+plan build alone
-* ``control_overlapped``  — 1 if the plan is consumed from the cache (router
-                            off the decode critical path), 0 if it
-                            serializes with the step
-* ``control_bytes``       — bytes of plan state per layer
+* **planes** (PR 2): per-token decode through the prefill-shaped machinery vs
+  the Agile decode plane (plan carried in the cache, no capacity sort, no
+  (E, C, d) slot tensors, valid-prefix attention).
+* **speculative** (PR 3): T=4 draft tokens through ONE vector-steered
+  flash-decode launch and ONE moe_decode launch must match T sequential
+  single-token launches BITWISE (interpret mode — the per-token math and
+  block order are identical), and a T-token model step must read strictly
+  fewer bytes per accepted token than T single-token steps (the weights
+  stream once per launch instead of once per token; decode is memory-bound,
+  so the byte ratio IS the speedup bound).
+* **rolling** : with a rolling (modulo-addressed) local-attention cache the
+  KV bytes a decode step reads are bounded by ``local_window`` regardless of
+  ``max_len`` — asserted via XLA cost analysis by growing ``max_len`` 8x and
+  checking the step's bytes-accessed stays flat.
 
     PYTHONPATH=src python -m benchmarks.decode
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
+from repro.compat import cost_analysis_dict
 from repro.configs import get_smoke_config
 from repro.core.control_plane import capacity_for, route_topk, route_topk_decode
 from repro.models.model import Model
 
 BATCH, PROMPT, GEN = 8, 32, 17
+SPEC_T = 4
 REPS = 5
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _bench_plane(cfg, decode_plane: bool) -> dict:
@@ -98,13 +105,183 @@ def _bench_plane(cfg, decode_plane: bool) -> dict:
     }
 
 
-def run() -> list:
+# ---------------------------------------------------------------------------
+# speculative multi-token launches
+# ---------------------------------------------------------------------------
+
+
+def _assert_kernel_bitwise() -> None:
+    """ONE T-token launch == T single-token launches, bitwise (interpret)."""
+    from repro.kernels.flash_attention import flash_decode
+    from repro.kernels.moe_decode.kernel import decode_moe_pallas
+
+    rng = np.random.default_rng(0)
+    B, nq, nkv, hd, S = 4, 8, 2, 32, 64
+    base = 13
+    q = jnp.asarray(rng.standard_normal((B, SPEC_T, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    multi = flash_decode(q, ck, cv, jnp.int32(base), bkv=16, interpret=True)
+    for t in range(SPEC_T):
+        single = flash_decode(q[:, t : t + 1], ck, cv, jnp.int32(base + t), bkv=16, interpret=True)
+        assert np.array_equal(np.asarray(multi[:, t : t + 1]), np.asarray(single)), (
+            "speculative flash-decode launch must be bitwise-equal to "
+            f"sequential single-token launches (draft position {t})"
+        )
+
+    T_, d, E, k, f = B * SPEC_T, 64, 8, 2, 128
+    x = jnp.asarray(rng.standard_normal((T_, d)), jnp.float32)
+    wr = jnp.asarray(rng.standard_normal((d, E)) * 0.3, jnp.float32)
+    plan = route_topk_decode(x, wr, k)
+    p = {
+        "w_gate": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((E, f, d)) * 0.1, jnp.float32),
+    }
+    one = decode_moe_pallas(
+        x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"], interpret=True
+    )
+    for i in range(T_):
+        row = decode_moe_pallas(
+            x[i : i + 1], plan.expert_ids[i : i + 1], plan.weights[i : i + 1],
+            p["w_gate"], p["w_up"], p["w_down"], interpret=True,
+        )
+        assert np.array_equal(np.asarray(one[i : i + 1]), np.asarray(row)), (
+            "one moe_decode launch over the whole draft must be bitwise-equal "
+            f"to per-token launches (assignment row {i})"
+        )
+
+
+def _bench_spec(cfg) -> dict:
+    """Speculative T-token launches vs T sequential steps: bytes per accepted
+    token (cost analysis) and wall-clock with oracle drafts (full accept)."""
+    _assert_kernel_bitwise()
+
+    c1 = dataclasses.replace(cfg, decode_plane=True)
+    cT = dataclasses.replace(cfg, decode_plane=True, spec_tokens=SPEC_T)
+    m1, mT = Model(c1), Model(cT)
+    params = m1.init(jax.random.PRNGKey(0))  # spec width does not change params
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0, cfg.vocab_size)
+    max_len = PROMPT + GEN + SPEC_T
+
+    cache1 = m1.init_cache(BATCH, max_len)
+    logits, cache1 = jax.jit(m1.prefill)(params, prompts, cache1)
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    decode1 = jax.jit(m1.decode_step)
+    decodeT = jax.jit(mT.decode_tokens)
+
+    # bytes per accepted token: the whole point of the vector control word —
+    # one launch streams the layer weights ONCE for T tokens
+    lens = jnp.full((BATCH,), PROMPT, jnp.int32)
+    acc = jnp.zeros((BATCH,), jnp.int32)
+    draft0 = jnp.tile(toks[:, None], (1, SPEC_T))
+    cacheT = mT.init_cache(BATCH, max_len)
+    _, cacheT = jax.jit(mT.prefill)(params, prompts, cacheT)
+    cost1 = cost_analysis_dict(decode1.lower(params, cache1, toks, jnp.int32(PROMPT)).compile())
+    costT = cost_analysis_dict(decodeT.lower(params, cacheT, draft0, lens, acc).compile())
+    bytes_seq = float(cost1.get("bytes accessed", 0.0))
+    bytes_spec = float(costT.get("bytes accessed", 0.0))
+
+    # oracle-draft wall clock: sequential trace supplies the drafts, so every
+    # launch accepts all SPEC_T tokens (upper bound of the speculation win)
+    trace = [toks]
+    t_seq = float("inf")
+    n_steps = GEN - 1
+    for _ in range(REPS):
+        tr, sc, tk = [toks], cache1, toks
+        t0 = time.perf_counter()
+        for i in range(n_steps):
+            lg, sc = decode1(params, sc, tk, jnp.int32(PROMPT + i))
+            tk = jnp.argmax(lg, -1).astype(jnp.int32)
+            tr.append(tk)
+        jax.block_until_ready(tk)
+        t_seq = min(t_seq, time.perf_counter() - t0)
+        trace = tr
+
+    n_launch = n_steps // SPEC_T
+    t_spec = float("inf")
+    for _ in range(REPS):
+        cT_ = cacheT
+        t0 = time.perf_counter()
+        for l in range(n_launch):
+            draft = jnp.stack(trace[l * SPEC_T : (l + 1) * SPEC_T], axis=1)
+            lens_ = jnp.full((BATCH,), PROMPT + l * SPEC_T, jnp.int32)
+            acc_ = jnp.zeros((BATCH,), jnp.int32) if l == 0 else jnp.full((BATCH,), SPEC_T - 1, jnp.int32)
+            lg, cT_ = decodeT(params, cT_, draft, lens_, acc_)
+        jax.block_until_ready(lg)
+        t_spec = min(t_spec, time.perf_counter() - t0)
+    # parity of the full speculative trajectory with the sequential trace
+    want = jnp.stack(trace[(n_launch - 1) * SPEC_T + 1 : n_launch * SPEC_T + 1], axis=1)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lg, -1)), np.asarray(want))
+
+    return {
+        "spec_tokens": SPEC_T,
+        "bytes_per_token_seq": bytes_seq,
+        "bytes_per_token_spec": bytes_spec / SPEC_T,
+        "bytes_ratio": (bytes_spec / SPEC_T) / max(bytes_seq, 1.0),
+        "ms_per_token_seq": t_seq / n_steps * 1e3,
+        "ms_per_token_spec_oracle": t_spec / (n_launch * SPEC_T) * 1e3,
+    }
+
+
+# ---------------------------------------------------------------------------
+# rolling-window byte bound
+# ---------------------------------------------------------------------------
+
+
+def _bench_rolling(cfg) -> dict:
+    """KV bytes per decode step bounded by local_window regardless of max_len.
+
+    The byte bound is structural: rolling caches are allocated at
+    ``window + spec slack`` slots (never ``max_len``), and the window kernel
+    walks exactly that buffer with its index_map clamped at the wrap point —
+    so the cost-analysis bytes of a decode step must stay flat as max_len
+    grows.  Both halves are asserted: the cache-leaf shapes (the allocation
+    invariant a regression would break first) and the step's bytes-accessed.
+    """
+    W = 16
+    spec = 2
+    cl = dataclasses.replace(
+        cfg, decode_plane=True, spec_tokens=spec, attention_kind="local", local_window=W
+    )
+    model = Model(cl)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 4
+    slack = -(-(spec - 1) // 8) * 8
+    out = {}
+    for tag, max_len in (("1x", 4 * W), ("8x", 32 * W)):
+        cache = model.init_cache(B, max_len)
+        hd = cl.resolved_head_dim
+        kv_slots = {
+            leaf.shape[-3]
+            for leaf in jax.tree.leaves(cache)
+            if leaf.ndim >= 4 and leaf.shape[-1] == hd  # (.., slots, nkv, hd)
+        }
+        assert kv_slots == {W + slack}, (
+            "rolling KV caches must be window-sized (+ spec slack), got "
+            f"{kv_slots} at max_len={max_len}"
+        )
+        toks = jnp.zeros((B, spec), jnp.int32)
+        lens = jnp.full((B,), 2 * W + 1, jnp.int32)  # past the wrap point
+        lowered = jax.jit(model.decode_tokens).lower(
+            params, cache, toks, lens, jnp.zeros((B,), jnp.int32)
+        )
+        out[tag] = float(cost_analysis_dict(lowered.compile()).get("bytes accessed", 0.0))
+    return {"window": W, "bytes_1x": out["1x"], "bytes_8x": out["8x"]}
+
+
+def run() -> dict:
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
-    return [_bench_plane(cfg, False), _bench_plane(cfg, True)]
+    return {
+        "planes": [_bench_plane(cfg, False), _bench_plane(cfg, True)],
+        "speculative": _bench_spec(cfg),
+        "rolling": _bench_rolling(cfg),
+    }
 
 
 def main() -> None:
-    rows = run()
+    results = run()
+    rows = results["planes"]
     emit(rows)
     base, agile = rows
     assert agile["ecd_intermediates"] == 0, "decode plane must not form (E, C, d) slots"
@@ -120,6 +297,32 @@ def main() -> None:
         f"router moved off the critical path "
         f"({agile['control_us']:.0f} us/layer overlapped vs {base['control_us']:.0f} us serialized)"
     )
+
+    spec = results["speculative"]
+    assert spec["bytes_ratio"] < 1.0, (
+        "a speculative launch must read strictly fewer bytes per accepted "
+        "token than sequential single-token steps", spec,
+    )
+    print(
+        f"# speculative T={spec['spec_tokens']}: one launch bitwise == T sequential launches; "
+        f"{spec['bytes_per_token_seq']/1e6:.2f} -> {spec['bytes_per_token_spec']/1e6:.2f} MB/token "
+        f"({spec['bytes_ratio']:.2f}x bytes), "
+        f"{spec['ms_per_token_seq']:.2f} -> {spec['ms_per_token_spec_oracle']:.2f} ms/token at full accept"
+    )
+
+    roll = results["rolling"]
+    assert roll["bytes_8x"] < roll["bytes_1x"] * 1.15, (
+        "rolling-window decode bytes must be bounded by the window, not max_len",
+        roll,
+    )
+    print(
+        f"# rolling window W={roll['window']}: step bytes {roll['bytes_1x']/1e6:.2f} MB at 1x max_len "
+        f"vs {roll['bytes_8x']/1e6:.2f} MB at 8x — bounded by the window"
+    )
+
+    out = _REPO_ROOT / "BENCH_decode.json"
+    out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

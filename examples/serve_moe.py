@@ -10,6 +10,11 @@ interpret-mode off-TPU) instead of the reference dispatch/combine plane.
 step's DecodePlan is carried in the KV cache (router runs during the previous
 step's FFN), dispatch is capacity-sort-free, and attention reads only the
 valid cache prefix — the prefill-shaped machinery never runs per token.
+``--spec-tokens N`` decodes speculatively: N tokens per launch through the
+vector-steered kernels (per-token cache indices on the scalar-prefetch path),
+with greedy verify/rollback — output is identical to sequential decode.  The
+full continuous-batching loop (ragged slots, admission, telemetry) lives in
+``repro.launch.serve``.
 """
 import argparse
 import dataclasses
@@ -32,6 +37,9 @@ def main() -> None:
     ap.add_argument("--decode-plane", action="store_true",
                     help="decode through the Agile decode plane (plan in "
                          "cache, no capacity sort, prefix-only attention)")
+    ap.add_argument("--spec-tokens", type=int, default=1,
+                    help="speculative width: tokens per decode launch, with "
+                         "greedy verify/rollback (1 = plain decode)")
     args = ap.parse_args()
 
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
@@ -39,11 +47,14 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, use_pallas=True)
     if args.decode_plane:
         cfg = dataclasses.replace(cfg, decode_plane=True)
+    if args.spec_tokens > 1:
+        cfg = dataclasses.replace(cfg, spec_tokens=args.spec_tokens)
     model = Model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
+    # spec decode may write up to T-1 draft rows past the last kept token
+    max_len = S + args.gen + max(args.spec_tokens - 1, 0)
     prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
     prefill = jax.jit(model.prefill)
@@ -60,6 +71,43 @@ def main() -> None:
     toks = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [toks]
     t0 = time.perf_counter()
+    if args.spec_tokens > 1:
+        # speculative serve: T tokens per launch (repeat-last-token drafts),
+        # greedy verify keeps exactly what sequential decode would emit
+        import numpy as np
+
+        from repro.launch.speculative import greedy_accept
+
+        T = args.spec_tokens
+        spec = jax.jit(model.decode_tokens)
+        lengths = np.full((B,), S, np.int32)
+        prev_accept = np.zeros((B,), np.int32)
+        gen_left = np.full((B,), args.gen - 1, np.int32)
+        launches = 0
+        last = np.array(toks)  # owned copy: updated in the verify loop
+        history = [[int(v)] for v in last]
+        while (gen_left > 0).any():
+            draft = np.tile(last[:, None], (1, T)).astype(np.int32)
+            logits, cache = spec(params, cache, jnp.asarray(draft),
+                                 jnp.asarray(lengths), jnp.asarray(prev_accept))
+            launches += 1
+            y = np.asarray(jnp.argmax(logits, -1))
+            for b in range(B):
+                if gen_left[b] <= 0:
+                    continue
+                a = greedy_accept(draft[b], y[b], T, int(gen_left[b]))
+                history[b].extend(int(v) for v in y[b, :a])
+                lengths[b] += a
+                gen_left[b] -= a
+                prev_accept[b] = a - 1
+                last[b] = y[b, a - 1]
+        t_decode = time.perf_counter() - t0
+        n_gen = args.gen - 1
+        print(f"decode: {launches} speculative launches (width {T}) x {B} seqs "
+              f"in {t_decode*1e3:.1f} ms ({t_decode/max(n_gen,1)*1e3:.1f} ms/token, "
+              f"{n_gen/max(launches,1):.2f} accepted tokens/launch)")
+        print("generated token ids (first sequence):", history[0][: args.gen])
+        return
     for i in range(args.gen - 1):
         logits, cache = decode(params, cache, toks, jnp.int32(S + i))
         toks = jnp.argmax(logits, -1).astype(jnp.int32)

@@ -61,6 +61,13 @@ class ModelConfig:
     # valid-prefix attention) instead of reusing the prefill-shaped plane per
     # token.  See models/transformer.apply_layer_decode + kernels/moe_decode.
     decode_plane: bool = False
+    # Speculative decode width: tokens per decode launch (draft length + 1).
+    # With spec_tokens > 1 the decode cache carries a plan VECTOR (one
+    # DecodePlan row per draft position) so the verify/rollback step can
+    # select the plan matching the accepted prefix — see
+    # models/model.decode_tokens and launch/serve.py's continuous-batching
+    # loop.  1 = plain one-token-per-launch decode (PR 2 semantics).
+    spec_tokens: int = 1
 
     # -- recurrent (RG-LRU) ----------------------------------------------------
     lru_width: int = 0

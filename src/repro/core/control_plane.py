@@ -150,6 +150,22 @@ def route_topk_decode(
     return DecodePlan(expert_ids=top_e.astype(jnp.int32), weights=top_w.astype(jnp.float32))
 
 
+def topk_agreement(a_ids: jnp.ndarray, b_ids: jnp.ndarray) -> jnp.ndarray:
+    """Mean Jaccard overlap between two (T, k) top-k expert-id sets.
+
+    The plan-quality telemetry metric (serve-time analogue of
+    ``test_lookahead_plan_quality_degrades_gracefully``): the decode plane's
+    consumed plan is one position stale relative to the freshest available
+    routing source, and this is the agreement between the two — a regression
+    in lookahead quality shows up here before it shows up in outputs.  Top-k
+    ids are distinct within a row, so the pairwise-equality count IS the
+    intersection size.
+    """
+    inter = (a_ids[..., :, None] == b_ids[..., None, :]).any(-1).sum(-1)  # (T,)
+    k = a_ids.shape[-1]
+    return jnp.mean(inter / (2 * k - inter))
+
+
 def decode_plan_as_dispatch(plan: DecodePlan, num_experts: int) -> DispatchPlan:
     """Lift a DecodePlan into the (E, C) DispatchPlan world (C = enough for
     all T*k assignments — nothing can drop).  Reference/parity path only: the

@@ -127,10 +127,23 @@ class DecodePlan(NamedTuple):
     (temporally loosely-coupled control, Pre-gated-MoE-style look-ahead
     [arXiv:2308.12066]), so at consumption time the plan is a cache read —
     zero router latency on the decode critical path.
+
+    Speculative/multi-token decode: the fields may carry extra leading axes
+    (e.g. (B, T, k) for a batch of T-token drafts) — :meth:`flatten` merges
+    them to the (T_total, k) layout the single-launch kernel consumes, so ONE
+    plan covers the whole draft.
     """
 
     expert_ids: jnp.ndarray
     weights: jnp.ndarray
+
+    def flatten(self) -> "DecodePlan":
+        """Merge leading axes to the kernel's (T_total, k) control layout."""
+        k = self.expert_ids.shape[-1]
+        return DecodePlan(
+            expert_ids=self.expert_ids.reshape(-1, k),
+            weights=self.weights.reshape(-1, k),
+        )
 
     @property
     def num_tokens(self) -> int:

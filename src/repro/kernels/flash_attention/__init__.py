@@ -1,2 +1,5 @@
-from repro.kernels.flash_attention.decode import flash_decode  # noqa: F401
+from repro.kernels.flash_attention.decode import (  # noqa: F401
+    flash_decode,
+    flash_decode_window,
+)
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

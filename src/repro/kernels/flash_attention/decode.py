@@ -1,24 +1,39 @@
-"""Flash-decode: one-token attention against the KV cache with a
-length-steered grid.
+"""Flash-decode: attention against the KV cache with a *vector-steered* grid.
 
 The prefill flash kernel's block-skip logic is static (causal/window masks
 known at trace time).  Decode's mask is the *cache length* — a runtime
-scalar — so the valid-prefix bound rides the scalar-prefetch path instead:
+quantity — so the valid-prefix bound rides the scalar-prefetch path instead.
+PR 2 carried ONE scalar length (one token, one sequence); here the control
+word is a **vector** of per-token lengths, the same promotion TileLoom makes
+from whole-loop schedules to tile-granular plans:
 
-* the KV BlockSpec index_maps clamp the block index to the last valid block,
-  so no DMA is ever issued for cache tail blocks beyond the prefix (the
-  length literally steers which HBM blocks move);
-* ``pl.when(kv_base < length)`` skips the compute for those (re-mapped)
-  steps, and an in-block iota mask handles the ragged last block.
+* grid (B, T, nq, Skv/bkv): T draft/speculative tokens attend in ONE launch
+  instead of T.  The KV BlockSpec index_maps clamp the block index per
+  (b, t) against the prefetched length vector, so no DMA is ever issued for
+  cache tail blocks beyond that token's prefix — the length vector literally
+  steers which HBM blocks move, per token.
+* per-token lengths double as the intra-launch causal mask between draft
+  tokens: token t's length is ``base + t + 1``, so draft token t sees draft
+  tokens < t and nothing after — speculative causality needs no extra mask
+  plumbing.
+* per-sequence lengths (ragged continuous batching) are the same vector with
+  a batch-major stride — one launch serves sequences at different depths.
 
-Grid (B, nq, Skv/bkv): KV innermost and sequential, with the online-softmax
-running stats (m, l) and the (1, hd) accumulator in f32 VMEM scratch — the
-Sq=1 degenerate of the prefill kernel, kept separate because the prefill
-kernel's reachability math is compile-time and its kv_len static.
+``pl.when(kv_base < length)`` skips the compute for re-mapped steps and an
+in-block iota mask handles the ragged last block, exactly as in the scalar
+kernel — per (b, t) the math (block order, online-softmax updates) is
+IDENTICAL to a one-token launch, so a T-token launch is bitwise equal to T
+sequential launches.
 
-At a 32k-token cache with a 100-token prefix this reads 1/327th of the KV
-bytes the masked-jnp decode path streams — decode is memory-bound, so the
-byte ratio IS the speedup bound.
+The window-steered variant (:func:`flash_decode_window_pallas`) finishes the
+rolling-cache story: local-attention caches are modulo-addressed (slot
+``pos % W``), so the valid window is up to two contiguous slot segments
+around the wrap point.  The kernel walks the W-sized buffer's blocks with the
+index_map clamped to the written prefix — at most ``W`` KV bytes ever move,
+regardless of the sequence position or ``max_len`` — and masks per (b, t) by
+reconstructing each slot's absolute position from the prefetched position
+vector.  Rolling layers thereby leave the masked-jnp path with the same
+byte bound the rolling buffer already guarantees.
 """
 from __future__ import annotations
 
@@ -37,9 +52,10 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 def _flash_decode_kernel(
-    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bkv: int, n_kv: int, scale: float
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bkv: int, n_kv: int, scale: float, T: int,
 ):
-    ki = pl.program_id(2)
+    b, t, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
@@ -47,13 +63,13 @@ def _flash_decode_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    length = len_ref[0]  # valid prefix length (runtime control word)
+    length = len_ref[b * T + t]  # this token's valid prefix (control word)
     kv_base = ki * bkv
 
     @pl.when(kv_base < length)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (1, hd)
-        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        q = q_ref[0, 0, 0].astype(jnp.float32)[None]  # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bkv)
         kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
         s = jnp.where(kv_pos < length, s, NEG_INF)
@@ -75,76 +91,244 @@ def _flash_decode_kernel(
 
 @functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
 def flash_decode_pallas(
-    q: jnp.ndarray,       # (B, nq, 1, hd)
-    k: jnp.ndarray,       # (B, nkv, Skv, hd) full cache buffer
+    q: jnp.ndarray,        # (B, T, nq, hd) draft/step tokens
+    k: jnp.ndarray,        # (B, nkv, Skv, hd) full cache buffer
     v: jnp.ndarray,
-    length: jnp.ndarray,  # (1,) int32 valid prefix length, >= 1
+    lengths: jnp.ndarray,  # (B*T,) int32 valid prefix length per token, >= 1
     *,
     bkv: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    B, nq, _, hd = q.shape
+    B, T, nq, hd = q.shape
     nkv, Skv = k.shape[1], k.shape[2]
     group = nq // nkv
     scale = 1.0 / math.sqrt(hd)
     bkv = min(bkv, Skv)
     assert Skv % bkv == 0, "pad the cache to a block multiple in ops"
     n_kv = Skv // bkv
-    grid = (B, nq, n_kv)
+    grid = (B, T, nq, n_kv)
 
-    def kv_map(b, h, ki, len_ref):
-        # length-steered: blocks past the valid prefix re-map to the last
-        # valid block (their compute is skipped), so their DMA never happens
-        last = (len_ref[0] - 1) // bkv
+    def kv_map(b, t, h, ki, len_ref):
+        # vector-steered: blocks past token (b, t)'s valid prefix re-map to
+        # its last valid block (their compute is skipped), so their DMA never
+        # happens — per-token clamping against the prefetched length vector
+        last = (len_ref[b * T + t] - 1) // bkv
         return (b, h // group, jnp.minimum(ki, last), 0)
 
-    kern = functools.partial(_flash_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale)
+    kern = functools.partial(_flash_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T)
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki, len_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, len_ref: (b, t, h, 0)),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki, len_ref: (b, h, 0, 0)),
+            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, len_ref: (b, t, h, 0)),
             scratch_shapes=[
                 pltpu.VMEM((1, 1), jnp.float32),
                 pltpu.VMEM((1, 1), jnp.float32),
                 pltpu.VMEM((1, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, nq, 1, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, T, nq, hd), q.dtype),
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(length, q, k, v)
+    )(lengths, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# window-steered variant for rolling (modulo-addressed) caches
+# ---------------------------------------------------------------------------
+
+
+def _flash_decode_window_kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bkv: int, n_kv: int, scale: float, T: int, W: int, window: int,
+):
+    b, t, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b * T + t]          # this token's absolute position
+    head = pos_ref[b * T + (T - 1)]   # last position written to this cache
+    kv_base = ki * bkv
+
+    # slots at/below the written prefix exist; blocks past it are re-mapped
+    @pl.when(kv_base <= jnp.minimum(head, W - 1))
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)[None]  # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bkv)
+        # reconstruct each slot's absolute position from the write head:
+        # slot s holds the largest p <= head with p % W == s
+        slot = kv_base + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        write = head % W
+        abs_pos = head - jnp.remainder(write - slot, W)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # a block may hold no valid slot for THIS query token (its window sits
+        # in the other wrap segment): with m still NEG_INF, exp(s - m) would
+        # be 1 on masked lanes — zero them explicitly
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bkv", "interpret"))
+def flash_decode_window_pallas(
+    q: jnp.ndarray,         # (B, T, nq, hd)
+    k: jnp.ndarray,         # (B, nkv, W, hd) rolling cache buffer (slot = pos % W)
+    v: jnp.ndarray,
+    positions: jnp.ndarray, # (B*T,) int32 absolute position per token
+    *,
+    window: int,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Window-steered decode over a rolling cache: at most two contiguous
+    slot segments around the wrap point are valid; the index_map clamps the
+    walk to the written prefix so at most W KV bytes move per (b, t, h)."""
+    B, T, nq, hd = q.shape
+    nkv, W = k.shape[1], k.shape[2]
+    group = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+    bkv = min(bkv, W)
+    assert W % bkv == 0, "choose bkv dividing the window buffer in ops"
+    n_kv = W // bkv
+    grid = (B, T, nq, n_kv)
+
+    def kv_map(b, t, h, ki, pos_ref):
+        # clamp to the written prefix: before the first wrap only slots
+        # [0, head] were ever written, so tail blocks re-map (compute skipped)
+        head = pos_ref[b * T + (T - 1)]
+        last = jnp.minimum(head, W - 1) // bkv
+        return (b, h // group, jnp.minimum(ki, last), 0)
+
+    kern = functools.partial(
+        _flash_decode_window_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T, W=W, window=window
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref: (b, t, h, 0)),
+                pl.BlockSpec((1, 1, bkv, hd), kv_map),
+                pl.BlockSpec((1, 1, bkv, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref: (b, t, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, T, nq, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(positions, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# model-layout wrappers
+# ---------------------------------------------------------------------------
+
+
+def _as_length_vector(cache_index: jnp.ndarray, B: int, T: int) -> jnp.ndarray:
+    """Promote a scalar / (B,) / (B, T) cache index to the (B*T,) length
+    vector the kernel prefetches.
+
+    scalar i       -> every token's prefix is [0, i + t]   (one sequence depth)
+    (B,) idx       -> token (b, t) sees prefix [0, idx[b] + t]  (ragged batch)
+    (B, T) idx     -> fully explicit per-token indices (draft trees)
+    """
+    idx = jnp.asarray(cache_index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    if idx.ndim == 1:
+        idx = idx[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    return (idx + 1).reshape(B * T).astype(jnp.int32)
 
 
 def flash_decode(
-    q: jnp.ndarray,  # (B, 1, nq, hd) — model layout
+    q: jnp.ndarray,  # (B, T, nq, hd) — model layout (T = 1 for plain decode)
     k: jnp.ndarray,  # (B, Skv, nkv, hd) cache buffer (already holding this step's K)
     v: jnp.ndarray,
-    cache_index: jnp.ndarray,  # scalar int32: position of the current token
+    cache_index: jnp.ndarray,  # scalar | (B,) | (B, T) int32 token position(s)
     *,
     bkv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """One-token attention over the valid cache prefix [0, cache_index]."""
+    """Multi-token attention over each token's valid cache prefix.
+
+    Token (b, t) attends to cache positions [0, index(b, t)] where the index
+    vector is derived from ``cache_index`` (see :func:`_as_length_vector`) —
+    one launch covers a whole speculative draft and/or a ragged batch.
+    """
     it = (not on_tpu()) if interpret is None else interpret
-    B, _, nq, hd = q.shape
+    B, T, nq, hd = q.shape
     Skv = k.shape[1]
     bkv_ = min(bkv, Skv)
     pad_kv = (-Skv) % bkv_
-    qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     if pad_kv:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
-    length = (cache_index + 1).astype(jnp.int32).reshape(1)
-    out = flash_decode_pallas(qt, kt, vt, length, bkv=bkv_, interpret=it)
-    return jnp.swapaxes(out, 1, 2)
+    lengths = _as_length_vector(cache_index, B, T)
+    return flash_decode_pallas(q, kt, vt, lengths, bkv=bkv_, interpret=it)
+
+
+def flash_decode_window(
+    q: jnp.ndarray,  # (B, T, nq, hd) — model layout
+    k: jnp.ndarray,  # (B, W, nkv, hd) rolling cache buffer (slot = pos % W)
+    v: jnp.ndarray,
+    cache_index: jnp.ndarray,  # scalar | (B,) int32 position of token (b, 0)
+    *,
+    window: int,
+    bkv: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Window-steered attention over a rolling cache: token (b, t) at
+    absolute position ``index(b) + t`` sees positions in
+    ``(pos - window, pos]`` through the wrap point."""
+    it = (not on_tpu()) if interpret is None else interpret
+    B, T, nq, hd = q.shape
+    W = k.shape[1]
+    # bkv must divide W so block -> slot arithmetic survives the wrap
+    bkv_ = min(bkv, W)
+    while W % bkv_:
+        bkv_ //= 2
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    idx = jnp.asarray(cache_index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    positions = (idx[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]).reshape(B * T)
+    return flash_decode_window_pallas(
+        q, kt, vt, positions, window=window, bkv=bkv_, interpret=it
+    )

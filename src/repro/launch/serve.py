@@ -1,8 +1,26 @@
-"""Production serving driver: prefill + decode with the lookahead control
-plane, on an arbitrary host mesh.
+"""Production serving driver: a continuous-batching loop over a ragged slot
+pool, with speculative multi-token launches on the Agile decode plane.
+
+Every decode launch processes ``spec_tokens`` tokens for every slot in ONE
+model call (one flash-decode launch and one moe_decode launch per layer —
+per-token cache indices ride the scalar-prefetch path as control-word
+vectors).  Between launches the host:
+
+* **verifies** each slot's draft greedily — the accepted prefix is exactly
+  what sequential decode would have produced (rollback re-derives nothing:
+  rejected cache rows are overwritten by the next launch, and the plan row
+  consumed next launch is the one computed from the accepted position's
+  route source, carried per draft position in the cache);
+* **admits** queued prompts into finished slots (per-request B=1 prefill
+  written into the batch cache — slots at different sequence depths share
+  launches via the per-sequence length vector);
+* aggregates **plan-quality telemetry** (stale-vs-fresh top-k agreement per
+  MoE layer) so lookahead-staleness regressions are visible in production
+  output, mirroring ``test_lookahead_plan_quality_degrades_gracefully``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
-        --smoke --batch 4 --prompt-len 64 --gen 32
+        --smoke --slots 4 --prompt-len 32 --gen 16 --requests 8 \
+        --decode-plane --spec-tokens 4 --telemetry
 """
 from __future__ import annotations
 
@@ -10,66 +28,193 @@ import argparse
 import time
 
 
+def _draft_repeat(history, last_tok: int, width: int):
+    """Repeat the last accepted token (minimal drafter: exercises the
+    verify/rollback machinery; acceptance tracks the model's self-similarity)."""
+    return [last_tok] * width
+
+
+def _draft_ngram(history, last_tok: int, width: int):
+    """Bigram-lookup drafter: if the last token appeared before, draft the
+    tokens that followed it last time (prompt-free n-gram speculation)."""
+    out = []
+    cur = last_tok
+    for _ in range(width):
+        nxt = cur
+        for i in range(len(history) - 2, -1, -1):
+            if history[i] == cur:
+                nxt = history[i + 1]
+                break
+        out.append(nxt)
+        cur = nxt
+    return out
+
+
+DRAFTERS = {"repeat": _draft_repeat, "ngram": _draft_ngram}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="decode slot pool size (continuous-batching batch)")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="max synthetic prompt length (prompts arrive ragged)")
+    ap.add_argument("--gen", type=int, default=16, help="tokens to generate per request")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of queued requests (default 2x slots)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--decode-plane", action="store_true",
                     help="serve decode through the Agile decode plane (plan "
                          "carried in the cache, capacity-sort-free dispatch, "
                          "valid-prefix attention)")
+    ap.add_argument("--spec-tokens", type=int, default=1,
+                    help="speculative width: tokens per decode launch "
+                         "(1 = plain decode)")
+    ap.add_argument("--drafter", choices=sorted(DRAFTERS), default="ngram")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="report stale-vs-fresh plan top-k agreement per launch")
     args = ap.parse_args()
 
     import dataclasses
 
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs import get_config, get_smoke_config
     from repro.configs.base import ShapeCell
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.steps import build_model, build_prefill_step, build_serve_step
+    from repro.launch.speculative import greedy_accept
+    from repro.launch.steps import build_spec_serve_step
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.decode_plane:
-        cfg = dataclasses.replace(cfg, decode_plane=True)
+    cfg = dataclasses.replace(
+        cfg, decode_plane=args.decode_plane or cfg.decode_plane,
+        spec_tokens=max(args.spec_tokens, 1),
+    )
+    telemetry = args.telemetry and cfg.decode_plane and cfg.is_moe
     mesh = make_host_mesh(args.data, args.model)
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
+    B, S, T = args.slots, args.prompt_len, max(args.spec_tokens, 1)
+    n_req = args.requests or 2 * B
+    max_len = S + args.gen + T
+
+    # synthetic ragged request queue: a few distinct length buckets so the
+    # per-length prefill jit cache stays small
+    buckets = sorted({max(4, S // 2), max(4, (3 * S) // 4), S})
+    rng = np.random.default_rng(0)
+    queue = [
+        np.asarray(
+            rng.integers(0, cfg.vocab_size, size=buckets[i % len(buckets)]), np.int32
+        )
+        for i in range(n_req)
+    ]
+    draft_fn = DRAFTERS[args.drafter]
 
     with mesh:
-        prefill_b = build_prefill_step(cfg, mesh, ShapeCell("p", S, B, "prefill"))
-        serve_b = build_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"))
-        model = prefill_b.model
-        params = jax.device_put(model.init(jax.random.PRNGKey(0)), prefill_b.in_shardings[0])
-        cache = jax.device_put(model.init_cache(B, max_len), serve_b.in_shardings[1])
-        prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
-        fe = (
-            jnp.zeros((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
-            if cfg.frontend
-            else None
+        serve_b = build_spec_serve_step(
+            cfg, mesh, ShapeCell("d", max_len, B, "decode"), telemetry=telemetry
         )
-
+        model = serve_b.model
+        params = jax.device_put(model.init(jax.random.PRNGKey(0)), serve_b.in_shardings[0])
+        cache = jax.device_put(model.init_cache(B, max_len), serve_b.in_shardings[1])
         prefill = jax.jit(model.prefill)
+        admit = jax.jit(model.write_cache_slot, donate_argnums=(0,))
         decode = serve_b.jit()
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, prompts, cache, fe) if fe is not None else prefill(params, prompts, cache)
-        logits.block_until_ready()
-        print(f"prefill {B}x{S}: {(time.perf_counter()-t0)*1e3:.1f} ms")
 
-        toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        t0 = time.perf_counter()
-        for i in range(args.gen - 1):
-            logits, cache = decode(params, cache, toks, jnp.int32(S + i))
-            toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(toks)
-        dt = time.perf_counter() - t0
-        print(f"decode {args.gen-1} steps: {dt/(args.gen-1)*1e3:.1f} ms/token")
+        # host-side slot state (the ragged-batch control words)
+        lengths = np.zeros((B,), np.int32)
+        prev_accept = np.zeros((B,), np.int32)
+        last_tok = np.zeros((B,), np.int32)
+        gen_left = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        history = [[] for _ in range(B)]
+
+        launches = accepted_total = drafted_total = finished = 0
+        prefill_ms = 0.0
+        agreements = []
+        t_start = time.perf_counter()
+
+        while len(queue) or active.any():
+            # ---- admission: fill free slots from the queue -----------------
+            for b in range(B):
+                if active[b] or not queue:
+                    continue
+                prompt = queue.pop(0)
+                t0 = time.perf_counter()
+                one = model.init_cache(1, max_len)
+                fe = (
+                    jnp.zeros((1, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+                    if cfg.frontend
+                    else None
+                )
+                logits1, one = (
+                    prefill(params, prompt[None], one, fe)
+                    if fe is not None
+                    else prefill(params, prompt[None], one)
+                )
+                cache = admit(cache, one, b)
+                prefill_ms += (time.perf_counter() - t0) * 1e3
+                lengths[b] = len(prompt)
+                last_tok[b] = int(jnp.argmax(logits1[0]))
+                prev_accept[b] = 0
+                gen_left[b] = args.gen
+                active[b] = True
+                history[b] = [last_tok[b]]
+
+            # ---- draft: one launch's tokens for every slot -----------------
+            toks = np.zeros((B, T), np.int32)
+            toks[:, 0] = last_tok
+            for b in range(B):
+                if active[b] and T > 1:
+                    toks[b, 1:] = draft_fn(history[b], int(last_tok[b]), T - 1)
+
+            # ---- one speculative launch over the ragged pool ---------------
+            out = decode(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
+                         jnp.asarray(prev_accept))
+            if telemetry:
+                logits, cache, metrics = out
+                agreements.append(float(metrics["plan_agreement"]))
+            else:
+                logits, cache = out
+            launches += 1
+            y = np.asarray(jnp.argmax(logits, -1))  # (B, T) verified tokens
+
+            # ---- greedy verify / rollback ----------------------------------
+            for b in range(B):
+                if not active[b]:
+                    lengths[b] = 0  # park finished slots at depth 0
+                    continue
+                a = greedy_accept(toks[b], y[b], T, int(gen_left[b]))
+                accepted = [int(v) for v in y[b, :a]]
+                history[b].extend(accepted)
+                accepted_total += a
+                drafted_total += T
+                lengths[b] += a
+                gen_left[b] -= a
+                last_tok[b] = accepted[-1]
+                prev_accept[b] = a - 1
+                if gen_left[b] <= 0 or lengths[b] + T > max_len:
+                    active[b] = False
+                    finished += 1
+
+        wall = time.perf_counter() - t_start
+        jax.block_until_ready(cache)
+
+    generated = accepted_total
+    print(f"served {finished} requests on {B} slots: {generated} tokens in "
+          f"{wall*1e3:.1f} ms ({generated/max(wall, 1e-9):.0f} tok/s, "
+          f"{launches} launches, prefill {prefill_ms:.1f} ms total)")
+    if T > 1:
+        print(f"speculative: width {T}, drafter {args.drafter}, "
+              f"accept rate {accepted_total/max(drafted_total, 1):.2f} "
+              f"({accepted_total/max(launches, 1):.2f} tokens/launch)")
+    if telemetry and agreements:
+        print(f"plan telemetry: stale-vs-fresh top-k agreement "
+              f"mean {np.mean(agreements):.3f} min {np.min(agreements):.3f} "
+              f"over {len(agreements)} launches")
 
 
 if __name__ == "__main__":

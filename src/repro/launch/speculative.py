@@ -1,0 +1,24 @@
+"""Host-side speculative-decode bookkeeping shared by the serve drivers.
+
+The verify rule is the greedy one: position 0 of a launch is the model's own
+next token (always accepted); draft position t stays accepted while the
+draft token equals what the model emitted for position t-1.  Everything the
+rollback guarantee rests on (overwritten KV rows, plan-row selection by
+accepted count) keys off the count returned here, so the drivers and the
+example share ONE implementation.
+"""
+from __future__ import annotations
+
+
+def greedy_accept(draft_row, verified_row, width: int, budget: int) -> int:
+    """Accepted-token count for one sequence's launch.
+
+    draft_row     (T,) the launched tokens (index 0 = last accepted token)
+    verified_row  (T,) argmax of the launch logits (successor per position)
+    width         T, the speculative width
+    budget        remaining tokens this sequence may still emit (>= 1)
+    """
+    a = 1
+    while a < width and a < budget and int(draft_row[a]) == int(verified_row[a - 1]):
+        a += 1
+    return a

@@ -292,6 +292,60 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell) -> StepBundl
     )
 
 
+def build_spec_serve_step(
+    cfg: ModelConfig, mesh: Mesh, cell: ShapeCell, *, telemetry: bool = False
+) -> StepBundle:
+    """One speculative/ragged serve launch: T = ``cfg.spec_tokens`` tokens per
+    sequence against per-sequence cache lengths (continuous batching).
+
+    The launch signature is ``(params, cache, tokens (B, T), lengths (B,),
+    prev_accept (B,))`` -> ``(logits (B, T, V), cache[, metrics])`` —
+    ``prev_accept`` selects each sequence's cache-carried plan row (the one
+    computed from the route source of the position the previous launch's
+    verification accepted).  As with ``build_serve_step``, the prefill bundle
+    seeding the cache must be built from a config with identical
+    ``decode_plane``/``spec_tokens`` settings (the plan-vector slots are part
+    of the cache pytree).
+    """
+    B, S = cell.global_batch, cell.seq_len
+    Tn = max(cfg.spec_tokens, 1)
+    model = build_model(cfg, mesh, B)
+
+    def spec_step(params, cache, tokens, lengths, prev_accept):
+        return model.decode_tokens(
+            params, cache, tokens, lengths, prev_accept, telemetry=telemetry
+        )
+
+    params_abs = _abstract_params(cfg)
+    p_shard = param_shardings(params_abs, mesh)
+    cache_abs = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    c_shard = cache_shardings(cache_abs, B, mesh)
+    tok_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=1))
+    vec_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=0))
+
+    abstract = (
+        jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), params_abs, p_shard),
+        jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), cache_abs, c_shard),
+        jax.ShapeDtypeStruct((B, Tn), jnp.int32, sharding=tok_shard),
+        jax.ShapeDtypeStruct((B,), jnp.int32, sharding=vec_shard),
+        jax.ShapeDtypeStruct((B,), jnp.int32, sharding=vec_shard),
+    )
+    logits_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=2))
+    out_shardings = (logits_shard, c_shard)
+    if telemetry:
+        out_shardings = out_shardings + ({"plan_agreement": NamedSharding(mesh, P())},)
+
+    return StepBundle(
+        name="spec_serve_step",
+        fn=spec_step,
+        in_shardings=(p_shard, c_shard, tok_shard, vec_shard, vec_shard),
+        out_shardings=out_shardings,
+        abstract_inputs=abstract,
+        donate_argnums=(1,),
+        model=model,
+    )
+
+
 def build_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell, *, strategy: str = "tp") -> StepBundle:
     if cell.step == "train":
         return build_train_step(cfg, mesh, cell, strategy=strategy)

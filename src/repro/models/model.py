@@ -212,6 +212,100 @@ class Model:
         logits = self.logits(params, x)[:, 0]  # (B, V)
         return logits, new_cache
 
+    # ------------------------------------------------------------------
+    # speculative / ragged multi-token decode
+    # ------------------------------------------------------------------
+    def decode_tokens(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jnp.ndarray,  # (B, T) — last accepted token + T-1 draft tokens
+        lengths: jnp.ndarray,  # (B,) int32 — per-sequence tokens already in cache
+        prev_accept: Optional[jnp.ndarray] = None,  # (B,) int32 plan-row select
+        *,
+        telemetry: bool = False,
+    ):
+        """One speculative serve launch: T tokens per sequence, ragged batch.
+
+        Token (b, t) sits at absolute position ``lengths[b] + t``; the
+        returned logits (B, T, V) score the successor of each position, so a
+        greedy verifier accepts the draft prefix that matches
+        ``argmax(logits[:, :-1])`` (see launch/serve.py).  ``prev_accept``
+        selects, per sequence, the cached plan row computed from the route
+        source of the position the PREVIOUS launch's verification accepted —
+        this is what makes speculative decode bitwise-faithful to sequential
+        decode under rollback.  With ``telemetry=True`` also returns a
+        metrics dict carrying the mean stale-vs-fresh plan top-k agreement.
+        """
+        cfg = self.cfg
+        B = tokens.shape[0]
+        if prev_accept is None:
+            prev_accept = jnp.zeros((B,), jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+        x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        pat, n_sb, n_rest = self._pattern()
+        route_src = x
+        agree_sum = jnp.float32(0.0)
+        n_moe = max(sum(1 for k in cfg.layer_kinds if k == "moe"), 1)
+
+        def sb_fn(carry, xs):
+            h, rs, agg = carry
+            p_sb, c_sb = xs
+            new_c = {}
+            for j, kind in enumerate(pat):
+                h, rs, nc, a = T.apply_layer_decode_spec(
+                    h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg,
+                    lengths, prev_accept, self.moe_apply, telemetry=telemetry,
+                )
+                new_c[f"b{j}"] = nc
+                agg = agg + a
+            return (h, rs, agg), new_c
+
+        new_cache: Params = {"scan": {}, "rest": []}
+        if n_sb:
+            (x, route_src, agree_sum), new_scan = jax.lax.scan(
+                sb_fn, (x, route_src, agree_sum), (params["blocks"]["scan"], cache["scan"])
+            )
+            new_cache["scan"] = new_scan
+        kinds = cfg.layer_kinds
+        for j, (p, c) in enumerate(zip(params["blocks"]["rest"], cache["rest"])):
+            kind = kinds[n_sb * len(pat) + j]
+            x, route_src, nc, a = T.apply_layer_decode_spec(
+                x, route_src, p, c, kind, cfg, lengths, prev_accept,
+                self.moe_apply, telemetry=telemetry,
+            )
+            new_cache["rest"].append(nc)
+            agree_sum = agree_sum + a
+        logits = self.logits(params, x)  # (B, T, V)
+        if telemetry:
+            return logits, new_cache, {"plan_agreement": agree_sum / n_moe}
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # continuous-batching cache surgery
+    # ------------------------------------------------------------------
+    def write_cache_slot(self, cache: Params, one_cache: Params, slot) -> Params:
+        """Admit a freshly-prefilled single-sequence cache into batch ``slot``.
+
+        ``one_cache`` must come from ``init_cache(1, max_len)`` + ``prefill``
+        of the admitted prompt; scan-stacked leaves carry batch on axis 1
+        (axis 0 is the superblock stack), rest leaves on axis 0.
+        """
+
+        def at_axis(axis):
+            def write(f, o):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=axis
+                )
+
+            return write
+
+        return {
+            "scan": jax.tree.map(at_axis(1), cache["scan"], one_cache["scan"]),
+            "rest": jax.tree.map(at_axis(0), cache["rest"], one_cache["rest"]),
+        }
+
 
 # ---------------------------------------------------------------------------
 # abstract input specs (dry-run stand-ins; no allocation)

@@ -189,7 +189,7 @@ def moe_decode_ffn(
 
     B, S, d = x.shape
     xf = x.reshape(B * S, d)
-    y = decode_moe(xf, plan, p, interpret=interpret)
+    y = decode_moe(xf, plan.flatten(), p, interpret=interpret)
     if "shared" in p:
         y = y + _shared_experts(xf, p)
     return y.reshape(B, S, d)

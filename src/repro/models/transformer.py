@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.control_plane import route_topk_decode
+from repro.core.control_plane import route_topk_decode, topk_agreement
 from repro.core.plans import DecodePlan
 from repro.models import layers as L
 from repro.models import mamba2, moe, rglru
@@ -146,7 +146,13 @@ def init_params(key, cfg: ModelConfig) -> Params:
 def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
-        S = min(max_len, window) if window else max_len
+        # Rolling buffers need spec_tokens - 1 slack slots: a speculative
+        # launch writes all T draft tokens before attending, and with exactly
+        # ``window`` slots the later drafts would evict positions still
+        # inside the earlier drafts' windows (sequential decode sees them).
+        # Rounded to 8 so the window kernel keeps a block-aligned buffer.
+        spec_slack = -(-(max(int(cfg.spec_tokens), 1) - 1) // 8) * 8
+        S = min(max_len, window + spec_slack) if window else max_len
         hd = cfg.resolved_head_dim
         c = {
             "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
@@ -155,9 +161,14 @@ def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtyp
         if kind == "moe" and cfg.decode_plane:
             # Agile decode plane: the layer's next-step DecodePlan lives in
             # the cache alongside the KV entries (uniform placeholder until
-            # prefill seeds it from the prompt's last control-plane source)
-            c["plan_e"] = jnp.zeros((batch, cfg.top_k), jnp.int32)
-            c["plan_w"] = jnp.full((batch, cfg.top_k), 1.0 / cfg.top_k, jnp.float32)
+            # prefill seeds it from the prompt's last control-plane source).
+            # With spec_tokens > 1 the cache carries one plan row per draft
+            # position, so the next launch can consume the row matching the
+            # verified/accepted prefix (rollback-exact plan selection).
+            Tp = max(int(cfg.spec_tokens), 1)
+            shape = (batch, Tp, cfg.top_k) if Tp > 1 else (batch, cfg.top_k)
+            c["plan_e"] = jnp.zeros(shape, jnp.int32)
+            c["plan_w"] = jnp.full(shape, 1.0 / cfg.top_k, jnp.float32)
         return c
     if kind == "rec":
         return rglru.init_rec_state(batch, cfg, dtype)
@@ -268,8 +279,19 @@ def apply_layer_prefill(
                 # consumes one step later) — plan rides the cache from here on
                 src = (route_src if route_src is not None else h)[:, -1, :]
                 seed = route_topk_decode(src, p["moe"]["router"], cfg.top_k)
-                new_cache["plan_e"] = seed.expert_ids
-                new_cache["plan_w"] = seed.weights
+                if cfg.spec_tokens > 1:
+                    # plan-vector carry: every draft position of the first
+                    # launch starts from the same prefill-seeded plan
+                    B_, Tp, k_ = x.shape[0], cfg.spec_tokens, cfg.top_k
+                    new_cache["plan_e"] = jnp.broadcast_to(
+                        seed.expert_ids[:, None], (B_, Tp, k_)
+                    ).astype(jnp.int32)
+                    new_cache["plan_w"] = jnp.broadcast_to(
+                        seed.weights[:, None], (B_, Tp, k_)
+                    ).astype(jnp.float32)
+                else:
+                    new_cache["plan_e"] = seed.expert_ids
+                    new_cache["plan_w"] = seed.weights
             y, aux = moe_apply(ffn_in, route_src, p["moe"])
             route_src = h
         else:
@@ -339,6 +361,205 @@ def apply_layer_decode(
     return x, route_src, new_cache, aux
 
 
+def apply_layer_decode_spec(
+    x: jnp.ndarray,  # (B, T, d) — T draft tokens per sequence, one launch
+    route_src: Optional[jnp.ndarray],
+    p: Params,
+    cache: Params,
+    kind: str,
+    cfg: ModelConfig,
+    lengths: jnp.ndarray,  # (B,) int32 per-sequence cache length (ragged batch)
+    prev_accept: jnp.ndarray,  # (B,) int32 accepted-row index into the plan vector
+    moe_apply: MoeApply,
+    *,
+    telemetry: bool = False,
+):
+    """Multi-token (speculative) ragged decode for one layer.
+
+    Token (b, t) sits at absolute position ``lengths[b] + t``.  The
+    per-token position vector is the layer's control word: attention clamps
+    each token's KV walk against it (vector-steered flash-decode), and the
+    MoE plan vector is indexed by it.  Plan semantics reproduce T sequential
+    single-token steps exactly:
+
+    * token 0 consumes the cache-carried plan row selected by
+      ``prev_accept`` (the row computed, last launch, from the route source
+      of the position that verification actually accepted — rollback-exact);
+    * token t >= 1 consumes the plan routed from this launch's route source
+      at position t-1 (the same source a sequential step t-1 would have
+      written to the cache);
+    * all T routed plans are written back as the next launch's plan vector.
+
+    Returns ``(x, route_src, new_cache, plan_agreement)`` where
+    ``plan_agreement`` is the stale-vs-fresh top-k overlap (0 when not a MoE
+    layer or telemetry is off).
+    """
+    agree = jnp.float32(0.0)
+    B, T, d = x.shape
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        xn = L.rms_norm(x, p["ln1"])
+        if window:
+            a, new_cache = _decode_attn_rolling_spec(xn, p["attn"], cfg, cache, lengths, window)
+        else:
+            a, new_cache = _decode_attn_prefix_spec(xn, p["attn"], cfg, cache, lengths)
+        h = _res(x + a)
+        ffn_in = L.rms_norm(h, p["ln2"])
+        if kind == "moe":
+            if cfg.decode_plane:
+                src_seq = route_src if route_src is not None else h  # (B, T, d)
+                k_ = cfg.top_k
+                # one router launch covers draft routing AND next-launch plans
+                nxt = route_topk_decode(
+                    src_seq.reshape(B * T, d), p["moe"]["router"], k_
+                )
+                all_e = nxt.expert_ids.reshape(B, T, k_)
+                all_w = nxt.weights.reshape(B, T, k_)
+                cached_e, cached_w = cache["plan_e"], cache["plan_w"]
+                if cached_e.ndim == 3:
+                    sel = prev_accept[:, None, None]
+                    first_e = jnp.take_along_axis(cached_e, sel, axis=1)[:, 0]
+                    first_w = jnp.take_along_axis(cached_w, sel, axis=1)[:, 0]
+                else:  # spec_tokens == 1 cache: single temporal plan row
+                    first_e, first_w = cached_e, cached_w
+                cons_e = jnp.concatenate([first_e[:, None], all_e[:, : T - 1]], axis=1)
+                cons_w = jnp.concatenate([first_w[:, None], all_w[:, : T - 1]], axis=1)
+                plan = DecodePlan(cons_e, cons_w).flatten()
+                y = moe.moe_decode_ffn(ffn_in, plan, p["moe"])
+                if cached_e.ndim == 3:
+                    new_cache["plan_e"] = all_e
+                    new_cache["plan_w"] = all_w
+                else:
+                    new_cache["plan_e"] = all_e[:, -1]
+                    new_cache["plan_w"] = all_w[:, -1]
+                if telemetry:
+                    # stale (consumed, position t-1 source) vs fresh (same
+                    # position source) — the decode-plane lookahead bet
+                    agree = topk_agreement(
+                        cons_e.reshape(B * T, k_), all_e.reshape(B * T, k_)
+                    )
+            else:
+                y, _ = moe_apply(ffn_in, route_src, p["moe"])
+            route_src = h
+        else:
+            y = L.swiglu(ffn_in, p["ffn"])
+        x = _res(h + y)
+    elif kind in ("rec", "ssm"):
+        # stateful recurrences advance one token per launch: supported at
+        # spec width 1 (ragged continuous batching without drafts)
+        if T != 1:
+            raise NotImplementedError(
+                f"multi-token decode for {kind!r} layers needs a T-step state "
+                "recurrence; serve rec/ssm archs with spec_tokens=1"
+            )
+        if kind == "rec":
+            r, new_cache = rglru.rec_block_decode(L.rms_norm(x, p["ln1"]), p["rec"], cfg, cache)
+            h = _res(x + r)
+            x = _res(h + L.swiglu(L.rms_norm(h, p["ln2"]), p["ffn"]))
+        else:
+            s, new_cache = mamba2.ssm_block_decode(L.rms_norm(x, p["ln1"]), p["ssm"], cfg, cache)
+            x = _res(x + s)
+    else:
+        raise ValueError(kind)
+    return x, route_src, new_cache, agree
+
+
+def _spec_positions(lengths: jnp.ndarray, T: int) -> jnp.ndarray:
+    """(B,) per-sequence lengths -> (B, T) absolute position per draft token."""
+    return lengths[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)[None, :]
+
+
+def _decode_attn_prefix_spec(
+    xn: jnp.ndarray,  # (B, T, d)
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,)
+) -> Tuple[jnp.ndarray, Params]:
+    """T-token attention over per-token valid prefixes [0, lengths[b] + t].
+
+    The per-token clamp doubles as the intra-draft causal mask: draft token t
+    sees draft tokens < t (already written to the cache) and nothing after.
+    """
+    B, T, _ = xn.shape
+    pos = _spec_positions(lengths, T)
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, pos].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, pos].set(v.astype(cache["v"].dtype))
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode
+
+        out = flash_decode(q, ck, cv, pos)  # (B, T, nq, hd)
+    else:
+        S = ck.shape[1]
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        groups = cfg.num_heads // nkv
+        valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]  # (B, T, S)
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, T, nkv, groups, hd)
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def _decode_attn_rolling_spec(
+    xn: jnp.ndarray,  # (B, T, d)
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,)
+    window: int,
+) -> Tuple[jnp.ndarray, Params]:
+    """T-token attention against a rolling (modulo-addressed) KV cache.
+
+    All T tokens are written at slots ``pos % W`` first; each query then
+    masks by absolute position reconstructed from the final write head, so
+    draft token t never sees draft tokens written after it.  Requires
+    T <= W (a draft longer than the window would overwrite its own slots).
+    """
+    B, T, _ = xn.shape
+    W = cache["k"].shape[1]
+    assert T <= W, "draft length must not exceed the rolling window"
+    pos = _spec_positions(lengths, T)
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    bidx = jnp.arange(B)[:, None]
+    slots = jnp.remainder(pos, W)
+    ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
+    limit = min(window, W) if window else W
+    if cfg.decode_plane and cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode_window
+
+        out = flash_decode_window(q, ck, cv, lengths, window=limit)
+    else:
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        groups = cfg.num_heads // nkv
+        head = pos[:, -1]  # (B,) last written absolute position
+        slot = jnp.arange(W)
+        write = jnp.remainder(head, W)
+        # absolute position stored in slot s: largest p <= head with p % W == s
+        abs_pos = head[:, None] - jnp.remainder(write[:, None] - slot[None, :], W)  # (B, W)
+        valid = (
+            (abs_pos[:, None, :] >= 0)
+            & (abs_pos[:, None, :] <= pos[:, :, None])
+            & (abs_pos[:, None, :] > pos[:, :, None] - limit)
+        )  # (B, T, W)
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, T, nkv, groups, hd)
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
 def _decode_attn_rolling(
     xn: jnp.ndarray,
     p: Params,
@@ -356,11 +577,21 @@ def _decode_attn_rolling(
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
     # validity: slot position must be within [cache_index - limit + 1, cache_index]
+    limit = min(window, W) if window else W
+    if cfg.decode_plane and cfg.use_pallas and window:
+        # window-steered flash-decode: the rolling cache's wrap point rides
+        # the scalar-prefetch path; at most W KV bytes move per head
+        from repro.kernels.flash_attention import flash_decode_window
+
+        out = flash_decode_window(
+            q, ck, cv, jnp.broadcast_to(cache_index, (B,)).astype(jnp.int32), window=limit
+        )
+        y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
+        return y, {"k": ck, "v": cv}
     slot = jnp.arange(W)
     # absolute position stored in slot s (rolling): the largest p <= cache_index with p % W == s
     offset = jnp.remainder(write - slot, W)
     abs_pos = cache_index - offset
-    limit = min(window, W) if window else W
     valid = (abs_pos >= 0) & (abs_pos > cache_index - limit)
     scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
     groups = cfg.num_heads // cfg.num_kv_heads
