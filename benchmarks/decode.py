@@ -19,6 +19,16 @@ Three sections:
   KV bytes a decode step reads are bounded by ``local_window`` regardless of
   ``max_len`` — asserted via XLA cost analysis by growing ``max_len`` 8x and
   checking the step's bytes-accessed stays flat.
+* **sharded** (PR 4): the distributed decode plane on a forced 8-device CPU
+  host mesh (spawned subprocess: the device count must be set before jax
+  initializes).  With the cache-carried plan sliced per shard
+  (``make_sharded_decode_apply``), each shard's data plane touches only its
+  resident (E/ep, d, f) expert stacks — per-shard expert-weight bytes are
+  1/ep of the replicated fallback, which must all-gather the full stacks to
+  execute the global-id gather.  Asserted structurally from the partitioned
+  HLO: the full (E, d, f) stack never materializes on the sharded path (and
+  no (E, C, d) slot tensor exists under shard_map), while the fallback HLO
+  contains it.
 
     PYTHONPATH=src python -m benchmarks.decode
 """
@@ -26,7 +36,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
+import re
+import subprocess
+import sys
 import time
 
 import jax
@@ -270,12 +284,86 @@ def _bench_rolling(cfg) -> dict:
     return {"window": W, "bytes_1x": out["1x"], "bytes_8x": out["8x"]}
 
 
+# ---------------------------------------------------------------------------
+# distributed decode plane (forced 8-device host mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_CODE = """
+import repro.compat as _compat; _compat.install_shard_map()
+import dataclasses, json, re
+import jax, jax.numpy as jnp
+from repro.compat import cost_analysis_dict
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeCell
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_spec_serve_step
+from repro.models.model import Model
+
+EP = 8
+# production decode shape: T*k << E, so the fallback's global-id weight
+# gather is the pathology (the partitioner must all-gather the full stacks)
+cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                          decode_plane=True, num_experts=32, top_k=2)
+E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
+E_loc = E // EP
+B, max_len = 2, 24
+mesh = make_host_mesh(1, EP)
+with mesh:
+    bundle = build_spec_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"))
+    sharded = bundle.lower().compile()
+    # the replicated fallback: the pre-distributed decode plane (plain Model,
+    # GSPMD left to partition the jnp gather) under identical shardings
+    fallback = (
+        jax.jit(Model(cfg).decode_tokens).lower(*bundle.abstract_inputs).compile()
+    )
+hlo_s, hlo_f = sharded.as_text(), fallback.as_text()
+full_stack = f"f32[{E},{d},{f}]"
+slot_re = re.compile(rf"f32\\[{E},\\d+,{d}\\]")
+# the fallback pathology: the partitioner executes the global-id weight
+# gather as local-gather + mask + all-reduce, materializing T*k per-token
+# COPIES of (d, f)/(f, d) weight tiles; the plan-sliced path reads each
+# resident tile exactly once and forms no such tensor
+Tt = B * max(cfg.spec_tokens, 1)
+tiles = [f"f32[{Tt},{cfg.top_k},{d},{f}]", f"f32[{Tt},{cfg.top_k},{f},{d}]"]
+out = {
+    "ep": EP,
+    "expert_weight_bytes_per_shard": 3 * E_loc * d * f * 4,
+    "expert_weight_bytes_replicated": 3 * E * d * f * 4,
+    "full_stack_in_sharded_hlo": hlo_s.count(full_stack),
+    "gathered_tiles_in_sharded_hlo": sum(hlo_s.count(t) for t in tiles),
+    "gathered_tiles_in_fallback_hlo": sum(hlo_f.count(t) for t in tiles),
+    "slot_tensors_in_sharded_hlo": len(slot_re.findall(hlo_s)),
+    "psum_ops_per_launch": hlo_s.count(" all-reduce("),
+    "bytes_accessed_sharded": float(cost_analysis_dict(sharded).get("bytes accessed", 0.0)),
+    "bytes_accessed_fallback": float(cost_analysis_dict(fallback).get("bytes accessed", 0.0)),
+}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _bench_sharded() -> dict:
+    """Spawn the 8-device host-mesh measurement (XLA device-count flags must
+    be set before jax initializes, so this cannot run in-process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(_REPO_ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CODE],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n{proc.stderr[-4000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
 def run() -> dict:
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
     return {
         "planes": [_bench_plane(cfg, False), _bench_plane(cfg, True)],
         "speculative": _bench_spec(cfg),
         "rolling": _bench_rolling(cfg),
+        "sharded": _bench_sharded(),
     }
 
 
@@ -318,6 +406,38 @@ def main() -> None:
     print(
         f"# rolling window W={roll['window']}: step bytes {roll['bytes_1x']/1e6:.2f} MB at 1x max_len "
         f"vs {roll['bytes_8x']/1e6:.2f} MB at 8x — bounded by the window"
+    )
+
+    sh = results["sharded"]
+    ratio = sh["expert_weight_bytes_per_shard"] / sh["expert_weight_bytes_replicated"]
+    assert ratio == 1.0 / sh["ep"], ("per-shard expert-weight bytes must be 1/ep", sh)
+    assert sh["full_stack_in_sharded_hlo"] == 0, (
+        "the sharded decode plane must never materialize the full (E, d, f) "
+        "expert stacks on a shard", sh,
+    )
+    assert sh["gathered_tiles_in_sharded_hlo"] == 0, (
+        "the plan-sliced data plane must not form per-assignment weight-tile "
+        "copies", sh,
+    )
+    assert sh["gathered_tiles_in_fallback_hlo"] > 0, (
+        "the replicated fallback should still pay the per-assignment gathered "
+        "weight tiles (otherwise this comparison is vacuous)", sh,
+    )
+    assert sh["slot_tensors_in_sharded_hlo"] == 0, (
+        "no (E, C, d) slot tensors may exist under shard_map", sh,
+    )
+    assert sh["bytes_accessed_sharded"] < sh["bytes_accessed_fallback"], (
+        "the sharded decode launch must access fewer bytes than the fallback", sh,
+    )
+    print(
+        f"# sharded decode (ep={sh['ep']}): resident expert-weight bytes/shard "
+        f"{sh['expert_weight_bytes_replicated']/1e3:.0f} -> "
+        f"{sh['expert_weight_bytes_per_shard']/1e3:.0f} KB ({ratio:.3f}x = 1/ep), "
+        f"per-assignment gathered weight tiles {sh['gathered_tiles_in_fallback_hlo']} -> 0, "
+        f"slot tensors under shard_map: 0, "
+        f"{sh['psum_ops_per_launch']} all-reduce ops/launch, "
+        f"bytes accessed {sh['bytes_accessed_fallback']/1e6:.2f} -> "
+        f"{sh['bytes_accessed_sharded']/1e6:.2f} MB"
     )
 
     out = _REPO_ROOT / "BENCH_decode.json"

@@ -157,13 +157,27 @@ def topk_agreement(a_ids: jnp.ndarray, b_ids: jnp.ndarray) -> jnp.ndarray:
     ``test_lookahead_plan_quality_degrades_gracefully``): the decode plane's
     consumed plan is one position stale relative to the freshest available
     routing source, and this is the agreement between the two — a regression
-    in lookahead quality shows up here before it shows up in outputs.  Top-k
-    ids are distinct within a row, so the pairwise-equality count IS the
-    intersection size.
+    in lookahead quality shows up here before it shows up in outputs.
+
+    Set semantics are exact even when a row carries duplicate ids (k close
+    to or above the expert count — smoke configs, hand-built plans): only
+    the first occurrence of an id counts toward intersection and set sizes,
+    so the result is always the true Jaccard of the two id SETS, in [0, 1].
+    For the production case (distinct ids per row) this reduces to the
+    pairwise-equality count over ``2k - count``.
     """
-    inter = (a_ids[..., :, None] == b_ids[..., None, :]).any(-1).sum(-1)  # (T,)
     k = a_ids.shape[-1]
-    return jnp.mean(inter / (2 * k - inter))
+
+    def first_occurrence(ids):
+        # True where ids[..., i] has no equal entry at a lower index
+        dup = ids[..., :, None] == ids[..., None, :]  # (..., k, k)
+        earlier = jnp.tril(jnp.ones((k, k), bool), -1)
+        return ~(dup & earlier).any(-1)
+
+    fa, fb = first_occurrence(a_ids), first_occurrence(b_ids)
+    inter = ((a_ids[..., :, None] == b_ids[..., None, :]).any(-1) & fa).sum(-1)
+    union = fa.sum(-1) + fb.sum(-1) - inter
+    return jnp.mean(inter / jnp.maximum(union, 1))
 
 
 def decode_plan_as_dispatch(plan: DecodePlan, num_experts: int) -> DispatchPlan:

@@ -145,6 +145,30 @@ class DecodePlan(NamedTuple):
             weights=self.weights.reshape(-1, k),
         )
 
+    def shard_slice(self, first_expert, num_local: int) -> "DecodePlan":
+        """Per-shard view of the plan: a filter on ``expert_ids`` against the
+        shard's resident expert slice ``[first_expert, first_expert + num_local)``.
+
+        This is the distributed control word: the same replicated plan rows
+        travel to every shard, and each shard keeps only the assignments it
+        can execute — expert ids are rebased to the local stack and
+        non-resident assignments keep a valid local id (0) with weight 0, so
+        the capacity-free data plane stays in-bounds and contributes exactly
+        zero for them.  No slot arithmetic, no repacking, no gather of remote
+        assignments: the plan is masked in place (peer-to-peer control — the
+        "instruction address" goes to the PEs that need it, never through a
+        central sequencer).  One psum of the partial expert outputs
+        reconstructs the full combine (see
+        :func:`repro.parallel.moe_parallel.make_sharded_decode_apply`).
+        """
+        local = (self.expert_ids >= first_expert) & (
+            self.expert_ids < first_expert + num_local
+        )
+        return DecodePlan(
+            expert_ids=jnp.where(local, self.expert_ids - first_expert, 0).astype(jnp.int32),
+            weights=jnp.where(local, self.weights, 0.0).astype(jnp.float32),
+        )
+
     @property
     def num_tokens(self) -> int:
         return self.expert_ids.shape[0]

@@ -18,9 +18,20 @@ vectors).  Between launches the host:
   MoE layer) so lookahead-staleness regressions are visible in production
   output, mirroring ``test_lookahead_plan_quality_degrades_gracefully``.
 
+Distributed decode plane (``--model N``): the cache-carried ``DecodePlan`` is
+the distributed control word — plan rows replicate over the model axis, each
+shard executes only its resident expert slice (a filter on expert ids, no
+slot arithmetic) and ONE psum per MoE layer combines the partial outputs
+(:func:`repro.parallel.moe_parallel.make_sharded_decode_apply`).  Everything
+stays mesh-resident between launches: the batch cache is allocated directly
+with its serving sharding, the decode step compiles with in/out shardings
+pinned and the cache donated, and per-slot admission is a sharding-preserving
+``dynamic_update_slice`` of the B=1 prefilled cache — no host round trip, no
+re-layout between launches.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
         --smoke --slots 4 --prompt-len 32 --gen 16 --requests 8 \
-        --decode-plane --spec-tokens 4 --telemetry
+        --decode-plane --spec-tokens 4 --model 2 --telemetry
 """
 from __future__ import annotations
 
@@ -83,12 +94,15 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from jax.sharding import NamedSharding
 
     from repro.configs import get_config, get_smoke_config
     from repro.configs.base import ShapeCell
     from repro.launch.mesh import make_host_mesh
     from repro.launch.speculative import greedy_accept
-    from repro.launch.steps import build_spec_serve_step
+    from repro.launch.steps import build_model, build_spec_serve_step
+    from repro.models import transformer as trf
+    from repro.parallel.sharding import batch_spec, cache_shardings
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(
@@ -118,10 +132,24 @@ def main() -> None:
             cfg, mesh, ShapeCell("d", max_len, B, "decode"), telemetry=telemetry
         )
         model = serve_b.model
+        c_shard = serve_b.in_shardings[1]
         params = jax.device_put(model.init(jax.random.PRNGKey(0)), serve_b.in_shardings[0])
-        cache = jax.device_put(model.init_cache(B, max_len), serve_b.in_shardings[1])
-        prefill = jax.jit(model.prefill)
-        admit = jax.jit(model.write_cache_slot, donate_argnums=(0,))
+        # the serving cache is allocated directly with its mesh layout and
+        # never leaves it: the decode step donates it in place, and admission
+        # below writes prefilled slots into it sharding-preservingly
+        cache = model.init_cache(B, max_len, shardings=c_shard)
+        # admission prefill runs at B=1 (batch replicated; KV heads stay
+        # model-sharded), through a model whose collectives are built for
+        # batch=1 — the serve model's batch axes need not divide 1
+        pf_model = build_model(cfg, mesh, 1)
+        c1_abs = jax.eval_shape(lambda: trf.init_cache(cfg, 1, max_len))
+        c1_shard = cache_shardings(c1_abs, 1, mesh)
+        lg1_shard = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
+        prefill = jax.jit(pf_model.prefill, out_shardings=(lg1_shard, c1_shard))
+        one_cache_init = jax.jit(
+            lambda: trf.init_cache(cfg, 1, max_len), out_shardings=c1_shard
+        )
+        admit = jax.jit(model.write_cache_slot, donate_argnums=(0,), out_shardings=c_shard)
         decode = serve_b.jit()
 
         # host-side slot state (the ragged-batch control words)
@@ -144,7 +172,7 @@ def main() -> None:
                     continue
                 prompt = queue.pop(0)
                 t0 = time.perf_counter()
-                one = model.init_cache(1, max_len)
+                one = one_cache_init()
                 fe = (
                     jnp.zeros((1, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
                     if cfg.frontend

@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import transformer as T
 from repro.models.model import Model
 from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
-from repro.parallel.moe_parallel import make_sharded_moe_apply
+from repro.parallel.moe_parallel import make_sharded_decode_apply, make_sharded_moe_apply
 from repro.parallel.sharding import (
     batch_spec,
     cache_shardings,
@@ -71,12 +71,19 @@ def build_model(cfg: ModelConfig, mesh: Mesh, batch: int, *, strategy: str = "tp
     baxes = batch_spec(batch, mesh)[0] or ()
     baxes = (baxes,) if isinstance(baxes, str) else tuple(baxes)
     moe_apply = None
+    decode_apply = None
     if cfg.is_moe:
         raw = make_sharded_moe_apply(cfg, mesh, baxes)
 
         def moe_apply(x, rs, p):
             y, aux = raw(x, rs, p)
             return y, aux
+
+        if cfg.decode_plane:
+            # distributed decode plane: cache-carried DecodePlans execute as
+            # per-shard slices + one psum instead of the replicated fallback
+            # (raises, not falls back, when experts don't divide the mesh)
+            decode_apply = make_sharded_decode_apply(cfg, mesh, baxes)
 
     res_spec = P(baxes or None, None, None)
     if strategy == "fsdp":
@@ -90,7 +97,7 @@ def build_model(cfg: ModelConfig, mesh: Mesh, batch: int, *, strategy: str = "tp
     def constrain(x):
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, res_spec))
 
-    return Model(cfg, moe_apply=moe_apply, constrain=constrain)
+    return Model(cfg, moe_apply=moe_apply, constrain=constrain, decode_moe_apply=decode_apply)
 
 
 def opt_state_pspecs(opt_state_abs: Any, params_abs: Any, mesh: Mesh, *, strategy: str = "tp") -> Any:

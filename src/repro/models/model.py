@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import layers as L
+from repro.models import moe
 from repro.models import transformer as T
 
 Params = Dict[str, Any]
@@ -23,9 +24,15 @@ class Model:
         cfg: ModelConfig,
         moe_apply: Optional[T.MoeApply] = None,
         constrain: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+        decode_moe_apply: Optional[T.DecodeApply] = None,
     ):
         self.cfg = cfg
         self.moe_apply = moe_apply or T._default_moe_apply(cfg)
+        # Decode-plane plan executor: the distributed runtime injects the
+        # shard_map psum strategy (each shard runs only its resident experts
+        # for the cache-carried plan's rows, one psum combines) — see
+        # launch.steps.build_model.  Default: the single-host data plane.
+        self.decode_moe_apply = decode_moe_apply or moe.moe_decode_ffn
         # Residual-stream sharding constraint injected by the distributed
         # runtime (launch.steps): pins the post-embedding activations to
         # (batch-sharded, replicated-over-model).  Without it, a d-sharded
@@ -40,8 +47,17 @@ class Model:
     def init(self, key) -> Params:
         return T.init_params(key, self.cfg)
 
-    def init_cache(self, batch: int, max_len: int) -> Params:
-        return T.init_cache(self.cfg, batch, max_len)
+    def init_cache(self, batch: int, max_len: int, *, shardings: Optional[Any] = None) -> Params:
+        """Fresh decode cache; with ``shardings`` (a pytree of NamedShardings
+        matching the cache structure) the zeros are allocated directly with
+        the requested layout on the mesh — no host-side build + device_put
+        round trip, which matters when the KV cache is the largest live
+        buffer of the serving process."""
+        if shardings is None:
+            return T.init_cache(self.cfg, batch, max_len)
+        return jax.jit(
+            partial(T.init_cache, self.cfg, batch, max_len), out_shardings=shardings
+        )()
 
     # ------------------------------------------------------------------
     # embedding / stack plumbing
@@ -193,7 +209,8 @@ class Model:
             new_c = {}
             for j, kind in enumerate(pat):
                 h, rs, nc, _ = T.apply_layer_decode(
-                    h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg, cache_index, self.moe_apply
+                    h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg, cache_index,
+                    self.moe_apply, self.decode_moe_apply,
                 )
                 new_c[f"b{j}"] = nc
             return (h, rs), new_c
@@ -207,7 +224,10 @@ class Model:
         kinds = cfg.layer_kinds
         for j, (p, c) in enumerate(zip(params["blocks"]["rest"], cache["rest"])):
             kind = kinds[n_sb * len(pat) + j]
-            x, route_src, nc, _ = T.apply_layer_decode(x, route_src, p, c, kind, cfg, cache_index, self.moe_apply)
+            x, route_src, nc, _ = T.apply_layer_decode(
+                x, route_src, p, c, kind, cfg, cache_index,
+                self.moe_apply, self.decode_moe_apply,
+            )
             new_cache["rest"].append(nc)
         logits = self.logits(params, x)[:, 0]  # (B, V)
         return logits, new_cache
@@ -256,7 +276,8 @@ class Model:
             for j, kind in enumerate(pat):
                 h, rs, nc, a = T.apply_layer_decode_spec(
                     h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg,
-                    lengths, prev_accept, self.moe_apply, telemetry=telemetry,
+                    lengths, prev_accept, self.moe_apply,
+                    decode_apply=self.decode_moe_apply, telemetry=telemetry,
                 )
                 new_c[f"b{j}"] = nc
                 agg = agg + a
@@ -273,7 +294,8 @@ class Model:
             kind = kinds[n_sb * len(pat) + j]
             x, route_src, nc, a = T.apply_layer_decode_spec(
                 x, route_src, p, c, kind, cfg, lengths, prev_accept,
-                self.moe_apply, telemetry=telemetry,
+                self.moe_apply, decode_apply=self.decode_moe_apply,
+                telemetry=telemetry,
             )
             new_cache["rest"].append(nc)
             agree_sum = agree_sum + a

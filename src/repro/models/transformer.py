@@ -44,6 +44,14 @@ Params = Dict[str, Any]
 # moe_apply(x_ffn, route_src, params) -> (y, aux_losses (2,))
 MoeApply = Callable[[jnp.ndarray, Optional[jnp.ndarray], Params], Tuple[jnp.ndarray, jnp.ndarray]]
 
+# decode_apply(x_ffn (B, S, d), plan, params) -> y (B, S, d): executes a
+# cache-carried DecodePlan on the decode data plane.  Injectable so the
+# distributed runtime can substitute the shard_map psum strategy
+# (parallel.moe_parallel.make_sharded_decode_apply) — the single-host default
+# is moe.moe_decode_ffn.  The router for the NEXT step stays in the layer
+# (replicated f32 control math), only plan *execution* is distributed.
+DecodeApply = Callable[[jnp.ndarray, DecodePlan, Params], jnp.ndarray]
+
 
 @jax.custom_vjp
 def _res(x: jnp.ndarray) -> jnp.ndarray:
@@ -318,6 +326,7 @@ def apply_layer_decode(
     cfg: ModelConfig,
     cache_index: jnp.ndarray,  # scalar int32
     moe_apply: MoeApply,
+    decode_apply: Optional[DecodeApply] = None,
 ):
     aux = jnp.zeros((2,), jnp.float32)
     if kind in ("attn", "local", "moe"):
@@ -338,7 +347,7 @@ def apply_layer_decode(
                 # then run the router for the NEXT step from this step's
                 # control-plane source, overlapping this layer's FFN
                 plan = DecodePlan(cache["plan_e"], cache["plan_w"])
-                y = moe.moe_decode_ffn(ffn_in, plan, p["moe"])
+                y = (decode_apply or moe.moe_decode_ffn)(ffn_in, plan, p["moe"])
                 src = (route_src if route_src is not None else h)[:, -1, :]
                 nxt = route_topk_decode(src, p["moe"]["router"], cfg.top_k)
                 new_cache["plan_e"] = nxt.expert_ids
@@ -372,6 +381,7 @@ def apply_layer_decode_spec(
     prev_accept: jnp.ndarray,  # (B,) int32 accepted-row index into the plan vector
     moe_apply: MoeApply,
     *,
+    decode_apply: Optional[DecodeApply] = None,
     telemetry: bool = False,
 ):
     """Multi-token (speculative) ragged decode for one layer.
@@ -424,8 +434,8 @@ def apply_layer_decode_spec(
                     first_e, first_w = cached_e, cached_w
                 cons_e = jnp.concatenate([first_e[:, None], all_e[:, : T - 1]], axis=1)
                 cons_w = jnp.concatenate([first_w[:, None], all_w[:, : T - 1]], axis=1)
-                plan = DecodePlan(cons_e, cons_w).flatten()
-                y = moe.moe_decode_ffn(ffn_in, plan, p["moe"])
+                plan = DecodePlan(cons_e, cons_w)  # (B, T, k): one row per draft
+                y = (decode_apply or moe.moe_decode_ffn)(ffn_in, plan, p["moe"])
                 if cached_e.ndim == 3:
                     new_cache["plan_e"] = all_e
                     new_cache["plan_w"] = all_w

@@ -34,7 +34,8 @@ from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core.control_plane import capacity_for, combine, dispatch, route_topk
-from repro.models.moe import local_experts_fn
+from repro.core.plans import DecodePlan
+from repro.models.moe import _shared_experts, local_experts_fn
 
 Params = Dict[str, Any]
 
@@ -194,3 +195,71 @@ def make_sharded_moe_apply(
         return fn(x_ffn, rs, p)
 
     return moe_apply
+
+
+def make_sharded_decode_apply(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...],
+    *,
+    ep_axis: str = "model",
+):
+    """Distributed Agile decode plane: execute a cache-carried DecodePlan with
+    the psum strategy, driven by per-shard plan slices.
+
+    Returns ``decode_apply(x_ffn (B, S, d), plan, p) -> y (B, S, d)`` — the
+    decode-plane dual of :func:`make_sharded_moe_apply`'s psum body.  The
+    router does NOT run here: the plan was computed one step earlier and
+    arrives as a cache read, replicated over the model axis (control is tiny;
+    replicating it is the peer-to-peer delivery).  Each shard filters the
+    plan rows against its resident expert slice
+    (:meth:`~repro.core.plans.DecodePlan.shard_slice` — a mask on expert ids,
+    no slot arithmetic), runs the capacity-free decode data plane over its
+    local (E/ep, d, f) weight stacks only, and ONE psum combines the partial
+    outputs.  The spec-width plan vector ((B, T, k) fields, one row per draft
+    position) flattens to the same (B*T, k) control layout the single-host
+    kernel consumes, so speculative verify/rollback semantics are preserved
+    under shard_map unchanged.
+    """
+    E, k = cfg.num_experts, cfg.top_k
+    ep = mesh.shape[ep_axis]
+    if E % ep:
+        raise ValueError(
+            f"distributed decode plane: {E} experts are not divisible by the "
+            f"'{ep_axis}' mesh axis ({ep}); pick a model-parallel degree that "
+            f"divides num_experts (or 1)"
+        )
+    E_loc = E // ep
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+
+    def _body(x, pe, pw, p):
+        from repro.kernels.moe_decode import decode_moe
+
+        B_loc, S, d = x.shape
+        T_loc = B_loc * S
+        midx = jax.lax.axis_index(ep_axis)
+        plan = DecodePlan(pe.reshape(T_loc, k), pw.reshape(T_loc, k))
+        xf = x.reshape(T_loc, d)
+        y = decode_moe(xf, plan.shard_slice(midx * E_loc, E_loc), p)
+        y = jax.lax.psum(y, ep_axis).astype(x.dtype)
+        if "shared" in p:  # shared experts: replicated weights, added post-psum
+            y = y + _shared_experts(xf, p)
+        return y.reshape(B_loc, S, d)
+
+    def decode_apply(x_ffn: jnp.ndarray, plan: DecodePlan, p: Params) -> jnp.ndarray:
+        B, S, _ = x_ffn.shape
+        # plan fields arrive (B, k) at spec width 1 or (B, T, k) as a draft
+        # vector; normalize to (B, S, k) so the batch axes shard with x
+        pe = plan.expert_ids.reshape(B, S, k)
+        pw = plan.weights.reshape(B, S, k)
+        specs_p = _moe_param_specs(p)
+        fn = shard_map(
+            _body,
+            mesh=mesh,
+            in_specs=(x_spec, x_spec, x_spec, specs_p),
+            out_specs=x_spec,
+            check_rep=False,
+        )
+        return fn(x_ffn, pe, pw, p)
+
+    return decode_apply

@@ -242,6 +242,12 @@ def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
             try_model(1) or try_model(2)
     elif name == "conv":             # (B, K-1, ch)
         try_model(2)
+    elif name in ("plan_e", "plan_w"):
+        # cache-carried DecodePlan rows ((B, k) / (B, T, k)): the distributed
+        # control word stays REPLICATED over the model axis — every shard
+        # reads the same rows and filters them against its resident expert
+        # slice (DecodePlan.shard_slice); only the batch dim shards (on data).
+        pass
     return P(*spec)
 
 

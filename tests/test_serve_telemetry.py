@@ -1,0 +1,105 @@
+"""Serve-telemetry edge cases: the plan-quality metric on degenerate id
+sets, telemetry from a freshly-admitted single slot, and the host-side
+drafters on histories shorter than their lookup order."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# topk_agreement: exact set semantics
+# ---------------------------------------------------------------------------
+
+
+def test_topk_agreement_duplicate_ids_k_above_expert_count():
+    """k > n_experts forces duplicate ids per row; the metric must stay the
+    true set Jaccard (and in [0, 1]), not the distinct-id shortcut."""
+    import jax.numpy as jnp
+
+    from repro.core.control_plane import topk_agreement
+
+    # 2 experts, k=4: sets {0}, {0,1} -> 1/2; {0,1}, {0,1} -> 1
+    a = jnp.asarray([[0, 0, 0, 0], [0, 1, 0, 1]], jnp.int32)
+    b = jnp.asarray([[0, 1, 1, 0], [1, 0, 1, 0]], jnp.int32)
+    want = (0.5 + 1.0) / 2
+    assert float(topk_agreement(a, b)) == pytest.approx(want)
+
+
+def test_topk_agreement_fully_stale_plan_is_zero():
+    import jax.numpy as jnp
+
+    from repro.core.control_plane import topk_agreement
+
+    a = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    b = jnp.asarray([[4, 5], [6, 7]], jnp.int32)
+    assert float(topk_agreement(a, b)) == 0.0
+
+
+def test_topk_agreement_distinct_rows_unchanged():
+    """For distinct ids the set semantics reduce to the original pairwise
+    count — the production telemetry numbers do not move."""
+    import jax.numpy as jnp
+
+    from repro.core.control_plane import topk_agreement
+
+    a = jnp.asarray([[0, 1], [2, 3], [4, 5]], jnp.int32)
+    b = jnp.asarray([[1, 0], [2, 7], [6, 5]], jnp.int32)
+    assert float(topk_agreement(a, b)) == pytest.approx((1.0 + 1 / 3 + 1 / 3) / 3)
+
+
+def test_telemetry_on_just_admitted_single_slot():
+    """B=1 slot straight from admission prefill: the first telemetry launch
+    must return a finite plan_agreement in [0, 1] (the consumed plan is the
+    prefill-seeded one — exactly the stalest state the metric exists for)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+
+    Tn = 2
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, spec_tokens=Tn
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, L, B = 16, 5, 2
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, L), 0, cfg.vocab_size)
+    lg1, one = jax.jit(model.prefill)(params, prompt, model.init_cache(1, max_len))
+    cache = jax.jit(model.write_cache_slot)(model.init_cache(B, max_len), one, 1)
+
+    toks = jnp.tile(jnp.argmax(lg1, -1).astype(jnp.int32), (B,))[:, None]
+    toks = jnp.tile(toks, (1, Tn))
+    lengths = jnp.asarray([1, L], jnp.int32)  # slot 0 parked shallow, slot 1 fresh
+    _, _, metrics = jax.jit(
+        lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, telemetry=True)
+    )(params, cache, toks, lengths, jnp.zeros((B,), jnp.int32))
+    agree = float(metrics["plan_agreement"])
+    assert np.isfinite(agree) and 0.0 <= agree <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# drafters: short histories
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_shorter_than_order():
+    """Bigram lookup needs two past tokens; with fewer it must degrade to
+    repeat-last (never index out of range, always emit `width` tokens)."""
+    from repro.launch.serve import DRAFTERS
+
+    ngram = DRAFTERS["ngram"]
+    assert ngram([], 7, 3) == [7, 7, 7]
+    assert ngram([7], 7, 2) == [7, 7]
+    # a real bigram still fires once history is long enough
+    assert ngram([5, 9, 5], 5, 2) == [9, 5]
+
+
+def test_repeat_drafter_width_and_isolation():
+    from repro.launch.serve import DRAFTERS
+
+    out = DRAFTERS["repeat"]([1, 2, 3], 4, 3)
+    assert out == [4, 4, 4]

@@ -1,0 +1,284 @@
+"""Distributed decode plane: shard-sliced DecodePlans + psum execution.
+
+Contract, layer by layer:
+
+* plan — ``DecodePlan.shard_slice`` is a pure filter on expert ids: the
+  per-shard slices partition the assignments (weights preserved exactly,
+  local ids in-bounds), and summing each shard's capacity-free execution of
+  its slice reconstructs the full combine.
+* model/mesh — on a forced 8-device CPU host mesh, the injected
+  ``make_sharded_decode_apply`` makes ``decode_tokens`` emit IDENTICAL
+  tokens to the single-host decode plane, at spec widths 1 and 4, across
+  the a2a-prefill -> psum-decode transition.
+* serve — the full continuous-batching loop (admission into free slots,
+  greedy verify/rollback with a deliberately-bad drafter) emits the same
+  token streams sharded as single-host.
+"""
+from __future__ import annotations
+
+import textwrap
+
+import pytest
+
+from tests.conftest import run_subprocess_devices
+
+
+class FakeMesh:
+    """Duck-typed mesh: make_sharded_decode_apply reads only .shape at build."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+# ---------------------------------------------------------------------------
+# plan slicing (pure, single device)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_slice_partitions_assignments():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.control_plane import route_topk_decode
+    from repro.kernels.moe_decode import ref
+
+    rng_x = jax.random.normal(jax.random.PRNGKey(0), (6, 16))
+    wr = jax.random.normal(jax.random.PRNGKey(1), (16, 12)) * 0.5
+    plan = route_topk_decode(rng_x, wr, 3)
+    E, ep = 12, 3
+    E_loc = E // ep
+    total_w = np.zeros((6, 3), np.float32)
+    for s in range(ep):
+        local = plan.shard_slice(s * E_loc, E_loc)
+        ids = np.asarray(local.expert_ids)
+        w = np.asarray(local.weights)
+        assert ids.min() >= 0 and ids.max() < E_loc, "local ids must be in-bounds"
+        # masked assignments carry exactly zero weight; resident ones are
+        # untouched — the slices partition the weight mass
+        resident = (np.asarray(plan.expert_ids) // E_loc) == s
+        np.testing.assert_array_equal(w != 0.0, resident & (np.asarray(plan.weights) != 0.0))
+        total_w += w
+    np.testing.assert_allclose(total_w, np.asarray(plan.weights), rtol=0, atol=0)
+
+
+def test_shard_slice_execution_sums_to_full_combine():
+    """sum_s decode(x, plan | shard s, local weights) == decode(x, plan) —
+    the psum reconstruction the distributed data plane rests on."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.control_plane import route_topk_decode
+    from repro.kernels.moe_decode import ref
+
+    T, d, f, E, k, ep = 5, 16, 32, 8, 2, 4
+    E_loc = E // ep
+    keys = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(keys[0], (T, d))
+    wr = jax.random.normal(keys[1], (d, E)) * 0.5
+    wg = jax.random.normal(keys[2], (E, d, f)) * 0.1
+    wu = jax.random.normal(keys[3], (E, d, f)) * 0.1
+    wd = jax.random.normal(keys[4], (E, f, d)) * 0.1
+    plan = route_topk_decode(x, wr, k)
+    full = ref.decode_moe(x, plan.expert_ids, plan.weights, wg, wu, wd)
+    parts = []
+    for s in range(ep):
+        local = plan.shard_slice(s * E_loc, E_loc)
+        parts.append(
+            ref.decode_moe(
+                x, local.expert_ids, local.weights,
+                wg[s * E_loc : (s + 1) * E_loc],
+                wu[s * E_loc : (s + 1) * E_loc],
+                wd[s * E_loc : (s + 1) * E_loc],
+            )
+        )
+    np.testing.assert_allclose(
+        np.asarray(sum(parts)), np.asarray(full), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sharded_decode_apply_rejects_indivisible_experts():
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.parallel.moe_parallel import make_sharded_decode_apply
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True)
+    with pytest.raises(ValueError, match="not divisible"):
+        make_sharded_decode_apply(cfg, FakeMesh(data=1, model=3), ())
+
+
+# ---------------------------------------------------------------------------
+# 8-device host mesh: sharded == single-host, tokens bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_decode_tokens_match_single_host_widths_1_and_4():
+    """Spec widths 1 and 4, meshes (1,2) and (2,4): a2a prefill + psum decode
+    must produce the same argmax tokens as the single-host decode plane, and
+    the rollback relaunch (prev_accept row selection) must stay faithful."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCell
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.steps import build_spec_serve_step
+        from repro.models.model import Model
+        from repro.parallel.sharding import batch_spec
+
+        for Tn in (1, 4):
+            cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                                      decode_plane=True, spec_tokens=Tn)
+            B, S = 4, 16
+            max_len = S + 3 * Tn + 2
+            host = Model(cfg)
+            params_h = host.init(jax.random.PRNGKey(0))
+            prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+            cache = host.init_cache(B, max_len)
+            lg, cache = jax.jit(host.prefill)(params_h, prompts, cache)
+            t0 = jnp.argmax(lg, -1).astype(jnp.int32)
+            dh = jax.jit(host.decode_tokens)
+            launches = []
+            draft = jnp.tile(t0[:, None], (1, Tn))
+            lens = jnp.full((B,), S, jnp.int32)
+            acc = jnp.zeros((B,), jnp.int32)
+            lgh, cache = dh(params_h, cache, draft, lens, acc)
+            launches.append((draft, lens, acc, np.argmax(np.asarray(lgh), -1)))
+            # rollback-shaped relaunch: pretend 1 token accepted -> row 0,
+            # lengths + 1, next draft from the verified token
+            nxt = jnp.asarray(launches[0][3][:, :1])
+            draft2 = jnp.tile(nxt, (1, Tn))
+            lens2 = jnp.full((B,), S + 1, jnp.int32)
+            acc2 = jnp.zeros((B,), jnp.int32)
+            lgh2, cache = dh(params_h, cache, draft2, lens2, acc2)
+            launches.append((draft2, lens2, acc2, np.argmax(np.asarray(lgh2), -1)))
+
+            for dm in ((1, 2), (2, 4)):
+                mesh = make_host_mesh(*dm)
+                with mesh:
+                    bundle = build_spec_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"))
+                    m = bundle.model
+                    params = jax.device_put(params_h, bundle.in_shardings[0])
+                    c = m.init_cache(B, max_len, shardings=bundle.in_shardings[1])
+                    lg_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=1))
+                    pf = jax.jit(m.prefill, out_shardings=(lg_shard, bundle.in_shardings[1]))
+                    lgm, c = pf(params, prompts, c)
+                    assert np.array_equal(np.asarray(jnp.argmax(lgm, -1)), np.asarray(t0)), \\
+                        f"prefill tokens diverge on mesh {dm}"
+                    step = bundle.jit()
+                    for i, (dr, ln, ac, want) in enumerate(launches):
+                        lgx, c = step(params, c, dr, ln, ac)
+                        got = np.argmax(np.asarray(lgx), -1)
+                        assert np.array_equal(got, want), \\
+                            f"T={Tn} mesh={dm} launch {i}: tokens diverge"
+            print(f"T={Tn} ok")
+        print("OK")
+    """)
+    out = run_subprocess_devices(code, n_devices=8)
+    assert "OK" in out
+
+
+def test_sharded_serve_loop_matches_single_host_with_admission_and_rollback():
+    """Full continuous-batching semantics on the mesh: B=1 prefill admitted
+    into sharded cache slots, repeat drafter (worst case: constant
+    rejections), greedy verify/rollback — emitted streams equal single-host
+    sequential greedy decode per request."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCell
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.speculative import greedy_accept
+        from repro.launch.steps import build_model, build_spec_serve_step
+        from repro.models import transformer as trf
+        from repro.models.model import Model
+        from repro.parallel.sharding import batch_spec, cache_shardings
+
+        Tn, B, gen = 3, 2, 6
+        cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                                  decode_plane=True, spec_tokens=Tn)
+        lens_by_req = [10, 7, 12]
+        max_len = max(lens_by_req) + gen + Tn + 1
+        host = Model(cfg)
+        params_h = host.init(jax.random.PRNGKey(0))
+        prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (1, L), 0, cfg.vocab_size)
+                   for i, L in enumerate(lens_by_req)]
+
+        # oracle: single-host sequential greedy per request
+        seq1 = Model(dataclasses.replace(cfg, spec_tokens=1))
+        want = []
+        for pr in prompts:
+            c = seq1.init_cache(1, max_len)
+            lg, c = jax.jit(seq1.prefill)(params_h, pr, c)
+            tk = jnp.argmax(lg, -1).astype(jnp.int32)
+            toks = [int(tk[0])]
+            for i in range(gen):
+                lg, c = jax.jit(seq1.decode_step)(params_h, c, tk, jnp.int32(pr.shape[1] + i))
+                tk = jnp.argmax(lg, -1).astype(jnp.int32)
+                toks.append(int(tk[0]))
+            want.append(toks)
+
+        mesh = make_host_mesh(1, 2)
+        with mesh:
+            bundle = build_spec_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"))
+            model = bundle.model
+            c_shard = bundle.in_shardings[1]
+            params = jax.device_put(params_h, bundle.in_shardings[0])
+            cache = model.init_cache(B, max_len, shardings=c_shard)
+            pf_model = build_model(cfg, mesh, 1)
+            c1_shard = cache_shardings(jax.eval_shape(lambda: trf.init_cache(cfg, 1, max_len)), 1, mesh)
+            lg1 = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
+            prefill = jax.jit(pf_model.prefill, out_shardings=(lg1, c1_shard))
+            one_init = jax.jit(lambda: trf.init_cache(cfg, 1, max_len), out_shardings=c1_shard)
+            admit = jax.jit(model.write_cache_slot, donate_argnums=(0,), out_shardings=c_shard)
+            decode = bundle.jit()
+
+            queue = list(range(len(prompts)))
+            lengths = np.zeros((B,), np.int32)
+            prev_accept = np.zeros((B,), np.int32)
+            last = np.zeros((B,), np.int32)
+            gen_left = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
+            req_of = [-1] * B
+            got = [[] for _ in prompts]
+            while queue or active.any():
+                for b in range(B):
+                    if active[b] or not queue:
+                        continue
+                    r = queue.pop(0)
+                    lg, one = prefill(params, prompts[r], one_init())
+                    cache = admit(cache, one, b)
+                    lengths[b] = prompts[r].shape[1]
+                    last[b] = int(jnp.argmax(lg[0]))
+                    got[r].append(int(last[b]))
+                    prev_accept[b] = 0
+                    gen_left[b] = gen
+                    active[b] = True
+                    req_of[b] = r
+                toks = np.tile(last[:, None], (1, Tn)).astype(np.int32)
+                lg, cache = decode(params, cache, jnp.asarray(toks),
+                                   jnp.asarray(lengths), jnp.asarray(prev_accept))
+                y = np.asarray(jnp.argmax(lg, -1))
+                for b in range(B):
+                    if not active[b]:
+                        lengths[b] = 0
+                        continue
+                    a = greedy_accept(toks[b], y[b], Tn, int(gen_left[b]))
+                    got[req_of[b]].extend(int(v) for v in y[b, :a])
+                    lengths[b] += a
+                    gen_left[b] -= a
+                    last[b] = y[b, a - 1]
+                    prev_accept[b] = a - 1
+                    if gen_left[b] <= 0:
+                        active[b] = False
+        assert got == want, (got, want)
+        print("OK")
+    """)
+    out = run_subprocess_devices(code, n_devices=8)
+    assert "OK" in out
