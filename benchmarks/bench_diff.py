@@ -1,0 +1,76 @@
+"""Diff the freshly-emitted ``BENCH_decode.json`` against the committed one,
+comparing ONLY the ``structural`` section.
+
+Timing fields (ms/us wall clock) are machine-dependent and re-emitted on
+every benchmark run — diffing them would make every CI run dirty the
+committed artifact.  Structural fields (HLO tensor counts, analytic byte
+sizes, accept counts) must be stable; cost-analysis byte totals may drift
+slightly across jax releases, so they get a relative tolerance while pure
+counts must match exactly.
+
+    PYTHONPATH=src python -m benchmarks.bench_diff [path=BENCH_decode.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# cost-analysis byte totals: deterministic for a fixed jax, but allowed to
+# drift across compiler releases
+_TOLERANT = ("bytes_accessed", "bytes_launch", "bytes_per_token", "bytes_per_accepted", "bytes_")
+_REL_TOL = 0.25
+
+
+def _flatten(node, prefix=""):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _flatten(v, f"{prefix}{k}.")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _flatten(v, f"{prefix}{i}.")
+    else:
+        yield prefix[:-1], node
+
+
+def main() -> None:
+    path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else _REPO_ROOT / "BENCH_decode.json"
+    fresh = json.loads(path.read_text())
+    committed = json.loads(
+        subprocess.check_output(
+            ["git", "-C", str(_REPO_ROOT), "show", f"HEAD:{path.name}"], text=True
+        )
+    )
+    a = dict(_flatten(committed.get("structural", {})))
+    b = dict(_flatten(fresh.get("structural", {})))
+    errors = []
+    for key in sorted(set(a) | set(b)):
+        if key not in a:
+            errors.append(f"NEW structural field not in committed artifact: {key} = {b[key]}")
+            continue
+        if key not in b:
+            errors.append(f"structural field DISAPPEARED from fresh run: {key} = {a[key]}")
+            continue
+        va, vb = a[key], b[key]
+        if va == vb:
+            continue
+        leaf = key.rsplit(".", 1)[-1]
+        tolerant = any(leaf.startswith(t) for t in _TOLERANT)
+        if tolerant and isinstance(va, (int, float)) and isinstance(vb, (int, float)):
+            if abs(vb - va) <= _REL_TOL * max(abs(va), 1.0):
+                print(f"  ~ {key}: {va} -> {vb} (within {_REL_TOL:.0%} byte tolerance)")
+                continue
+        errors.append(f"structural MISMATCH: {key}: committed {va} != fresh {vb}")
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} structural difference(s) — if intentional, re-run "
+              "`python -m benchmarks.decode` and commit the refreshed artifact.")
+        sys.exit(1)
+    print(f"structural sections match ({len(b)} fields; timing fields ignored)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,14 @@ Three sections:
   KV bytes a decode step reads are bounded by ``local_window`` regardless of
   ``max_len`` — asserted via XLA cost analysis by growing ``max_len`` 8x and
   checking the step's bytes-accessed stays flat.
+* **tree** (PR 5): draft TREES through the ancestor-masked launch.  A T-node
+  tree launch moves the same data-plane bytes as a T-token linear launch
+  (the ancestor mask is T extra int32 control words), so hedging across
+  alternative continuations is free at the byte level: in the deterministic
+  "unsure drafter" scenario (top-1 wrong, true token in the sibling slot)
+  the tree accepts strictly more tokens per launch at equal launch bytes —
+  bytes/accepted-token <= the linear-draft path at equal accept rate,
+  asserted from cost analysis + a token-exact serve sim.
 * **sharded** (PR 4): the distributed decode plane on a forced 8-device CPU
   host mesh (spawned subprocess: the device count must be set before jax
   initializes).  With the cache-carried plan sliced per shard
@@ -28,7 +36,13 @@ Three sections:
   execute the global-id gather.  Asserted structurally from the partitioned
   HLO: the full (E, d, f) stack never materializes on the sharded path (and
   no (E, C, d) slot tensor exists under shard_map), while the fallback HLO
-  contains it.
+  contains it.  If the forced 8-device subprocess cannot come up the section
+  prints an explicit ``SKIPPED`` line with the reason (never a silent skip).
+
+``BENCH_decode.json`` is split into a ``structural`` section (bytes, HLO
+tensor counts, accept counts — machine-independent, diffed by CI via
+``benchmarks.bench_diff``) and a ``timing`` section (wall-clock ms/us —
+machine-dependent, informational only).
 
     PYTHONPATH=src python -m benchmarks.decode
 """
@@ -239,6 +253,135 @@ def _bench_spec(cfg) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# tree drafts: hedged accepts at equal launch bytes
+# ---------------------------------------------------------------------------
+
+
+def _bench_tree(cfg) -> dict:
+    """Tree vs linear drafts at equal node budget, deterministic drafters.
+
+    Structural claim: a T-node ancestor-masked tree launch reads the same
+    data-plane bytes as a T-token linear launch (the mask is T int32 control
+    words).  Behavioural claim: with an "unsure" drafter whose top-1
+    continuation is wrong but whose top-2 is right, the linear draft (which
+    can only launch its top-1 chain) accepts exactly 1 token per launch
+    while the tree (top-2 in the sibling slot) accepts 2 — so at equal
+    launch bytes, bytes per accepted token is strictly lower.  Both sims are
+    verified token-exact against the sequential greedy trace.
+    """
+    from repro.core.plans import TreePlan
+    from repro.launch.speculative import greedy_accept, greedy_accept_tree
+
+    tree = TreePlan.from_branching([2, 2]).validate()
+    T = tree.num_nodes
+    cT = dataclasses.replace(cfg, decode_plane=True, spec_tokens=T)
+    mT = Model(cT)
+    params = mT.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0, cfg.vocab_size)
+    G = 8
+    max_len = PROMPT + GEN + T
+
+    # sequential greedy oracle (the token stream both sims must reproduce)
+    c1 = dataclasses.replace(cfg, decode_plane=True)
+    m1 = Model(c1)
+    cache1 = m1.init_cache(BATCH, max_len)
+    lg, cache1 = jax.jit(m1.prefill)(params, prompts, cache1)
+    tk = jnp.argmax(lg, -1).astype(jnp.int32)
+    seq = [np.asarray(tk)]
+    dec1 = jax.jit(m1.decode_step)
+    for i in range(G + 2):
+        lg, cache1 = dec1(params, cache1, tk, jnp.int32(PROMPT + i))
+        tk = jnp.argmax(lg, -1).astype(jnp.int32)
+        seq.append(np.asarray(tk))
+
+    lin = jax.jit(mT.decode_tokens)
+    trl = jax.jit(lambda p, c, t, l, a: mT.decode_tokens(p, c, t, l, a, tree=tree))
+    # donated, exactly as the serve loop runs it — the commit cost is part of
+    # the tree path's per-launch byte bill and is charged below
+    commit = jax.jit(mT.commit_tree_path, donate_argnums=(0,))
+    toks0 = jnp.zeros((BATCH, T), jnp.int32)
+    lens0 = jnp.full((BATCH,), PROMPT, jnp.int32)
+    acc0 = jnp.zeros((BATCH,), jnp.int32)
+    path0 = jnp.tile(jnp.arange(T, dtype=jnp.int32)[None, :], (BATCH, 1))
+    cacheT = mT.init_cache(BATCH, max_len)
+    _, cacheT = jax.jit(mT.prefill)(params, prompts, cacheT)
+    bytes_lin = float(cost_analysis_dict(
+        lin.lower(params, cacheT, toks0, lens0, acc0).compile()
+    ).get("bytes accessed", 0.0))
+    bytes_tree = float(cost_analysis_dict(
+        trl.lower(params, cacheT, toks0, lens0, acc0).compile()
+    ).get("bytes accessed", 0.0))
+    bytes_commit = float(cost_analysis_dict(
+        commit.lower(cacheT, lens0, path0).compile()
+    ).get("bytes accessed", 0.0))
+
+    V = cfg.vocab_size
+
+    def run_sim(use_tree: bool):
+        cache = mT.init_cache(BATCH, max_len)
+        _, cache = jax.jit(mT.prefill)(params, prompts, cache)
+        j = 0  # tokens accepted so far (same for every sequence: drafts are
+        #        trace-derived, so accepts are uniform across the batch)
+        prev = np.zeros((BATCH,), np.int32)
+        launches = 0
+        emitted = []
+        while j < G:
+            last = seq[j]
+            true_next = seq[j + 1]
+            toks = np.zeros((BATCH, T), np.int32)
+            toks[:, 0] = last
+            if use_tree:
+                toks[:, 1] = (true_next + 1) % V  # unsure top-1: wrong
+                toks[:, 2] = true_next            # top-2 sibling: right
+                toks[:, 3] = (true_next + 2) % V  # children of the dead branch
+                toks[:, 4] = (true_next + 3) % V
+            else:
+                for t in range(1, T):
+                    toks[:, t] = (true_next + 1) % V  # top-1 chain: wrong
+            lens = np.full((BATCH,), PROMPT + j, np.int32)
+            lg, cache = trl(params, cache, jnp.asarray(toks), jnp.asarray(lens),
+                            jnp.asarray(prev)) if use_tree else lin(
+                params, cache, jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(prev))
+            launches += 1
+            y = np.asarray(jnp.argmax(lg, -1))
+            if use_tree:
+                path = greedy_accept_tree(toks[0], y[0], tree, G - j)
+                path_pad = np.tile(np.arange(T, dtype=np.int32), (BATCH, 1))
+                path_pad[:, : len(path)] = path
+                cache = commit(cache, jnp.asarray(lens), jnp.asarray(path_pad))
+                emitted.extend(y[:, p] for p in path)
+                prev = np.full((BATCH,), path[-1], np.int32)
+                j += len(path)
+            else:
+                a = greedy_accept(toks[0], y[0], T, G - j)
+                emitted.extend(y[:, i] for i in range(a))
+                prev = np.full((BATCH,), a - 1, np.int32)
+                j += a
+        # token-exactness vs the sequential trace
+        want = np.stack(seq[1 : j + 1], axis=1)
+        np.testing.assert_array_equal(np.stack(emitted, axis=1), want)
+        return launches, j
+
+    launches_lin, n_lin = run_sim(False)
+    launches_tree, n_tree = run_sim(True)
+    # the tree path pays decode + commit per round; the linear path only decode
+    per_acc_lin = bytes_lin / (n_lin / launches_lin)
+    per_acc_tree = (bytes_tree + bytes_commit) / (n_tree / launches_tree)
+    return {
+        "branching": "2,2",
+        "tree_nodes": T,
+        "bytes_launch_linear": bytes_lin,
+        "bytes_launch_tree": bytes_tree,
+        "bytes_commit_tree": bytes_commit,
+        "accept_per_launch_linear": n_lin / launches_lin,
+        "accept_per_launch_tree": n_tree / launches_tree,
+        "bytes_per_accepted_linear": per_acc_lin,
+        "bytes_per_accepted_tree": per_acc_tree,
+        "bytes_per_accepted_ratio": per_acc_tree / max(per_acc_lin, 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
 # rolling-window byte bound
 # ---------------------------------------------------------------------------
 
@@ -292,6 +435,11 @@ _SHARDED_CODE = """
 import repro.compat as _compat; _compat.install_shard_map()
 import dataclasses, json, re
 import jax, jax.numpy as jnp
+if len(jax.devices()) < 8:
+    # report the skip explicitly and unambiguously: the parent must never
+    # have to guess from a traceback whether devices were the problem
+    print(f"SKIP only {len(jax.devices())} host device(s) came up (need 8)")
+    raise SystemExit(0)
 from repro.compat import cost_analysis_dict
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeCell
@@ -341,30 +489,79 @@ print("RESULT " + json.dumps(out))
 """
 
 
-def _bench_sharded() -> dict:
+def _bench_sharded():
     """Spawn the 8-device host-mesh measurement (XLA device-count flags must
-    be set before jax initializes, so this cannot run in-process)."""
+    be set before jax initializes, so this cannot run in-process).
+
+    Returns ``(result_dict, None)`` on success or ``(None, reason)`` when the
+    forced 8-device mesh cannot come up — callers must print an explicit
+    SKIPPED line with the reason (a silent skip would make the CI log claim
+    coverage the run never had).  The skip signal is the subprocess's own
+    first-line ``SKIP <reason>`` self-report (emitted before any benchmark
+    code runs), so a genuine benchmark failure can never be misclassified as
+    a skip: any other nonzero exit still raises.
+    """
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(_REPO_ROOT / "src")
-    proc = subprocess.run(
-        [sys.executable, "-c", _SHARDED_CODE],
-        capture_output=True, text=True, timeout=900, env=env,
-    )
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _SHARDED_CODE],
+            capture_output=True, text=True, timeout=900, env=env,
+        )
+    except (OSError, subprocess.TimeoutExpired) as e:
+        return None, f"could not spawn the 8-device subprocess: {e!r}"
+    skips = [l for l in proc.stdout.splitlines() if l.startswith("SKIP ")]
+    if proc.returncode == 0 and skips:
+        return None, skips[0][len("SKIP "):]
     if proc.returncode != 0:
         raise RuntimeError(f"sharded bench subprocess failed:\n{proc.stderr[-4000:]}")
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
-    return json.loads(line[len("RESULT "):])
+    return json.loads(line[len("RESULT "):]), None
+
+
+# keys whose values are machine-dependent wall-clock measurements; everything
+# else (bytes, HLO tensor counts, accept counts, ratios of bytes) is
+# structural and must be reproducible across machines for a given jax
+_TIMING_KEYS = frozenset({
+    "ms_per_token", "control_us", "ms_per_token_seq", "ms_per_token_spec_oracle",
+})
+
+
+def _split_structural(node):
+    """Recursively split a results tree into (structural, timing) mirrors."""
+    if isinstance(node, dict):
+        s, t = {}, {}
+        for k, v in node.items():
+            if k in _TIMING_KEYS:
+                t[k] = v
+            else:
+                sv, tv = _split_structural(v)
+                if sv not in ({}, [], None):
+                    s[k] = sv
+                if tv not in ({}, [], None):
+                    t[k] = tv
+        return s, t
+    if isinstance(node, list):
+        pairs = [_split_structural(v) for v in node]
+        return [p[0] for p in pairs], [p[1] for p in pairs]
+    return node, None
 
 
 def run() -> dict:
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
-    return {
+    sharded, sharded_skip = _bench_sharded()
+    out = {
         "planes": [_bench_plane(cfg, False), _bench_plane(cfg, True)],
         "speculative": _bench_spec(cfg),
+        "tree": _bench_tree(cfg),
         "rolling": _bench_rolling(cfg),
-        "sharded": _bench_sharded(),
     }
+    if sharded is not None:
+        out["sharded"] = sharded
+    else:
+        out["sharded_skipped"] = sharded_skip
+    return out
 
 
 def main() -> None:
@@ -398,6 +595,29 @@ def main() -> None:
         f"{spec['ms_per_token_seq']:.2f} -> {spec['ms_per_token_spec_oracle']:.2f} ms/token at full accept"
     )
 
+    tr = results["tree"]
+    assert tr["bytes_launch_tree"] <= tr["bytes_launch_linear"] * 1.02, (
+        "an ancestor-masked tree launch must not move more data-plane bytes "
+        "than the same-width linear launch (the mask is control words only)",
+        tr,
+    )
+    assert tr["accept_per_launch_tree"] > tr["accept_per_launch_linear"], (
+        "with the unsure drafter the tree must accept strictly more tokens "
+        "per launch than the top-1 chain", tr,
+    )
+    assert tr["bytes_per_accepted_ratio"] < 1.0, (
+        "tree drafts must cost fewer bytes per accepted token than the "
+        "linear draft at equal node budget (commit launch included)", tr,
+    )
+    print(
+        f"# tree drafts ({tr['branching']}, {tr['tree_nodes']} nodes): launch bytes "
+        f"{tr['bytes_launch_linear']/1e6:.2f} (linear) vs {tr['bytes_launch_tree']/1e6:.2f} MB "
+        f"+ {tr['bytes_commit_tree']/1e6:.2f} MB commit (tree); "
+        f"unsure drafter accepts {tr['accept_per_launch_linear']:.2f} -> "
+        f"{tr['accept_per_launch_tree']:.2f} tokens/launch, "
+        f"bytes/accepted-token ratio {tr['bytes_per_accepted_ratio']:.2f}x"
+    )
+
     roll = results["rolling"]
     assert roll["bytes_8x"] < roll["bytes_1x"] * 1.15, (
         "rolling-window decode bytes must be bounded by the window, not max_len",
@@ -408,6 +628,10 @@ def main() -> None:
         f"vs {roll['bytes_8x']/1e6:.2f} MB at 8x — bounded by the window"
     )
 
+    if "sharded" not in results:
+        print(f"# sharded: SKIPPED — {results['sharded_skipped']}")
+        _emit_json(results)
+        return
     sh = results["sharded"]
     ratio = sh["expert_weight_bytes_per_shard"] / sh["expert_weight_bytes_replicated"]
     assert ratio == 1.0 / sh["ep"], ("per-shard expert-weight bytes must be 1/ep", sh)
@@ -440,9 +664,18 @@ def main() -> None:
         f"{sh['bytes_accessed_sharded']/1e6:.2f} MB"
     )
 
+    _emit_json(results)
+
+
+def _emit_json(results: dict) -> None:
+    structural, timing = _split_structural(results)
     out = _REPO_ROOT / "BENCH_decode.json"
-    out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {out}")
+    out.write_text(
+        json.dumps({"structural": structural, "timing": timing},
+                   indent=2, sort_keys=True) + "\n"
+    )
+    print(f"# wrote {out} (structural section diffed by benchmarks.bench_diff; "
+          "timing section machine-dependent)")
 
 
 if __name__ == "__main__":

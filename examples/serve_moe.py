@@ -13,6 +13,11 @@ valid cache prefix — the prefill-shaped machinery never runs per token.
 ``--spec-tokens N`` decodes speculatively: N tokens per launch through the
 vector-steered kernels (per-token cache indices on the scalar-prefetch path),
 with greedy verify/rollback — output is identical to sequential decode.
+``--draft-tree B1,B2,...`` launches draft *trees* instead of chains (per-depth
+branching factors; ngram-filled sibling slots hedge across alternative
+continuations): all nodes attend in one ancestor-masked launch sharing the
+prefix KV, the verifier walks the tree, and the accepted root path is
+compacted into the cache — output is still identical to sequential decode.
 ``--data D --model M`` serve on a (D, M) device mesh: prefill runs the a2a
 expert-parallel strategy and the decode plane executes the cache-carried plan
 as per-shard expert slices combined by one psum per MoE layer
@@ -45,6 +50,10 @@ def main() -> None:
     ap.add_argument("--spec-tokens", type=int, default=1,
                     help="speculative width: tokens per decode launch, with "
                          "greedy verify/rollback (1 = plain decode)")
+    ap.add_argument("--draft-tree", default="",
+                    help="per-depth branching factors for draft trees, e.g. "
+                         "'2,2' (implies --decode-plane speculative serve; "
+                         "overrides --spec-tokens with the node count)")
     ap.add_argument("--data", type=int, default=1,
                     help="data-parallel mesh axis (batch sharding)")
     ap.add_argument("--model", type=int, default=1,
@@ -52,6 +61,15 @@ def main() -> None:
                          "the decode plane runs plan-sliced psum expert "
                          "parallelism at --model > 1")
     args = ap.parse_args()
+
+    from repro.core.plans import TreePlan
+
+    tree = None
+    if args.draft_tree:
+        branching = [int(v) for v in args.draft_tree.split(",") if v.strip()]
+        tree = TreePlan.from_branching(branching).validate()
+        args.spec_tokens = tree.num_nodes
+        args.decode_plane = True
 
     cfg = get_smoke_config("qwen3-moe-235b-a22b")
     if args.fused:
@@ -105,16 +123,25 @@ def main() -> None:
         out = [toks]
         t0 = time.perf_counter()
         if args.spec_tokens > 1:
-            # speculative serve: T tokens per launch (repeat-last-token
-            # drafts), greedy verify keeps exactly what sequential decode
-            # would emit
+            # speculative serve: T tokens per launch (repeat-last-token chain
+            # drafts, or ngram-filled trees with --draft-tree), greedy verify
+            # keeps exactly what sequential decode would emit
             import numpy as np
 
-            from repro.launch.speculative import greedy_accept
+            from repro.launch.speculative import (
+                draft_tree_ngram,
+                greedy_accept,
+                greedy_accept_tree,
+            )
 
             T = args.spec_tokens
             lgT = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=2))
-            spec = jax.jit(model.decode_tokens, out_shardings=(lgT, c_shard))
+            spec = jax.jit(
+                lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=tree),
+                out_shardings=(lgT, c_shard),
+            )
+            commit = jax.jit(model.commit_tree_path, donate_argnums=(0,),
+                             out_shardings=c_shard)
             lengths = np.full((B,), S, np.int32)
             prev_accept = np.zeros((B,), np.int32)
             gen_left = np.full((B,), args.gen - 1, np.int32)
@@ -122,23 +149,42 @@ def main() -> None:
             last = np.array(toks)  # owned copy: updated in the verify loop
             history = [[int(v)] for v in last]
             while (gen_left > 0).any():
-                draft = np.tile(last[:, None], (1, T)).astype(np.int32)
+                if tree is not None:
+                    draft = np.stack(
+                        [draft_tree_ngram(history[b], int(last[b]), tree) for b in range(B)]
+                    ).astype(np.int32)
+                else:
+                    draft = np.tile(last[:, None], (1, T)).astype(np.int32)
                 logits, cache = spec(params, cache, jnp.asarray(draft),
                                      jnp.asarray(lengths), jnp.asarray(prev_accept))
                 launches += 1
                 y = np.asarray(jnp.argmax(logits, -1))
+                path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+                acc_n = np.zeros((B,), np.int32)
                 for b in range(B):
                     if gen_left[b] <= 0:
                         continue
-                    a = greedy_accept(draft[b], y[b], T, int(gen_left[b]))
-                    history[b].extend(int(v) for v in y[b, :a])
-                    lengths[b] += a
+                    if tree is not None:
+                        path = greedy_accept_tree(draft[b], y[b], tree, int(gen_left[b]))
+                        a = len(path)
+                        path_pad[b, :a] = path
+                        accepted = [int(y[b, p]) for p in path]
+                        prev_accept[b] = path[-1]
+                    else:
+                        a = greedy_accept(draft[b], y[b], T, int(gen_left[b]))
+                        accepted = [int(v) for v in y[b, :a]]
+                        prev_accept[b] = a - 1
+                    history[b].extend(accepted)
+                    acc_n[b] = a
                     gen_left[b] -= a
-                    prev_accept[b] = a - 1
-                    last[b] = y[b, a - 1]
+                    last[b] = accepted[-1]
+                if tree is not None and not tree.is_chain():
+                    cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
+                lengths += acc_n
             t_decode = time.perf_counter() - t0
             n_gen = args.gen - 1
-            print(f"decode: {launches} speculative launches (width {T}) x {B} seqs "
+            shape = f"tree {args.draft_tree}" if tree is not None else f"width {T}"
+            print(f"decode: {launches} speculative launches ({shape}) x {B} seqs "
                   f"in {t_decode*1e3:.1f} ms ({t_decode/max(n_gen,1)*1e3:.1f} ms/token, "
                   f"{n_gen/max(launches,1):.2f} accepted tokens/launch)")
             print("generated token ids (first sequence):", history[0][: args.gen])

@@ -4,13 +4,33 @@ In Marionette the control flow plane carries *instruction addresses* between
 PEs; the data plane executes whatever configuration those addresses select.
 The TPU analogue: small integer tensors that fully determine what the data
 plane does — which expert processes which token slot (DispatchPlan), which
-layers run on which pipeline stage (StagePlan).  They are deliberately tiny
-(int32 indices + f32 weights, KBs) next to the activations (GBs): the
-paper's 11.5%-area control network becomes a <1% byte-share control channel.
+layers run on which pipeline stage (StagePlan), which draft token attends to
+which cache rows (TreePlan).  They are deliberately tiny (int32 indices +
+f32 weights, KBs) next to the activations (GBs): the paper's 11.5%-area
+control network becomes a <1% byte-share control channel.
+
+Control-word invariants (the contracts every consumer relies on):
+
+* **Plan-row carry** — a :class:`DecodePlan` consumed at decode step ``t``
+  was computed at step ``t-1`` (prefill seeds ``t=0``) and rides the decode
+  cache to the consumer; with ``spec_tokens > 1`` the cache carries one plan
+  row per draft *node*, and the verifier's ``prev_accept`` (the node index
+  the previous launch accepted last) selects which row the next launch's
+  token 0 consumes.  Plan rows are replicated over the model mesh axis;
+  :meth:`DecodePlan.shard_slice` is the only per-shard view and is a pure
+  mask (it never renumbers slots or drops weight mass).
+* **Topological node order** — :class:`TreePlan` node ids are topologically
+  sorted (``parents[t] < t``), so node ``t``'s ancestors all sit at cache
+  rows ``base + u`` with ``u <= t`` and the per-token length vector
+  ``base + t + 1`` remains a correct DMA clamp for the ancestor-masked
+  attention kernel.
+* **Length-clamp contract** — no control word may direct the data plane past
+  a sequence's valid cache prefix: every attention index_map clamps against
+  the prefetched length vector before the ancestor mask is even consulted.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -180,6 +200,125 @@ class DecodePlan(NamedTuple):
     def control_bytes(self) -> int:
         """Bytes of control-plane state (decode dual of DispatchPlan's)."""
         return sum(int(x.size) * x.dtype.itemsize for x in (self.expert_ids, self.weights))
+
+
+class TreePlan(NamedTuple):
+    """Compiled draft-tree topology for one speculative launch.
+
+    ``parents[t]`` is the node id of draft node ``t``'s parent
+    (``parents[0] == -1``: node 0 is the root, the last accepted token).
+    Node ids are topologically ordered (``parents[t] < t``), node ``t``
+    occupies cache row ``base + t`` and rotary position ``base + depth(t)``.
+
+    This is the branch-divergent generalization of the linear draft control
+    word: the chain ``parents = (-1, 0, 1, ...)`` reproduces PR 3's
+    ``base + t`` causal structure exactly, while a branchy tree lets several
+    continuations of the same prefix share ONE launch (and the whole prefix
+    KV).  Like TileLoom's tile-granular plans, the topology is compiled once
+    — host-side, hashable, static under jit — into the two tensors the data
+    plane consumes:
+
+    * :meth:`ancestor_table` — the ``(T, T)`` mask (``table[t, u] == 1`` iff
+      ``u`` is on ``t``'s root path, self included) used by the masked-jnp
+      attention path and the verify logic;
+    * :meth:`ancestor_words` — the same table packed to one int32 bitmask
+      per node (bit ``u`` of word ``t``), the scalar-prefetch control word
+      of the ancestor-masked flash-decode kernel (hence ``T <= 31``).
+
+    The verifier walks the tree (``launch.speculative.greedy_accept_tree``)
+    and commits only the accepted root path
+    (``Model.commit_tree_path``) — everything else is overwritten by the
+    next launch, exactly like rejected linear draft rows.
+    """
+
+    parents: Tuple[int, ...]
+
+    @classmethod
+    def chain(cls, num_nodes: int) -> "TreePlan":
+        """The degenerate tree: a linear draft of ``num_nodes`` tokens."""
+        return cls(tuple(range(-1, num_nodes - 1)))
+
+    @classmethod
+    def from_branching(cls, branching: Sequence[int]) -> "TreePlan":
+        """Spine-with-siblings topology from per-depth branching factors.
+
+        ``branching[d]`` children hang off the depth-``d`` spine node; the
+        first child continues the spine (the drafter's top-1 continuation),
+        the rest are single-node alternatives (top-2..k).  ``(1, 1, 1)`` is
+        the width-4 chain; ``(2, 2)`` is a 5-node tree with two binary
+        branch points.
+        """
+        parents = [-1]
+        spine = 0
+        for width in branching:
+            if width < 1:
+                raise ValueError(f"branching factors must be >= 1, got {branching}")
+            first = len(parents)
+            parents.extend([spine] * width)
+            spine = first
+        return cls(tuple(parents))
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.parents)
+
+    def validate(self) -> "TreePlan":
+        T = self.num_nodes
+        if T < 1 or self.parents[0] != -1:
+            raise ValueError(f"node 0 must be the root (parent -1), got {self.parents}")
+        if any(not (0 <= self.parents[t] < t) for t in range(1, T)):
+            raise ValueError(f"parents must be topologically ordered: {self.parents}")
+        if T > 31:
+            raise ValueError(
+                f"draft trees are limited to 31 nodes (int32 ancestor bitmask), got {T}"
+            )
+        return self
+
+    def is_chain(self) -> bool:
+        return all(p == t - 1 for t, p in enumerate(self.parents))
+
+    def depths(self) -> Tuple[int, ...]:
+        """Depth of each node = its rotary-position offset from the base."""
+        d = [0] * self.num_nodes
+        for t in range(1, self.num_nodes):
+            d[t] = d[self.parents[t]] + 1
+        return tuple(d)
+
+    def children(self) -> Tuple[Tuple[int, ...], ...]:
+        """Children of each node, in node-id (drafter-rank) order."""
+        out: list = [[] for _ in range(self.num_nodes)]
+        for t in range(1, self.num_nodes):
+            out[self.parents[t]].append(t)
+        return tuple(tuple(c) for c in out)
+
+    def spine(self) -> Tuple[int, ...]:
+        """The first-child chain from the root (the drafter's top-1 path)."""
+        path = [0]
+        kids = self.children()
+        while kids[path[-1]]:
+            path.append(kids[path[-1]][0])
+        return tuple(path)
+
+    def ancestor_words(self) -> Tuple[int, ...]:
+        """Per-node int32 ancestor bitmask (bit u set iff u on t's root path,
+        self included) — the packed ``(T, T)`` table the kernel prefetches."""
+        self.validate()
+        words = [1]  # root: only itself
+        for t in range(1, self.num_nodes):
+            words.append(words[self.parents[t]] | (1 << t))
+        return tuple(words)
+
+    def ancestor_table(self) -> jnp.ndarray:
+        """The explicit ``(T, T)`` ancestor mask (int32 0/1)."""
+        words = self.ancestor_words()
+        T = self.num_nodes
+        return jnp.asarray(
+            [[(words[t] >> u) & 1 for u in range(T)] for t in range(T)], jnp.int32
+        )
+
+    def control_bytes(self) -> int:
+        """Bytes of control-plane state: one packed int32 word per node."""
+        return 4 * self.num_nodes
 
 
 class StagePlan(NamedTuple):

@@ -25,6 +25,33 @@ kernel — per (b, t) the math (block order, online-softmax updates) is
 IDENTICAL to a one-token launch, so a T-token launch is bitwise equal to T
 sequential launches.
 
+Tree drafts (branch-divergent control flow): the intra-draft causal mask is
+no longer implicit in the ``base + t`` length structure — it is an explicit
+**ancestor mask** riding the scalar-prefetch path alongside the lengths.
+Each draft node ``t`` carries one packed int32 control word (bit ``u`` set
+iff node ``u`` is on ``t``'s root path — the packed row of the launch's
+``(T, T)`` ancestor table, compiled once per tree shape by
+:class:`repro.core.plans.TreePlan`) plus the per-sequence base length.  A
+cache row ``p`` is then valid for node ``t`` iff ``p < base`` (shared
+committed prefix) or bit ``p - base`` of ``t``'s word is set — so ALL nodes
+of a branchy draft attend in ONE launch while sharing the prefix KV blocks.
+The linear draft is the degenerate chain whose ancestor words are all-ones:
+the mask reduces to the pure length clamp bit-for-bit, which is what keeps
+the chain path bitwise-identical to PR 3's vector-steered kernel.
+
+Control-word invariants (what every caller must uphold):
+
+* **Length-clamp contract** — ``lengths[b*T + t]`` bounds the highest cache
+  row node ``(b, t)`` may touch (``base + t + 1``); the KV index_maps clamp
+  the block walk against it BEFORE the ancestor mask is consulted, so no DMA
+  is ever issued past a token's valid extent, tree or chain.
+* **Topological rows** — draft node ``t`` must sit at cache row
+  ``base + t`` with ``parents[t] < t``; the ancestor bit test
+  ``(word >> (p - base)) & 1`` is only meaningful under that row layout.
+* **Chain default** — when no tree is supplied the ancestor words are ``-1``
+  (arithmetic shift keeps every bit set), making the mask a no-op and the
+  kernel's output bitwise-equal to the pre-tree linear kernel.
+
 The window-steered variant (:func:`flash_decode_window_pallas`) finishes the
 rolling-cache story: local-attention caches are modulo-addressed (slot
 ``pos % W``), so the valid window is up to two contiguous slot segments
@@ -33,7 +60,10 @@ index_map clamped to the written prefix — at most ``W`` KV bytes ever move,
 regardless of the sequence position or ``max_len`` — and masks per (b, t) by
 reconstructing each slot's absolute position from the prefetched position
 vector.  Rolling layers thereby leave the masked-jnp path with the same
-byte bound the rolling buffer already guarantees.
+byte bound the rolling buffer already guarantees.  (Rolling buffers carry
+``spec_tokens - 1`` slack slots so a draft's later writes never evict rows
+still inside an earlier draft token's window; tree drafts are chain-only on
+rolling layers.)
 """
 from __future__ import annotations
 
@@ -52,7 +82,7 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 def _flash_decode_kernel(
-    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    len_ref, anc_ref, base_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, bkv: int, n_kv: int, scale: float, T: int,
 ):
     b, t, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
@@ -64,6 +94,8 @@ def _flash_decode_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = len_ref[b * T + t]  # this token's valid prefix (control word)
+    anc = anc_ref[t]             # packed ancestor bitmask (-1 = chain: all set)
+    base = base_ref[b]           # committed-prefix length (draft rows start here)
     kv_base = ki * bkv
 
     @pl.when(kv_base < length)
@@ -72,7 +104,13 @@ def _flash_decode_kernel(
         k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bkv)
         kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
-        s = jnp.where(kv_pos < length, s, NEG_INF)
+        # rows below base are shared committed prefix; draft row base + u is
+        # visible iff bit u of this node's ancestor word is set (arithmetic
+        # shift: the chain word -1 keeps every bit, reducing the mask to the
+        # pure length clamp — bitwise the linear kernel)
+        u = kv_pos - base
+        on_path = (u < 0) | (jnp.right_shift(anc, jnp.clip(u, 0, 31)) & 1 > 0)
+        s = jnp.where((kv_pos < length) & on_path, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -95,6 +133,8 @@ def flash_decode_pallas(
     k: jnp.ndarray,        # (B, nkv, Skv, hd) full cache buffer
     v: jnp.ndarray,
     lengths: jnp.ndarray,  # (B*T,) int32 valid prefix length per token, >= 1
+    anc_words: Optional[jnp.ndarray] = None,  # (T,) int32 ancestor bitmasks
+    base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
     *,
     bkv: int = 128,
     interpret: bool = False,
@@ -107,26 +147,38 @@ def flash_decode_pallas(
     assert Skv % bkv == 0, "pad the cache to a block multiple in ops"
     n_kv = Skv // bkv
     grid = (B, T, nq, n_kv)
+    if anc_words is None:
+        # chain default: all-ones words make the ancestor test vacuous and
+        # the kernel bitwise-equal to the pure length-clamped linear kernel
+        anc_words = jnp.full((T,), -1, jnp.int32)
+    if base is None:
+        base = jnp.zeros((B,), jnp.int32)
 
-    def kv_map(b, t, h, ki, len_ref):
+    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref):
         # vector-steered: blocks past token (b, t)'s valid prefix re-map to
         # its last valid block (their compute is skipped), so their DMA never
-        # happens — per-token clamping against the prefetched length vector
+        # happens — per-token clamping against the prefetched length vector.
+        # The ancestor mask is applied inside the block; the length clamp
+        # alone bounds which blocks move (tree rows are within it by the
+        # topological-order invariant).
         last = (len_ref[b * T + t] - 1) // bkv
         return (b, h // group, jnp.minimum(ki, last), 0)
+
+    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref):
+        return (b, t, h, 0)
 
     kern = functools.partial(_flash_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T)
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, len_ref: (b, t, h, 0)),
+                pl.BlockSpec((1, 1, 1, hd), qo_map),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, len_ref: (b, t, h, 0)),
+            out_specs=pl.BlockSpec((1, 1, 1, hd), qo_map),
             scratch_shapes=[
                 pltpu.VMEM((1, 1), jnp.float32),
                 pltpu.VMEM((1, 1), jnp.float32),
@@ -138,7 +190,7 @@ def flash_decode_pallas(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lengths, q, k, v)
+    )(lengths, anc_words.astype(jnp.int32), base.astype(jnp.int32), q, k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +332,8 @@ def flash_decode(
     v: jnp.ndarray,
     cache_index: jnp.ndarray,  # scalar | (B,) | (B, T) int32 token position(s)
     *,
+    ancestors: Optional[jnp.ndarray] = None,  # (T,) int32 packed ancestor words
+    base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
     bkv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -288,6 +342,13 @@ def flash_decode(
     Token (b, t) attends to cache positions [0, index(b, t)] where the index
     vector is derived from ``cache_index`` (see :func:`_as_length_vector`) —
     one launch covers a whole speculative draft and/or a ragged batch.
+
+    With ``ancestors``/``base`` the draft rows are additionally masked by the
+    tree's ancestor table: node (b, t) sees committed rows ``[0, base[b])``
+    plus exactly the draft rows ``base[b] + u`` whose bit ``u`` is set in
+    ``ancestors[t]`` (see :class:`repro.core.plans.TreePlan.ancestor_words`).
+    Without them every draft row at or below the token's own row is visible —
+    the linear-chain behaviour, bit-for-bit.
     """
     it = (not on_tpu()) if interpret is None else interpret
     B, T, nq, hd = q.shape
@@ -300,7 +361,9 @@ def flash_decode(
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
     lengths = _as_length_vector(cache_index, B, T)
-    return flash_decode_pallas(q, kt, vt, lengths, bkv=bkv_, interpret=it)
+    return flash_decode_pallas(
+        q, kt, vt, lengths, anc_words=ancestors, base=base, bkv=bkv_, interpret=it
+    )
 
 
 def flash_decode_window(

@@ -18,6 +18,32 @@ vectors).  Between launches the host:
   MoE layer) so lookahead-staleness regressions are visible in production
   output, mirroring ``test_lookahead_plan_quality_degrades_gracefully``.
 
+Tree drafts (``--draft-tree B1,B2,...``): each launch carries a draft *tree*
+(``core.plans.TreePlan`` — branching factors per depth, first child is the
+drafter's spine) instead of a chain.  The verifier walks the tree
+(``greedy_accept_tree``), ``Model.commit_tree_path`` compacts the accepted
+root path's cache rows, and ``prev_accept`` becomes the accepted NODE index
+selecting the cache-carried plan row.  ``--drafter model`` drafts with a
+small draft model batched through the same decode plane
+(``speculative.ModelDrafter``: B=1 admission prefill, batched width-1
+catch-up launches, one batched launch per tree depth emitting top-k
+branching tokens).
+
+Control-word invariants this loop relies on (and must uphold):
+
+* **Plan-row carry** — the plan consumed by a launch's token 0 is the row
+  the PREVIOUS launch routed from the accepted node's route source;
+  ``prev_accept`` must therefore always be the node index the verifier
+  accepted last (chain: accepted count - 1 — the same number).
+* **Length-clamp contract** — ``lengths[b]`` is the single source of truth
+  for slot b's committed prefix; no launch reads past ``lengths[b] + t``
+  for its token t, which is why rejected draft rows (and parked slots fed
+  dummy tokens at row 0 depth) can never contaminate a later launch.
+* **Rolling-buffer slack** — rolling caches carry ``spec_tokens - 1`` slack
+  slots so a launch's later draft writes never evict rows still inside an
+  earlier draft token's window; tree drafts are chain-only on rolling
+  layers (scattered commits do not compose with modulo addressing).
+
 Distributed decode plane (``--model N``): the cache-carried ``DecodePlan`` is
 the distributed control word — plan rows replicate over the model axis, each
 shard executes only its resident expert slice (a filter on expert ids, no
@@ -39,29 +65,10 @@ import argparse
 import time
 
 
-def _draft_repeat(history, last_tok: int, width: int):
-    """Repeat the last accepted token (minimal drafter: exercises the
-    verify/rollback machinery; acceptance tracks the model's self-similarity)."""
-    return [last_tok] * width
-
-
-def _draft_ngram(history, last_tok: int, width: int):
-    """Bigram-lookup drafter: if the last token appeared before, draft the
-    tokens that followed it last time (prompt-free n-gram speculation)."""
-    out = []
-    cur = last_tok
-    for _ in range(width):
-        nxt = cur
-        for i in range(len(history) - 2, -1, -1):
-            if history[i] == cur:
-                nxt = history[i + 1]
-                break
-        out.append(nxt)
-        cur = nxt
-    return out
-
-
-DRAFTERS = {"repeat": _draft_repeat, "ngram": _draft_ngram}
+# host-side draft policies: the tree fillers in launch.speculative (a chain
+# is the degenerate tree, so one implementation serves both shapes) plus the
+# draft-model policy
+DRAFTER_CHOICES = ("model", "ngram", "repeat")
 
 
 def main() -> None:
@@ -84,7 +91,16 @@ def main() -> None:
     ap.add_argument("--spec-tokens", type=int, default=1,
                     help="speculative width: tokens per decode launch "
                          "(1 = plain decode)")
-    ap.add_argument("--drafter", choices=sorted(DRAFTERS), default="ngram")
+    ap.add_argument("--draft-tree", default="",
+                    help="comma-separated per-depth branching factors for "
+                         "draft TREES, e.g. '2,2,1' (first child continues "
+                         "the spine); overrides --spec-tokens with the node "
+                         "count")
+    ap.add_argument("--drafter", choices=sorted(DRAFTER_CHOICES),
+                    default="ngram",
+                    help="draft policy: host heuristics (repeat/ngram) or a "
+                         "small draft model batched through the same decode "
+                         "plane")
     ap.add_argument("--telemetry", action="store_true",
                     help="report stale-vs-fresh plan top-k agreement per launch")
     args = ap.parse_args()
@@ -98,20 +114,32 @@ def main() -> None:
 
     from repro.configs import get_config, get_smoke_config
     from repro.configs.base import ShapeCell
+    from repro.core.plans import TreePlan
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.speculative import greedy_accept
+    from repro.launch.speculative import (
+        TREE_DRAFTERS,
+        ModelDrafter,
+        greedy_accept_tree,
+    )
     from repro.launch.steps import build_model, build_spec_serve_step
     from repro.models import transformer as trf
-    from repro.parallel.sharding import batch_spec, cache_shardings
+    from repro.parallel.sharding import batch_spec, cache_shardings, param_shardings
+
+    tree = None
+    spec_width = max(args.spec_tokens, 1)
+    if args.draft_tree:
+        branching = [int(v) for v in args.draft_tree.split(",") if v.strip()]
+        tree = TreePlan.from_branching(branching).validate()
+        spec_width = tree.num_nodes
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(
         cfg, decode_plane=args.decode_plane or cfg.decode_plane,
-        spec_tokens=max(args.spec_tokens, 1),
+        spec_tokens=spec_width,
     )
     telemetry = args.telemetry and cfg.decode_plane and cfg.is_moe
     mesh = make_host_mesh(args.data, args.model)
-    B, S, T = args.slots, args.prompt_len, max(args.spec_tokens, 1)
+    B, S, T = args.slots, args.prompt_len, spec_width
     n_req = args.requests or 2 * B
     max_len = S + args.gen + T
 
@@ -125,11 +153,10 @@ def main() -> None:
         )
         for i in range(n_req)
     ]
-    draft_fn = DRAFTERS[args.drafter]
-
     with mesh:
         serve_b = build_spec_serve_step(
-            cfg, mesh, ShapeCell("d", max_len, B, "decode"), telemetry=telemetry
+            cfg, mesh, ShapeCell("d", max_len, B, "decode"), telemetry=telemetry,
+            tree=tree,
         )
         model = serve_b.model
         c_shard = serve_b.in_shardings[1]
@@ -151,6 +178,26 @@ def main() -> None:
         )
         admit = jax.jit(model.write_cache_slot, donate_argnums=(0,), out_shardings=c_shard)
         decode = serve_b.jit()
+        commit = (
+            jax.jit(model.commit_tree_path, donate_argnums=(0,), out_shardings=c_shard)
+            if tree is not None
+            else None
+        )
+
+        # drafter: host heuristic (chain or tree fill) or the draft model
+        drafter = None
+        if args.drafter == "model":
+            # same family, one layer, width-1 launches: the draft model rides
+            # the identical decode plane (and the identical admission path)
+            draft_cfg = dataclasses.replace(cfg, num_layers=1, spec_tokens=1)
+            draft_model = build_model(draft_cfg, mesh, B)
+            draft_params = draft_model.init(jax.random.PRNGKey(7))
+            draft_params = jax.device_put(
+                draft_params, param_shardings(draft_params, mesh)
+            )
+            drafter = ModelDrafter(draft_model, draft_params, B, max_len)
+        propose_tree = tree if tree is not None else TreePlan.chain(T)
+        tree_fill = TREE_DRAFTERS.get(args.drafter)
 
         # host-side slot state (the ragged-batch control words)
         lengths = np.zeros((B,), np.int32)
@@ -161,6 +208,7 @@ def main() -> None:
         history = [[] for _ in range(B)]
 
         launches = accepted_total = drafted_total = finished = 0
+        accept_hist = np.zeros((T + 1,), np.int64)  # accept-length distribution
         prefill_ms = 0.0
         agreements = []
         t_start = time.perf_counter()
@@ -191,13 +239,21 @@ def main() -> None:
                 gen_left[b] = args.gen
                 active[b] = True
                 history[b] = [last_tok[b]]
+                if drafter is not None:
+                    drafter.admit(b, prompt)
 
             # ---- draft: one launch's tokens for every slot -----------------
-            toks = np.zeros((B, T), np.int32)
+            # a chain is the degenerate tree, so ONE fill path serves both
+            # shapes (propose_tree is the CLI tree, or chain(T))
+            if drafter is not None and T > 1:
+                drafter.catch_up()
+                toks = drafter.propose(last_tok, lengths, propose_tree)
+            else:
+                toks = np.zeros((B, T), np.int32)
+                for b in range(B):
+                    if active[b] and T > 1:
+                        toks[b] = tree_fill(history[b], int(last_tok[b]), propose_tree)
             toks[:, 0] = last_tok
-            for b in range(B):
-                if active[b] and T > 1:
-                    toks[b, 1:] = draft_fn(history[b], int(last_tok[b]), T - 1)
 
             # ---- one speculative launch over the ragged pool ---------------
             out = decode(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
@@ -211,19 +267,39 @@ def main() -> None:
             y = np.asarray(jnp.argmax(logits, -1))  # (B, T) verified tokens
 
             # ---- greedy verify / rollback ----------------------------------
+            # the tree walk (chain included: it degenerates to greedy_accept)
+            # returns the accepted root path; the identity-padded path map
+            # then compacts the accepted rows (a no-op for chain accepts)
+            path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+            acc_n = np.zeros((B,), np.int32)
             for b in range(B):
                 if not active[b]:
                     lengths[b] = 0  # park finished slots at depth 0
                     continue
-                a = greedy_accept(toks[b], y[b], T, int(gen_left[b]))
-                accepted = [int(v) for v in y[b, :a]]
+                path = greedy_accept_tree(toks[b], y[b], propose_tree, int(gen_left[b]))
+                a = len(path)
+                path_pad[b, :a] = path
+                accepted = [int(y[b, p]) for p in path]
+                prev_accept[b] = path[-1]
+                if drafter is not None:
+                    # rows [lengths, lengths + a) of the true stream are the
+                    # launch input followed by all but the last accepted token
+                    drafter.observe(b, [int(last_tok[b])] + accepted[:-1])
                 history[b].extend(accepted)
                 accepted_total += a
                 drafted_total += T
-                lengths[b] += a
+                accept_hist[a] += 1
+                acc_n[b] = a
                 gen_left[b] -= a
                 last_tok[b] = accepted[-1]
-                prev_accept[b] = a - 1
+            if tree is not None and not tree.is_chain():
+                # commit BEFORE advancing lengths: the accepted nodes move
+                # from scattered rows base+u_i to contiguous rows base+i
+                cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
+            for b in range(B):
+                if not active[b]:
+                    continue
+                lengths[b] += acc_n[b]
                 if gen_left[b] <= 0 or lengths[b] + T > max_len:
                     active[b] = False
                     finished += 1
@@ -236,9 +312,12 @@ def main() -> None:
           f"{wall*1e3:.1f} ms ({generated/max(wall, 1e-9):.0f} tok/s, "
           f"{launches} launches, prefill {prefill_ms:.1f} ms total)")
     if T > 1:
-        print(f"speculative: width {T}, drafter {args.drafter}, "
+        shape = f"tree {args.draft_tree}" if tree is not None else f"width {T}"
+        print(f"speculative: {shape} ({T} nodes), drafter {args.drafter}, "
               f"accept rate {accepted_total/max(drafted_total, 1):.2f} "
               f"({accepted_total/max(launches, 1):.2f} tokens/launch)")
+        dist = {a: int(n) for a, n in enumerate(accept_hist) if n}
+        print(f"accept-length distribution (tokens accepted -> launches): {dist}")
     if telemetry and agreements:
         print(f"plan telemetry: stale-vs-fresh top-k agreement "
               f"mean {np.mean(agreements):.3f} min {np.min(agreements):.3f} "

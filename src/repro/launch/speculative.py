@@ -6,8 +6,30 @@ draft token equals what the model emitted for position t-1.  Everything the
 rollback guarantee rests on (overwritten KV rows, plan-row selection by
 accepted count) keys off the count returned here, so the drivers and the
 example share ONE implementation.
+
+Tree drafts generalize the chain: :func:`greedy_accept_tree` walks a
+:class:`~repro.core.plans.TreePlan` from the root, descending into the child
+whose draft token matches the model's emission for the current node, and
+returns the accepted root path as NODE INDICES.  By construction the path is
+connected and starts at the root — a token on a rejected branch can never be
+committed.  For a chain tree the walk degenerates to :func:`greedy_accept`
+(node index == position).
+
+Drafting policies live here too:
+
+* :func:`draft_tree_repeat` / :func:`draft_tree_ngram` — host-side
+  heuristics filling a tree shape (ngram fills sibling slots with DISTINCT
+  historical successors, most recent first — the tree's whole point is to
+  hedge across alternatives);
+* :class:`ModelDrafter` — a small draft model batched through the same
+  decode plane as the target (per-depth batched ``decode_tokens`` launches
+  over the slot pool), emitting top-k branching drafts.
 """
 from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.plans import TreePlan
 
 
 def greedy_accept(draft_row, verified_row, width: int, budget: int) -> int:
@@ -22,3 +44,180 @@ def greedy_accept(draft_row, verified_row, width: int, budget: int) -> int:
     while a < width and a < budget and int(draft_row[a]) == int(verified_row[a - 1]):
         a += 1
     return a
+
+
+def greedy_accept_tree(draft_row, verified_row, tree: TreePlan, budget: int) -> List[int]:
+    """Greedy tree verification: the accepted root path, as node indices.
+
+    Walk from the root: the model's emission for the current node
+    (``verified_row[cur]``) is the sequentially-correct next token; descend
+    into the first child drafted with exactly that token, stop when no child
+    matches (or the budget is exhausted).  Every returned node is on one
+    root-to-leaf path — a sibling of an accepted node is never committed, so
+    the emitted tokens ``verified_row[path]`` are exactly what sequential
+    greedy decode produces.  A chain tree reproduces :func:`greedy_accept`:
+    ``len(path) == greedy_accept(...)``.
+    """
+    kids = tree.children()
+    path = [0]
+    cur = 0
+    while len(path) < budget:
+        want = int(verified_row[cur])
+        nxt = next((c for c in kids[cur] if int(draft_row[c]) == want), None)
+        if nxt is None:
+            break
+        path.append(nxt)
+        cur = nxt
+    return path
+
+
+# ---------------------------------------------------------------------------
+# tree drafters (host-side heuristics)
+# ---------------------------------------------------------------------------
+
+
+def _followers(history: Sequence[int], tok: int, limit: int) -> List[int]:
+    """Distinct tokens that followed ``tok`` in history, most recent first."""
+    out: List[int] = []
+    for i in range(len(history) - 2, -1, -1):
+        if history[i] == tok and history[i + 1] not in out:
+            out.append(history[i + 1])
+            if len(out) >= limit:
+                break
+    return out
+
+
+def draft_tree_repeat(history, last_tok: int, tree: TreePlan) -> List[int]:
+    """Every node repeats the last accepted token (minimal drafter: siblings
+    are duplicates, so this exercises verify's first-match tie-break and the
+    worst-case rejection path)."""
+    return [int(last_tok)] * tree.num_nodes
+
+
+def draft_tree_ngram(history, last_tok: int, tree: TreePlan) -> List[int]:
+    """Bigram-lookup tree drafter: each node's children are the DISTINCT
+    tokens that followed the node's token in history (most recent first, one
+    per sibling slot; slots beyond the evidence repeat the parent token)."""
+    toks = [0] * tree.num_nodes
+    toks[0] = int(last_tok)
+    kids = tree.children()
+    for node, children in enumerate(kids):
+        if not children:
+            continue
+        cand = _followers(history, toks[node], len(children))
+        for rank, child in enumerate(children):
+            toks[child] = cand[rank] if rank < len(cand) else toks[node]
+    return toks
+
+
+TREE_DRAFTERS = {"repeat": draft_tree_repeat, "ngram": draft_tree_ngram}
+
+
+# ---------------------------------------------------------------------------
+# model-based drafter
+# ---------------------------------------------------------------------------
+
+
+class ModelDrafter:
+    """A small draft model proposing top-k branching drafts, batched through
+    the SAME decode plane the target model serves on.
+
+    The drafter owns a slot-pool cache shaped like the target's
+    (``init_cache(slots, max_len)``), admits prompts by B=1 prefill +
+    ``write_cache_slot`` (mirroring target admission), and keeps itself
+    synchronized with the *accepted* token stream by replaying missed tokens
+    through batched width-1 ``decode_tokens`` launches (the same ragged
+    length-vector control word).  :meth:`propose` then runs one batched
+    draft-model launch per tree depth: the spine follows the draft model's
+    argmax, sibling slots take the next-ranked logits (top-k branching).
+
+    Draft rows written during ``propose`` are scratch: positions at or past a
+    slot's committed length are re-fed (or overwritten) before they are ever
+    attended, because the length-clamp contract means no launch reads past
+    its own row vector.
+    """
+
+    def __init__(self, model, params, slots: int, max_len: int):
+        import jax
+        import numpy as np
+
+        self._jax, self._np = jax, np
+        self.model, self.params = model, params
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self.fed = np.zeros((slots,), np.int32)  # cache rows holding real tokens
+        self.pending: List[List[int]] = [[] for _ in range(slots)]
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(lambda p, c, t, l: model.decode_tokens(p, c, t, l))
+        self._admit = jax.jit(model.write_cache_slot)
+
+    def admit(self, slot: int, prompt) -> None:
+        """Prefill the admitted prompt into the drafter's slot cache."""
+        _, one = self._prefill(
+            self.params, prompt[None], self.model.init_cache(1, self.max_len)
+        )
+        self.cache = self._admit(self.cache, one, slot)
+        self.fed[slot] = len(prompt)
+        self.pending[slot] = []
+
+    def observe(self, slot: int, tokens: Sequence[int]) -> None:
+        """Queue accepted tokens (rows ``fed..`` of the true stream) for
+        replay; called by the serve loop after each verify."""
+        self.pending[slot].extend(int(t) for t in tokens)
+
+    def _advance(self, toks, lens):
+        jnp = self._jax.numpy
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            jnp.asarray(toks)[:, None], jnp.asarray(lens),
+        )
+        return self._np.asarray(logits[:, 0])
+
+    def catch_up(self) -> None:
+        """Replay queued accepted tokens (batched across slots).
+
+        Slots with nothing pending park their step at the scratch row
+        ``fed[b]`` — one past their valid prefix — which the next real feed
+        or propose step overwrites before anything attends to it (the
+        length-clamp contract: no launch reads past its own row vector).
+        """
+        np = self._np
+        B = len(self.pending)
+        while any(self.pending):
+            toks = np.zeros((B,), np.int32)
+            lens = self.fed.copy()
+            adv = np.zeros((B,), np.int32)
+            for b in range(B):
+                if self.pending[b]:
+                    toks[b] = self.pending[b].pop(0)
+                    adv[b] = 1
+            self._advance(toks, lens)
+            self.fed = self.fed + adv
+
+    def propose(self, last_tok, lengths, tree: TreePlan):
+        """(B,) last accepted tokens + committed lengths -> (B, T) tree tokens.
+
+        One batched draft launch per tree depth; children of the spine node
+        at depth d get the draft model's top-``len(children)`` tokens, the
+        first child (the spine) continues from the top-1.
+        """
+        np = self._np
+        B = len(last_tok)
+        T = tree.num_nodes
+        kids = tree.children()
+        spine = tree.spine()
+        toks = np.zeros((B, T), np.int32)
+        toks[:, 0] = last_tok
+        cur = np.asarray(last_tok, np.int32).copy()
+        pos = np.asarray(lengths, np.int32).copy()
+        for d, node in enumerate(spine):
+            children = kids[node]
+            if not children:
+                break
+            logits = self._advance(cur, pos)
+            top = np.argsort(-logits, axis=-1)[:, : len(children)]
+            for rank, child in enumerate(children):
+                toks[:, child] = top[:, rank]
+            cur = top[:, 0].astype(np.int32)
+            pos += 1
+        return toks

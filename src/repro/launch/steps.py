@@ -300,7 +300,8 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell) -> StepBundl
 
 
 def build_spec_serve_step(
-    cfg: ModelConfig, mesh: Mesh, cell: ShapeCell, *, telemetry: bool = False
+    cfg: ModelConfig, mesh: Mesh, cell: ShapeCell, *, telemetry: bool = False,
+    tree: Optional[Any] = None,
 ) -> StepBundle:
     """One speculative/ragged serve launch: T = ``cfg.spec_tokens`` tokens per
     sequence against per-sequence cache lengths (continuous batching).
@@ -313,14 +314,24 @@ def build_spec_serve_step(
     seeding the cache must be built from a config with identical
     ``decode_plane``/``spec_tokens`` settings (the plan-vector slots are part
     of the cache pytree).
+
+    ``tree`` (a :class:`repro.core.plans.TreePlan` with ``num_nodes ==
+    spec_tokens``) turns each launch into a draft-tree launch: the topology
+    is compiled into the step closure (static under jit), the verifier walks
+    it host-side, and ``prev_accept`` becomes the accepted node index.
     """
     B, S = cell.global_batch, cell.seq_len
     Tn = max(cfg.spec_tokens, 1)
+    if tree is not None and tree.num_nodes != Tn:
+        raise ValueError(
+            f"tree has {tree.num_nodes} nodes but cfg.spec_tokens is {Tn}"
+        )
     model = build_model(cfg, mesh, B)
 
     def spec_step(params, cache, tokens, lengths, prev_accept):
         return model.decode_tokens(
-            params, cache, tokens, lengths, prev_accept, telemetry=telemetry
+            params, cache, tokens, lengths, prev_accept, telemetry=telemetry,
+            tree=tree,
         )
 
     params_abs = _abstract_params(cfg)

@@ -244,6 +244,7 @@ class Model:
         prev_accept: Optional[jnp.ndarray] = None,  # (B,) int32 plan-row select
         *,
         telemetry: bool = False,
+        tree: Optional[Any] = None,  # core.plans.TreePlan — draft-tree topology
     ):
         """One speculative serve launch: T tokens per sequence, ragged batch.
 
@@ -256,9 +257,24 @@ class Model:
         this is what makes speculative decode bitwise-faithful to sequential
         decode under rollback.  With ``telemetry=True`` also returns a
         metrics dict carrying the mean stale-vs-fresh plan top-k agreement.
+
+        With ``tree`` (a static :class:`~repro.core.plans.TreePlan` with
+        ``num_nodes == T``) the T tokens form a draft tree: node t rides
+        cache row ``lengths[b] + t``, attends through the tree's ancestor
+        mask, and ``logits[:, t]`` scores the successor of node t given its
+        root-path context.  The verifier walks the tree
+        (:func:`repro.launch.speculative.greedy_accept_tree`), then
+        :meth:`commit_tree_path` compacts the accepted path's cache rows;
+        ``prev_accept`` is then the accepted NODE INDEX (for a chain this is
+        the accepted-count-minus-one of the linear path — same number).
         """
         cfg = self.cfg
         B = tokens.shape[0]
+        if tree is not None and tree.num_nodes != tokens.shape[1]:
+            raise ValueError(
+                f"tree has {tree.num_nodes} nodes but the launch carries "
+                f"{tokens.shape[1]} tokens"
+            )
         if prev_accept is None:
             prev_accept = jnp.zeros((B,), jnp.int32)
         lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
@@ -278,6 +294,7 @@ class Model:
                     h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg,
                     lengths, prev_accept, self.moe_apply,
                     decode_apply=self.decode_moe_apply, telemetry=telemetry,
+                    tree=tree,
                 )
                 new_c[f"b{j}"] = nc
                 agg = agg + a
@@ -295,7 +312,7 @@ class Model:
             x, route_src, nc, a = T.apply_layer_decode_spec(
                 x, route_src, p, c, kind, cfg, lengths, prev_accept,
                 self.moe_apply, decode_apply=self.decode_moe_apply,
-                telemetry=telemetry,
+                telemetry=telemetry, tree=tree,
             )
             new_cache["rest"].append(nc)
             agree_sum = agree_sum + a
@@ -327,6 +344,42 @@ class Model:
             "scan": jax.tree.map(at_axis(1), cache["scan"], one_cache["scan"]),
             "rest": jax.tree.map(at_axis(0), cache["rest"], one_cache["rest"]),
         }
+
+    def commit_tree_path(self, cache: Params, lengths, path) -> Params:
+        """Compact an accepted draft-tree root path into contiguous cache rows.
+
+        After tree verification, the accepted nodes ``path[b] = (0, u_1, ...,
+        u_{a-1})`` sit at scattered rows ``lengths[b] + u_i``; the next launch
+        treats ``[0, lengths[b] + a)`` as committed prefix, so row
+        ``lengths[b] + i`` must hold node ``u_i``'s KV.  ``path`` is (B, T)
+        int32, padded with the identity (``path[b, i] = i`` for i >= the
+        accepted count) so the pad writes copy rows onto themselves — a
+        parked or fully-chain-accepted slot is a bitwise no-op.  Only KV
+        leaves move; plan rows stay node-indexed (``prev_accept`` selects the
+        accepted node's row directly) and rejected rows are overwritten by
+        the next launch, exactly like linear rollback.
+        """
+        lengths = jnp.asarray(lengths, jnp.int32)
+        path = jnp.asarray(path, jnp.int32)
+        T_ = path.shape[1]
+        dst = lengths[:, None] + jnp.arange(T_, dtype=jnp.int32)[None, :]
+        src = lengths[:, None] + path
+
+        def gather_rows(leaf, batch_axis):
+            B = leaf.shape[batch_axis]
+            bidx = jnp.arange(B)[:, None]
+            if batch_axis == 0:
+                return leaf.at[bidx, dst].set(leaf[bidx, src])
+            return leaf.at[:, bidx, dst].set(leaf[:, bidx, src])
+
+        def fix(part, batch_axis):
+            def f(kp, leaf):
+                name = getattr(kp[-1], "key", None)
+                return gather_rows(leaf, batch_axis) if name in ("k", "v") else leaf
+
+            return jax.tree_util.tree_map_with_path(f, part)
+
+        return {"scan": fix(cache["scan"], 1), "rest": fix(cache["rest"], 0)}
 
 
 # ---------------------------------------------------------------------------

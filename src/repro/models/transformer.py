@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.control_plane import route_topk_decode, topk_agreement
-from repro.core.plans import DecodePlan
+from repro.core.plans import DecodePlan, TreePlan
 from repro.models import layers as L
 from repro.models import mamba2, moe, rglru
 
@@ -383,6 +383,7 @@ def apply_layer_decode_spec(
     *,
     decode_apply: Optional[DecodeApply] = None,
     telemetry: bool = False,
+    tree: Optional[TreePlan] = None,
 ):
     """Multi-token (speculative) ragged decode for one layer.
 
@@ -400,6 +401,17 @@ def apply_layer_decode_spec(
       written to the cache);
     * all T routed plans are written back as the next launch's plan vector.
 
+    With ``tree`` (a :class:`~repro.core.plans.TreePlan`) the T tokens form
+    a draft *tree* instead of a chain: node t occupies cache row
+    ``lengths[b] + t`` but rotary position ``lengths[b] + depth(t)``,
+    attention masks draft rows by the tree's ancestor table (the committed
+    prefix stays shared), and the plan consumed by node t >= 1 is the one
+    routed from its PARENT's route source — each root-to-node path
+    reproduces the sequential trace for that token sequence exactly.  The
+    degenerate chain tree takes this same code path and is bitwise-equal to
+    ``tree=None``.  Rolling-window layers serve chains only (a branchy tree
+    raises — its scattered commit does not compose with modulo addressing).
+
     Returns ``(x, route_src, new_cache, plan_agreement)`` where
     ``plan_agreement`` is the stale-vs-fresh top-k overlap (0 when not a MoE
     layer or telemetry is off).
@@ -408,8 +420,18 @@ def apply_layer_decode_spec(
     B, T, d = x.shape
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        if tree is not None and window:
+            if not tree.is_chain():
+                raise NotImplementedError(
+                    "branchy draft trees are not supported on rolling-window "
+                    "layers (modulo-addressed caches cannot commit a scattered "
+                    "root path); serve local-attention archs with chain drafts"
+                )
+            tree = None  # chains serve through the linear rolling path
         xn = L.rms_norm(x, p["ln1"])
-        if window:
+        if tree is not None:
+            a, new_cache = _decode_attn_prefix_tree(xn, p["attn"], cfg, cache, lengths, tree)
+        elif window:
             a, new_cache = _decode_attn_rolling_spec(xn, p["attn"], cfg, cache, lengths, window)
         else:
             a, new_cache = _decode_attn_prefix_spec(xn, p["attn"], cfg, cache, lengths)
@@ -432,8 +454,23 @@ def apply_layer_decode_spec(
                     first_w = jnp.take_along_axis(cached_w, sel, axis=1)[:, 0]
                 else:  # spec_tokens == 1 cache: single temporal plan row
                     first_e, first_w = cached_e, cached_w
-                cons_e = jnp.concatenate([first_e[:, None], all_e[:, : T - 1]], axis=1)
-                cons_w = jnp.concatenate([first_w[:, None], all_w[:, : T - 1]], axis=1)
+                if tree is not None:
+                    # plan-row selection follows the accepted ancestor chain:
+                    # node t consumes the plan routed from its parent's route
+                    # source (the sequential predecessor on its root path),
+                    # not row t-1 (a chain tree gathers rows 0..T-2: bitwise
+                    # the linear concatenate-shift)
+                    par = jnp.asarray(
+                        [max(pp, 0) for pp in tree.parents], jnp.int32
+                    )
+                    sel_p = jnp.broadcast_to(par[None, :, None], (B, T, k_))
+                    prev_e = jnp.take_along_axis(all_e, sel_p, axis=1)
+                    prev_w = jnp.take_along_axis(all_w, sel_p, axis=1)
+                    cons_e = jnp.concatenate([first_e[:, None], prev_e[:, 1:]], axis=1)
+                    cons_w = jnp.concatenate([first_w[:, None], prev_w[:, 1:]], axis=1)
+                else:
+                    cons_e = jnp.concatenate([first_e[:, None], all_e[:, : T - 1]], axis=1)
+                    cons_w = jnp.concatenate([first_w[:, None], all_w[:, : T - 1]], axis=1)
                 plan = DecodePlan(cons_e, cons_w)  # (B, T, k): one row per draft
                 y = (decode_apply or moe.moe_decode_ffn)(ffn_in, plan, p["moe"])
                 if cached_e.ndim == 3:
@@ -506,6 +543,62 @@ def _decode_attn_prefix_spec(
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
         valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]  # (B, T, S)
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, T, nkv, groups, hd)
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def _decode_attn_prefix_tree(
+    xn: jnp.ndarray,  # (B, T, d) — T draft-tree nodes per sequence
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,) committed-prefix length per sequence
+    tree: "TreePlan",
+) -> Tuple[jnp.ndarray, Params]:
+    """Ancestor-masked T-node attention: the tree generalization of
+    :func:`_decode_attn_prefix_spec`.
+
+    Node t occupies cache ROW ``lengths[b] + t`` (each node needs its own KV
+    slot — siblings share a depth) but rotary POSITION
+    ``lengths[b] + depth(t)`` (its sequential position if accepted).  A row
+    is visible to node t iff it is below the committed prefix or on t's root
+    path — exactly the keys a sequential decode of that path would see, so
+    each root-to-node chain scores identically to sequential decode.
+    """
+    B, T, _ = xn.shape
+    depths = jnp.asarray(tree.depths(), jnp.int32)
+    rows = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    pos = lengths[:, None] + depths[None, :]  # rotary positions
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, rows].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, rows].set(v.astype(cache["v"].dtype))
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode
+
+        out = flash_decode(
+            q, ck, cv, lengths,
+            ancestors=jnp.asarray(tree.ancestor_words(), jnp.int32),
+            base=lengths,
+        )  # (B, T, nq, hd)
+    else:
+        S = ck.shape[1]
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        groups = cfg.num_heads // nkv
+        table = jnp.asarray(tree.ancestor_table(), bool)  # (T, T)
+        u = jnp.arange(S)[None, :] - lengths[:, None]  # (B, S) draft-row index
+        in_draft = (u >= 0) & (u < T)
+        anc_ok = table[:, jnp.clip(u, 0, T - 1)]  # (T, B, S)
+        valid = (u < 0)[:, None, :] | (
+            in_draft[:, None, :] & jnp.transpose(anc_ok, (1, 0, 2))
+        )  # (B, T, S)
         scale = 1.0 / math.sqrt(hd)
         qg = q.reshape(B, T, nkv, groups, hd)
         s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale

@@ -88,18 +88,35 @@ def test_telemetry_on_just_admitted_single_slot():
 
 def test_ngram_drafter_prompt_shorter_than_order():
     """Bigram lookup needs two past tokens; with fewer it must degrade to
-    repeat-last (never index out of range, always emit `width` tokens)."""
-    from repro.launch.serve import DRAFTERS
+    repeat-last (never index out of range, always fill every node).  The
+    serve loop drafts chains as degenerate trees, so the chain behaviour is
+    the tree filler on TreePlan.chain."""
+    from repro.core.plans import TreePlan
+    from repro.launch.speculative import draft_tree_ngram
 
-    ngram = DRAFTERS["ngram"]
-    assert ngram([], 7, 3) == [7, 7, 7]
-    assert ngram([7], 7, 2) == [7, 7]
+    assert draft_tree_ngram([], 7, TreePlan.chain(4)) == [7, 7, 7, 7]
+    assert draft_tree_ngram([7], 7, TreePlan.chain(3)) == [7, 7, 7]
     # a real bigram still fires once history is long enough
-    assert ngram([5, 9, 5], 5, 2) == [9, 5]
+    assert draft_tree_ngram([5, 9, 5], 5, TreePlan.chain(3)) == [5, 9, 5]
 
 
 def test_repeat_drafter_width_and_isolation():
-    from repro.launch.serve import DRAFTERS
+    from repro.core.plans import TreePlan
+    from repro.launch.speculative import draft_tree_repeat
 
-    out = DRAFTERS["repeat"]([1, 2, 3], 4, 3)
-    assert out == [4, 4, 4]
+    out = draft_tree_repeat([1, 2, 3], 4, TreePlan.chain(4))
+    assert out == [4, 4, 4, 4]
+
+
+def test_ngram_tree_siblings_hedge_with_distinct_followers():
+    """Sibling slots must take DISTINCT historical followers (most recent
+    first), falling back to the parent token beyond the evidence — the
+    tree's whole point is hedging across alternatives."""
+    from repro.core.plans import TreePlan
+    from repro.launch.speculative import draft_tree_ngram
+
+    tree = TreePlan.from_branching([3]).validate()  # root + 3 siblings
+    # followers of 5 in history: 9 (at index 0) and 2 (at index 2); most
+    # recent first -> [2, 9], third slot falls back to the parent token
+    out = draft_tree_ngram([5, 9, 5, 2], 5, tree)
+    assert out == [5, 2, 9, 5]

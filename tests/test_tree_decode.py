@@ -1,0 +1,663 @@
+"""Tree-draft decode plane: ancestor-masked attention, tree verify, and the
+commit/rollback semantics.
+
+The contract under test, layer by layer:
+
+* plan — :class:`TreePlan` compiles a topology into the ancestor table /
+  packed words the kernel prefetches; the chain is the degenerate case.
+* kernel — the ancestor-masked flash-decode launch masks exactly the
+  root-path rows (vs a dense jnp oracle), and the chain words reduce the
+  mask to the pure length clamp BITWISE.
+* model — ``decode_tokens(tree=...)`` with a chain is bitwise-identical to
+  the linear spec path at widths 1 and 4 (logits AND every cache leaf), and
+  with a branchy tree each node's logits equal sequential decode of its
+  root-path tokens; ``commit_tree_path`` compacts accepted rows so later
+  launches re-join the sequential trace.
+* verify — ``greedy_accept_tree`` only ever returns a connected root path
+  (adversarial rejection patterns included) and degenerates to
+  ``greedy_accept`` on chains.
+* serve — the full tree-draft loop (verify, commit, rollback, B=1
+  admission) emits the SAME tokens as sequential greedy decode on the jnp
+  path, the kernel path, and the forced 8-device sharded mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.plans import TreePlan
+from repro.launch.speculative import (
+    ModelDrafter,
+    draft_tree_ngram,
+    draft_tree_repeat,
+    greedy_accept,
+    greedy_accept_tree,
+)
+from repro.models.model import Model
+from tests.conftest import run_subprocess_devices
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _moe_cfg(**kw):
+    return dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# TreePlan: the compiled control-word artifact
+# ---------------------------------------------------------------------------
+
+
+def test_tree_plan_topology_and_words():
+    tree = TreePlan.from_branching([2, 2]).validate()
+    assert tree.parents == (-1, 0, 0, 1, 1)
+    assert tree.depths() == (0, 1, 1, 2, 2)
+    assert tree.children() == ((1, 2), (3, 4), (), (), ())
+    assert tree.spine() == (0, 1, 3)
+    # packed words: bit u of word t <-> u on t's root path (self included)
+    table = np.asarray(tree.ancestor_table())
+    for t, w in enumerate(tree.ancestor_words()):
+        np.testing.assert_array_equal(table[t], [(w >> u) & 1 for u in range(5)])
+    assert TreePlan.chain(4).is_chain() and not tree.is_chain()
+    with pytest.raises(ValueError):
+        TreePlan((-1, 2, 1)).validate()  # not topologically ordered
+    with pytest.raises(ValueError):
+        TreePlan.chain(32).validate()  # beyond the int32 bitmask
+
+
+# ---------------------------------------------------------------------------
+# kernel: ancestor mask (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_flash_decode_tree_masks_exactly_the_root_path():
+    """Each node attends to the committed prefix + its ancestor rows and
+    NOTHING else — checked against a dense jnp oracle built from the
+    ancestor table."""
+    from repro.kernels.flash_attention import flash_decode
+
+    tree = TreePlan.from_branching([2, 1]).validate()  # parents (-1, 0, 0, 1)
+    rng = np.random.default_rng(0)
+    B, T, nq, nkv, hd, S, base = 2, tree.num_nodes, 4, 2, 16, 32, 9
+    q = jnp.asarray(rng.standard_normal((B, T, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    lens = jnp.full((B,), base, jnp.int32)
+    got = flash_decode(
+        q, ck, cv, lens,
+        ancestors=jnp.asarray(tree.ancestor_words(), jnp.int32), base=lens,
+        bkv=8, interpret=True,
+    )
+    table = np.asarray(tree.ancestor_table())
+    for t in range(T):
+        valid = np.zeros((S,), bool)
+        valid[:base] = True
+        for u in range(T):
+            if table[t, u]:
+                valid[base + u] = True
+        qg = np.asarray(q[:, t]).reshape(B, nkv, nq // nkv, hd)
+        s = np.einsum("bngh,bsnh->bngs", qg, np.asarray(ck)) / np.sqrt(hd)
+        s = np.where(valid[None, None, None, :], s, -0.7 * np.finfo(np.float32).max)
+        w = np.asarray(jax.nn.softmax(jnp.asarray(s), axis=-1))
+        want = np.einsum("bngs,bsnh->bngh", w, np.asarray(cv)).reshape(B, nq, hd)
+        np.testing.assert_allclose(np.asarray(got[:, t]), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("width", [1, 4])
+def test_flash_decode_chain_words_bitwise_equal_linear(width):
+    """Explicit chain ancestor words == the length-clamp-only launch, bitwise
+    (the mask booleans coincide, so the online-softmax math is identical)."""
+    from repro.kernels.flash_attention import flash_decode
+
+    rng = np.random.default_rng(width)
+    B, nq, nkv, hd, S, base = 2, 4, 2, 16, 32, 7
+    q = jnp.asarray(rng.standard_normal((B, width, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    lens = jnp.full((B,), base, jnp.int32)
+    lin = flash_decode(q, ck, cv, lens, bkv=8, interpret=True)
+    tr = flash_decode(
+        q, ck, cv, lens,
+        ancestors=jnp.asarray(TreePlan.chain(width).ancestor_words(), jnp.int32),
+        base=lens, bkv=8, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(lin), np.asarray(tr))
+
+
+# ---------------------------------------------------------------------------
+# verify: the tree walk can only commit a connected root path
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_accept_tree_matches_chain_accept():
+    """Property: on chain trees the tree walk IS greedy_accept, for random
+    draft/verify rows and budgets."""
+    rng = np.random.default_rng(0)
+    for width in (1, 4):
+        tree = TreePlan.chain(width)
+        for trial in range(50):
+            draft = rng.integers(0, 4, size=width)
+            verified = rng.integers(0, 4, size=width)
+            budget = int(rng.integers(1, width + 2))
+            path = greedy_accept_tree(draft, verified, tree, budget)
+            a = greedy_accept(draft, verified, width, budget)
+            assert len(path) == a and path == list(range(a)), (draft, verified, budget)
+
+
+def test_greedy_accept_tree_never_commits_off_path_nodes():
+    """Adversarial rejection patterns: tokens that match the model's emission
+    but sit on a rejected branch (or below a rejected ancestor) must never be
+    committed; the returned path is always parent-connected from the root."""
+    tree = TreePlan.from_branching([2, 2]).validate()  # parents (-1, 0, 0, 1, 1)
+    V = 100
+    # model emits 10 after the root, 20 after node 2 (the sibling branch)
+    verified = np.asarray([10, 30, 20, 40, 50])
+
+    # draft where ONLY the rejected sibling branch matches: node 2 carries
+    # the correct token for... nothing (root wants 10); nodes 3/4 (children
+    # of node 1) carry tokens that would match node 2's continuation
+    draft = np.asarray([0, 99, 98, 20, 20])
+    path = greedy_accept_tree(draft, verified, tree, budget=5)
+    assert path == [0], "no child drafted the root's emission: accept only the root"
+
+    # node 1 matches the root's emission; its children draft node 2's
+    # continuation (20) — the walk wants verified[1] == 30 there, so neither
+    # child may be accepted even though 20 appears in the tree
+    draft = np.asarray([0, 10, 10, 20, 20])
+    path = greedy_accept_tree(draft, verified, tree, budget=5)
+    assert path == [0, 1]
+
+    # second sibling matches when the first does not
+    draft = np.asarray([0, 99, 10, 77, 30])
+    path = greedy_accept_tree(draft, verified, tree, budget=5)
+    assert path == [0, 2], "the walk must consider later siblings"
+
+    # full-path accept through the second-level second sibling
+    draft = np.asarray([0, 10, 99, 88, 30])
+    path = greedy_accept_tree(draft, verified, tree, budget=5)
+    assert path == [0, 1, 4]
+
+    # budget clips the walk
+    path = greedy_accept_tree(draft, verified, tree, budget=2)
+    assert path == [0, 1]
+
+    # invariant sweep: random rows — every returned path must be connected,
+    # start at the root, and each accepted child must match its parent's
+    # emission (the definition of "on the accepted root path")
+    rng = np.random.default_rng(1)
+    kids = tree.children()
+    for _ in range(200):
+        d = rng.integers(0, 3, size=5)
+        v = rng.integers(0, 3, size=5)
+        p = greedy_accept_tree(d, v, tree, budget=5)
+        assert p[0] == 0
+        for parent, child in zip(p, p[1:]):
+            assert child in kids[parent], "path must be parent-connected"
+            assert int(d[child]) == int(v[parent]), "accepted child must match"
+
+
+# ---------------------------------------------------------------------------
+# model: chain trees are bitwise the linear path; branchy trees re-join the
+# sequential trace through commit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [1, 4])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_chain_tree_bitwise_identical_to_linear_path(width, use_kernel):
+    """decode_tokens(tree=chain) must equal decode_tokens(tree=None) bitwise
+    — logits and every cache leaf — at widths 1 and 4, on the jnp path and
+    the kernel path.  (MoE cfg on the jnp path so the plan-selection gather
+    is covered; dense cfg on the interpret-kernel path to keep it fast.)"""
+    if use_kernel:
+        cfg = dataclasses.replace(
+            get_smoke_config("qwen3-32b"), num_layers=1, decode_plane=True,
+            spec_tokens=width, use_pallas=True,
+        )
+    else:
+        cfg = _moe_cfg(decode_plane=True, spec_tokens=width)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    max_len = S + 2 * width + 1
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, max_len)
+    lg, cache = jax.jit(model.prefill)(params, prompts, cache)
+    toks = jnp.tile(jnp.argmax(lg, -1).astype(jnp.int32)[:, None], (1, width))
+    lens = jnp.full((B,), S, jnp.int32)
+    acc = jnp.zeros((B,), jnp.int32)
+    chain = TreePlan.chain(width)
+    f_lin = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a))
+    f_tree = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=chain))
+    lg1, c1 = f_lin(params, cache, toks, lens, acc)
+    lg2, c2 = f_tree(params, cache, toks, lens, acc)
+    np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))
+    for a_, b_ in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_array_equal(np.asarray(a_), np.asarray(b_))
+
+
+def test_tree_nodes_match_sequential_decode_of_their_root_path():
+    """Every node's logits equal sequential decode fed that node's root-path
+    tokens — branch divergence costs nothing in fidelity (MoE plan carry
+    included: node plans route from the PARENT's source)."""
+    tree = TreePlan.from_branching([2, 2]).validate()
+    T = tree.num_nodes
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=T)
+    cfg1 = dataclasses.replace(cfg, spec_tokens=1)
+    mT, m1 = Model(cfg), Model(cfg1)
+    params = mT.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    max_len = S + T + 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    cache = mT.init_cache(B, max_len)
+    lg, cache = jax.jit(mT.prefill)(params, prompts, cache)
+    t0 = jnp.argmax(lg, -1).astype(jnp.int32)
+    rng = np.random.default_rng(2)
+    toks = np.zeros((B, T), np.int32)
+    toks[:, 0] = np.asarray(t0)
+    toks[:, 1:] = rng.integers(0, cfg.vocab_size, size=(B, T - 1))
+    fT = jax.jit(lambda p, c, t, l, a: mT.decode_tokens(p, c, t, l, a, tree=tree))
+    lgT, _ = fT(params, cache, jnp.asarray(toks), jnp.full((B,), S, jnp.int32),
+                jnp.zeros((B,), jnp.int32))
+
+    table = np.asarray(tree.ancestor_table())
+    dec1 = jax.jit(m1.decode_step)
+    for node in range(T):
+        chain_nodes = [u for u in range(T) if table[node, u]]
+        c = m1.init_cache(B, max_len)
+        _, c = jax.jit(m1.prefill)(params, prompts, c)
+        for i, u in enumerate(chain_nodes):
+            lgd, c = dec1(params, c, jnp.asarray(toks[:, u]), jnp.int32(S + i))
+        np.testing.assert_allclose(
+            np.asarray(lgT[:, node]), np.asarray(lgd), rtol=1e-5, atol=1e-5,
+            err_msg=f"node {node} (root path {chain_nodes})",
+        )
+
+
+def _sequential_greedy(cfg, params, prompts, max_len, gen):
+    m1 = Model(dataclasses.replace(cfg, spec_tokens=1))
+    cache = m1.init_cache(prompts.shape[0], max_len)
+    lg, cache = jax.jit(m1.prefill)(params, prompts, cache)
+    toks = jnp.argmax(lg, -1).astype(jnp.int32)
+    out = [toks]
+    dec = jax.jit(m1.decode_step)
+    for i in range(gen):
+        lg, cache = dec(params, cache, toks, jnp.int32(prompts.shape[1] + i))
+        toks = jnp.argmax(lg, -1).astype(jnp.int32)
+        out.append(toks)
+    return np.stack([np.asarray(t) for t in out], axis=1)  # (B, gen + 1)
+
+
+def _tree_serve_trace(model, params, prompts, tree, max_len, gen, draft_fill):
+    """Run the tree-draft serve semantics (verify, commit, rollback) and
+    return the emitted tokens per sequence — must equal sequential greedy."""
+    B, S = prompts.shape
+    T = tree.num_nodes
+    cache = model.init_cache(B, max_len)
+    lg, cache = jax.jit(model.prefill)(params, prompts, cache)
+    last = np.array(jnp.argmax(lg, -1).astype(jnp.int32))
+    dtok = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=tree))
+    commit = jax.jit(model.commit_tree_path)
+    lengths = np.full((B,), S, np.int32)
+    prev_accept = np.zeros((B,), np.int32)
+    gen_left = np.full((B,), gen, np.int32)
+    history = [[int(v)] for v in last]
+    while (gen_left > 0).any():
+        toks = np.stack(
+            [draft_fill(history[b], int(last[b]), tree) for b in range(B)]
+        ).astype(np.int32)
+        toks[:, 0] = last
+        lg, cache = dtok(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
+                         jnp.asarray(prev_accept))
+        y = np.asarray(jnp.argmax(lg, -1))
+        path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+        acc_n = np.zeros((B,), np.int32)
+        for b in range(B):
+            if gen_left[b] <= 0:
+                continue
+            path = greedy_accept_tree(toks[b], y[b], tree, int(gen_left[b]))
+            a = len(path)
+            path_pad[b, :a] = path
+            accepted = [int(y[b, p]) for p in path]
+            history[b].extend(accepted)
+            acc_n[b] = a
+            gen_left[b] -= a
+            prev_accept[b] = path[-1]
+            last[b] = accepted[-1]
+        cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
+        lengths += acc_n
+    return np.stack([np.asarray(h[: gen + 1]) for h in history], axis=0)
+
+
+@pytest.mark.parametrize("drafter", [draft_tree_repeat, draft_tree_ngram])
+def test_tree_serve_trace_equals_sequential_greedy_jnp(drafter):
+    """The full tree loop — branchy drafts, tree verify, commit, rollback —
+    emits exactly the sequential greedy token stream (MoE cfg, jnp path)."""
+    tree = TreePlan.from_branching([2, 2]).validate()
+    gen = 7
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=tree.num_nodes)
+    B, S = 2, 8
+    max_len = S + gen + tree.num_nodes + 1
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    want = _sequential_greedy(cfg, params, prompts, max_len, gen)
+    got = _tree_serve_trace(model, params, prompts, tree, max_len, gen, drafter)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tree_serve_trace_equals_sequential_greedy_kernel():
+    """Same trace parity on the ancestor-masked KERNEL path (dense cfg,
+    interpret mode)."""
+    tree = TreePlan.from_branching([2, 1]).validate()
+    gen = 5
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-32b"), num_layers=1, decode_plane=True,
+        spec_tokens=tree.num_nodes, use_pallas=True,
+    )
+    B, S = 2, 6
+    max_len = S + gen + tree.num_nodes + 1
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab_size)
+    want = _sequential_greedy(cfg, params, prompts, max_len, gen)
+    got = _tree_serve_trace(model, params, prompts, tree, max_len, gen, draft_tree_ngram)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tree_admission_b1_matches_independent_decode():
+    """B=1 prefill admitted into a slot of a ragged batch must produce the
+    same tree-launch logits as an independent single-sequence run."""
+    tree = TreePlan.from_branching([2]).validate()
+    T = tree.num_nodes
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=T)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, B = 20, 3
+    prefill = jax.jit(model.prefill)
+    admit = jax.jit(model.write_cache_slot)
+    dtok = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=tree))
+
+    full = model.init_cache(B, max_len)
+    slots = {0: 6, 2: 9}
+    lasts = np.zeros((B,), np.int32)
+    for slot, L in slots.items():
+        prompt = jax.random.randint(jax.random.PRNGKey(slot), (1, L), 0, cfg.vocab_size)
+        lg1, one = prefill(params, prompt, model.init_cache(1, max_len))
+        full = admit(full, one, slot)
+        lasts[slot] = int(jnp.argmax(lg1[0]))
+    lens = np.asarray([slots.get(b, 1) for b in range(B)], np.int32)
+    toks = np.tile(lasts[:, None], (1, T)).astype(np.int32)
+    lg, _ = dtok(params, full, jnp.asarray(toks), jnp.asarray(lens), jnp.zeros((B,), jnp.int32))
+
+    for slot, L in slots.items():
+        prompt = jax.random.randint(jax.random.PRNGKey(slot), (1, L), 0, cfg.vocab_size)
+        lg1, one = prefill(params, prompt, model.init_cache(1, max_len))
+        t1 = jnp.tile(jnp.argmax(lg1, -1).astype(jnp.int32)[:, None], (1, T))
+        lgi, _ = dtok(params, one, t1, jnp.asarray([L], jnp.int32), jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg[slot]), np.asarray(lgi[0]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_branchy_tree_raises_on_rolling_layers():
+    tree = TreePlan.from_branching([2]).validate()
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-32b"), num_layers=1, attention_kind="local",
+        local_window=8, decode_plane=True, spec_tokens=tree.num_nodes,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 4
+    cache = model.init_cache(B, 16)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, prompts, cache)
+    with pytest.raises(NotImplementedError, match="rolling"):
+        model.decode_tokens(
+            params, cache, jnp.zeros((B, 3), jnp.int32),
+            jnp.full((B,), S, jnp.int32), jnp.zeros((B,), jnp.int32), tree=tree,
+        )
+
+
+# ---------------------------------------------------------------------------
+# model-based drafter
+# ---------------------------------------------------------------------------
+
+
+def test_model_drafter_tree_serve_equals_sequential_greedy():
+    """Serving with a ModelDrafter (small draft model batched through the
+    decode plane) must still emit the sequential greedy stream — drafter
+    quality affects only the accept rate, never the tokens."""
+    tree = TreePlan.from_branching([2, 1]).validate()
+    T = tree.num_nodes
+    gen = 5
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=T)
+    B, S = 2, 6
+    max_len = S + gen + T + 1
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    want = _sequential_greedy(cfg, params, prompts, max_len, gen)
+
+    draft_cfg = dataclasses.replace(cfg, num_layers=1, spec_tokens=1)
+    draft_model = Model(draft_cfg)
+    drafter = ModelDrafter(
+        draft_model, draft_model.init(jax.random.PRNGKey(7)), B, max_len
+    )
+    for b in range(B):
+        drafter.admit(b, np.asarray(prompts[b]))
+
+    cache = model.init_cache(B, max_len)
+    lg, cache = jax.jit(model.prefill)(params, prompts, cache)
+    last = np.array(jnp.argmax(lg, -1).astype(jnp.int32))
+    dtok = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=tree))
+    commit = jax.jit(model.commit_tree_path)
+    lengths = np.full((B,), S, np.int32)
+    prev_accept = np.zeros((B,), np.int32)
+    gen_left = np.full((B,), gen, np.int32)
+    history = [[int(v)] for v in last]
+    while (gen_left > 0).any():
+        drafter.catch_up()
+        toks = drafter.propose(last, lengths, tree)
+        toks[:, 0] = last
+        lg, cache = dtok(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
+                         jnp.asarray(prev_accept))
+        y = np.asarray(jnp.argmax(lg, -1))
+        path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+        acc_n = np.zeros((B,), np.int32)
+        for b in range(B):
+            if gen_left[b] <= 0:
+                continue
+            path = greedy_accept_tree(toks[b], y[b], tree, int(gen_left[b]))
+            a = len(path)
+            path_pad[b, :a] = path
+            accepted = [int(y[b, p]) for p in path]
+            drafter.observe(b, [int(last[b])] + accepted[:-1])
+            history[b].extend(accepted)
+            acc_n[b] = a
+            gen_left[b] -= a
+            prev_accept[b] = path[-1]
+            last[b] = accepted[-1]
+        cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
+        lengths += acc_n
+    got = np.stack([np.asarray(h[: gen + 1]) for h in history], axis=0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_model_drafter_self_drafts_perfectly():
+    """A drafter that IS the target model proposes the target's own greedy
+    continuations — every launch must accept the full spine (the positive
+    control for the drafter's catch-up/propose bookkeeping)."""
+    tree = TreePlan.chain(3)
+    gen = 6
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=tree.num_nodes)
+    B, S = 2, 6
+    max_len = S + gen + tree.num_nodes + 1
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size)
+
+    draft_cfg = dataclasses.replace(cfg, spec_tokens=1)
+    drafter = ModelDrafter(Model(draft_cfg), params, B, max_len)
+    for b in range(B):
+        drafter.admit(b, np.asarray(prompts[b]))
+
+    cache = model.init_cache(B, max_len)
+    lg, cache = jax.jit(model.prefill)(params, prompts, cache)
+    last = np.array(jnp.argmax(lg, -1).astype(jnp.int32))
+    dtok = jax.jit(lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a, tree=tree))
+    lengths = np.full((B,), S, np.int32)
+    prev_accept = np.zeros((B,), np.int32)
+    gen_left = np.full((B,), gen, np.int32)
+    while (gen_left > 0).any():
+        drafter.catch_up()
+        toks = drafter.propose(last, lengths, tree)
+        toks[:, 0] = last
+        lg, cache = dtok(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
+                         jnp.asarray(prev_accept))
+        y = np.asarray(jnp.argmax(lg, -1))
+        for b in range(B):
+            if gen_left[b] <= 0:
+                continue
+            path = greedy_accept_tree(toks[b], y[b], tree, int(gen_left[b]))
+            a = len(path)
+            assert a == min(tree.num_nodes, int(gen_left[b])), (
+                "a self-drafting model must accept the whole spine", a,
+            )
+            accepted = [int(y[b, p]) for p in path]
+            drafter.observe(b, [int(last[b])] + accepted[:-1])
+            gen_left[b] -= a
+            prev_accept[b] = path[-1]
+            lengths[b] += a
+            last[b] = accepted[-1]
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device sharded mesh: tree serve == single-host sequential greedy
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_tree_serve_matches_single_host_sequential_greedy():
+    """The tree-draft serve trace on a (1, 2) model-parallel mesh (plan-sliced
+    psum decode, sharded commit, B=1 admission) must emit exactly the
+    single-host sequential greedy stream."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCell
+        from repro.core.plans import TreePlan
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.speculative import draft_tree_ngram, greedy_accept_tree
+        from repro.launch.steps import build_model, build_spec_serve_step
+        from repro.models import transformer as trf
+        from repro.models.model import Model
+        from repro.parallel.sharding import batch_spec, cache_shardings
+
+        tree = TreePlan.from_branching([2, 2]).validate()
+        Tn, B, gen = tree.num_nodes, 2, 6
+        cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                                  decode_plane=True, spec_tokens=Tn)
+        lens_by_req = [10, 7, 12]
+        max_len = max(lens_by_req) + gen + Tn + 1
+        host = Model(cfg)
+        params_h = host.init(jax.random.PRNGKey(0))
+        prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (1, L), 0, cfg.vocab_size)
+                   for i, L in enumerate(lens_by_req)]
+
+        # oracle: single-host sequential greedy per request
+        seq1 = Model(dataclasses.replace(cfg, spec_tokens=1))
+        want = []
+        for pr in prompts:
+            c = seq1.init_cache(1, max_len)
+            lg, c = jax.jit(seq1.prefill)(params_h, pr, c)
+            tk = jnp.argmax(lg, -1).astype(jnp.int32)
+            toks = [int(tk[0])]
+            for i in range(gen):
+                lg, c = jax.jit(seq1.decode_step)(params_h, c, tk, jnp.int32(pr.shape[1] + i))
+                tk = jnp.argmax(lg, -1).astype(jnp.int32)
+                toks.append(int(tk[0]))
+            want.append(toks)
+
+        mesh = make_host_mesh(1, 2)
+        with mesh:
+            bundle = build_spec_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"),
+                                           tree=tree)
+            model = bundle.model
+            c_shard = bundle.in_shardings[1]
+            params = jax.device_put(params_h, bundle.in_shardings[0])
+            cache = model.init_cache(B, max_len, shardings=c_shard)
+            pf_model = build_model(cfg, mesh, 1)
+            c1_shard = cache_shardings(jax.eval_shape(lambda: trf.init_cache(cfg, 1, max_len)), 1, mesh)
+            lg1 = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
+            prefill = jax.jit(pf_model.prefill, out_shardings=(lg1, c1_shard))
+            one_init = jax.jit(lambda: trf.init_cache(cfg, 1, max_len), out_shardings=c1_shard)
+            admit = jax.jit(model.write_cache_slot, donate_argnums=(0,), out_shardings=c_shard)
+            commit = jax.jit(model.commit_tree_path, donate_argnums=(0,), out_shardings=c_shard)
+            decode = bundle.jit()
+
+            queue = list(range(len(prompts)))
+            lengths = np.zeros((B,), np.int32)
+            prev_accept = np.zeros((B,), np.int32)
+            last = np.zeros((B,), np.int32)
+            gen_left = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
+            req_of = [-1] * B
+            history = [[] for _ in range(B)]
+            got = [[] for _ in prompts]
+            while queue or active.any():
+                for b in range(B):
+                    if active[b] or not queue:
+                        continue
+                    r = queue.pop(0)
+                    lg, one = prefill(params, prompts[r], one_init())
+                    cache = admit(cache, one, b)
+                    lengths[b] = prompts[r].shape[1]
+                    last[b] = int(jnp.argmax(lg[0]))
+                    got[r].append(int(last[b]))
+                    history[b] = [int(last[b])]
+                    prev_accept[b] = 0
+                    gen_left[b] = gen
+                    active[b] = True
+                    req_of[b] = r
+                toks = np.stack([draft_tree_ngram(history[b], int(last[b]), tree)
+                                 for b in range(B)]).astype(np.int32)
+                toks[:, 0] = last
+                lg, cache = decode(params, cache, jnp.asarray(toks),
+                                   jnp.asarray(lengths), jnp.asarray(prev_accept))
+                y = np.asarray(jnp.argmax(lg, -1))
+                path_pad = np.tile(np.arange(Tn, dtype=np.int32), (B, 1))
+                acc_n = np.zeros((B,), np.int32)
+                for b in range(B):
+                    if not active[b]:
+                        lengths[b] = 0
+                        continue
+                    path = greedy_accept_tree(toks[b], y[b], tree, int(gen_left[b]))
+                    a = len(path)
+                    path_pad[b, :a] = path
+                    accepted = [int(y[b, p]) for p in path]
+                    got[req_of[b]].extend(accepted)
+                    history[b].extend(accepted)
+                    acc_n[b] = a
+                    gen_left[b] -= a
+                    last[b] = accepted[-1]
+                    prev_accept[b] = path[-1]
+                cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
+                for b in range(B):
+                    if active[b]:
+                        lengths[b] += acc_n[b]
+                        if gen_left[b] <= 0:
+                            active[b] = False
+        assert got == want, (got, want)
+        print("OK")
+    """)
+    out = run_subprocess_devices(code, n_devices=8)
+    assert "OK" in out

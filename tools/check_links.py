@@ -1,0 +1,51 @@
+"""Check that relative markdown links resolve to real files.
+
+Scans the given markdown files (default: README.md + docs/**/*.md) for
+``[text](target)`` links, skips absolute URLs and pure in-page anchors, and
+fails if any relative target does not exist on disk.  Keeps the
+architecture map honest: every module/test the docs point at must be real.
+
+    python tools/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(md: pathlib.Path) -> list:
+    errors = []
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        for target in _LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(_REPO)}:{n}: broken link -> {target}")
+    return errors
+
+
+def main() -> None:
+    files = [pathlib.Path(a) for a in sys.argv[1:]] or (
+        [_REPO / "README.md"] + sorted((_REPO / "docs").glob("**/*.md"))
+    )
+    errors = []
+    n_links = 0
+    for md in files:
+        n_links += sum(len(_LINK.findall(l)) for l in md.read_text().splitlines())
+        errors.extend(check(md))
+    if errors:
+        print("\n".join(errors))
+        sys.exit(1)
+    print(f"ok: {n_links} links across {len(files)} file(s), all targets exist")
+
+
+if __name__ == "__main__":
+    main()
