@@ -27,6 +27,13 @@ Three sections:
   the tree accepts strictly more tokens per launch at equal launch bytes —
   bytes/accepted-token <= the linear-draft path at equal accept rate,
   asserted from cost analysis + a token-exact serve sim.
+* **fabric** (PR 6): the elastic serve fabric under a deterministic fault
+  storm (transient launch failure + crash-and-rejoin on one replica,
+  persistent stall walking the degradation ladder on the other): zero
+  requests dropped, zero duplicate results, every token stream
+  byte-identical to the fault-free run, and the recovery ledger (re-warm
+  prefills, checkpoint restores, ladder steps) recorded as exact structural
+  counts.
 * **sharded** (PR 4): the distributed decode plane on a forced 8-device CPU
   host mesh (spawned subprocess: the device count must be set before jax
   initializes).  With the cache-carried plan sliced per shard
@@ -428,6 +435,113 @@ def _bench_rolling(cfg) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# fault-tolerant serve fabric: exactly-once accounting under injected faults
+# ---------------------------------------------------------------------------
+
+
+def _bench_fabric(cfg) -> dict:
+    """The elastic serve fabric under a deterministic fault storm.
+
+    Scenario (synthetic step times, seeded faults — every count below is
+    reproducible): 2 replicas serve 6 requests through tree-draft launches
+    while replica 0 suffers a transient launch failure then a crash
+    mid-decode (rejoining via checkpoint restore + admission-prefill
+    re-warm) and replica 1 stalls persistently, walking the degradation
+    ladder (tree -> chain -> width 1).  The structural claims: zero requests
+    dropped, zero duplicate results, and every per-request token stream
+    byte-identical to the fault-free run — the fabric's exactly-once
+    contract measured end-to-end on the real decode plane.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.plans import TreePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import degrade_ladder, make_replica_factory
+    from repro.parallel.sharding import param_shardings
+    from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+    from repro.runtime.faults import FaultInjector, parse_faults
+    from repro.runtime.straggler import StragglerDetector
+
+    tree = TreePlan.from_branching([2]).validate()
+    T = tree.num_nodes
+    cT = dataclasses.replace(cfg, decode_plane=True, spec_tokens=T)
+    mesh = make_host_mesh(1, 1)
+    params = Model(cT).init(jax.random.PRNGKey(0))
+    gen, slots, n_req = 6, 2, 6
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=(6, 9)[i % 2]).astype(np.int32)
+        for i in range(n_req)
+    ]
+    max_len = 9 + gen + T
+    ladder = degrade_ladder(tree, T)
+
+    def run_fabric(specs, ckpt, detector, checkpoint_every=0):
+        inj = FaultInjector(parse_faults(specs)) if specs else None
+        make = make_replica_factory(
+            cT, mesh, slots, max_len, params, ladder,
+            fault_hook=inj.check if inj else None, launch_timeout=30.0, ckpt=ckpt,
+        )
+
+        def restore_params(mgr):
+            abs_p = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+            )
+            p, _, _, _ = mgr.restore(
+                abs_p, {}, param_shardings=param_shardings(abs_p, mesh)
+            )
+            return p
+
+        fabric = ServeFabric(
+            make,
+            [Request(rid=i, prompt=prompts[i], gen=gen) for i in range(n_req)],
+            FabricConfig(
+                n_replicas=2, launch_timeout=30.0,
+                checkpoint_every=checkpoint_every,
+                max_degrade_level=len(ladder) - 1, synthetic_step_times=True,
+            ),
+            ckpt=ckpt, restore_params=restore_params if ckpt else None,
+            params=params, detector=detector,
+        )
+        return fabric.run(), fabric.stats
+
+    clean, _ = run_fabric("", None, None)
+    faults = (
+        "launch@step=2:times=1:replica=0,crash@step=4:replica=0,"
+        "stall@secs=9:times=0:replica=1"
+    )
+    with tempfile.TemporaryDirectory() as d:
+        detector = StragglerDetector(
+            n_workers=2, alpha=0.7, threshold=1.5, patience=4, warmup=1
+        )
+        faulted, stats = run_fabric(
+            faults, CheckpointManager(d, keep=2), detector, checkpoint_every=2
+        )
+    identical = all(
+        faulted[rid].error is None and faulted[rid].tokens == clean[rid].tokens
+        for rid in clean
+    )
+    return {
+        "replicas": 2,
+        "requests": n_req,
+        "requests_dropped_under_faults": stats["dropped"],
+        "duplicate_results": stats["duplicates"],
+        "streams_byte_identical": int(identical),
+        "crashes": stats["crashes"],
+        "rejoins": stats["rejoins"],
+        "rewarm_prefill_launches": stats["rewarm_prefills"],
+        "checkpoint_restores": stats["restores"],
+        "transient_retries": stats["transient_failures"],
+        "backoff_rounds": stats["backoff_rounds"],
+        "degrade_ladder_taken": ",".join(
+            f"{w}:{a}->{b}" for w, a, b in stats["degradations"]
+        ),
+        "replicas_excluded": stats["excluded"],
+    }
+
+
+# ---------------------------------------------------------------------------
 # distributed decode plane (forced 8-device host mesh, subprocess)
 # ---------------------------------------------------------------------------
 
@@ -556,6 +670,7 @@ def run() -> dict:
         "speculative": _bench_spec(cfg),
         "tree": _bench_tree(cfg),
         "rolling": _bench_rolling(cfg),
+        "fabric": _bench_fabric(cfg),
     }
     if sharded is not None:
         out["sharded"] = sharded
@@ -626,6 +741,31 @@ def main() -> None:
     print(
         f"# rolling window W={roll['window']}: step bytes {roll['bytes_1x']/1e6:.2f} MB at 1x max_len "
         f"vs {roll['bytes_8x']/1e6:.2f} MB at 8x — bounded by the window"
+    )
+
+    fb = results["fabric"]
+    assert fb["requests_dropped_under_faults"] == 0, (
+        "the fabric must answer every request under injected faults", fb,
+    )
+    assert fb["duplicate_results"] == 0, ("no result may be published twice", fb)
+    assert fb["streams_byte_identical"] == 1, (
+        "faulted token streams must be byte-identical to the fault-free run", fb,
+    )
+    assert fb["crashes"] >= 1 and fb["rejoins"] >= 1, (
+        "the injected crash must actually fire and recover", fb,
+    )
+    assert fb["degrade_ladder_taken"], (
+        "the stalled replica must descend the speculation ladder", fb,
+    )
+    print(
+        f"# fabric ({fb['replicas']} replicas, {fb['requests']} requests under fault storm): "
+        f"{fb['crashes']} crash / {fb['rejoins']} rejoin "
+        f"({fb['rewarm_prefill_launches']} re-warm prefills, "
+        f"{fb['checkpoint_restores']} checkpoint restores), "
+        f"{fb['transient_retries']} transient retries ({fb['backoff_rounds']} backoff rounds), "
+        f"ladder {fb['degrade_ladder_taken']}; "
+        f"dropped {fb['requests_dropped_under_faults']}, duplicates {fb['duplicate_results']}, "
+        f"streams byte-identical: {bool(fb['streams_byte_identical'])}"
     )
 
     if "sharded" not in results:

@@ -24,7 +24,10 @@ as per-shard expert slices combined by one psum per MoE layer
 (``make_sharded_decode_apply``) — there is no replicated fallback; a model
 axis that does not divide the expert count is an error, not a silent
 degradation.  The full continuous-batching loop (ragged slots, admission,
-telemetry) lives in ``repro.launch.serve``.
+telemetry) lives in ``repro.launch.serve`` — which also scales out into the
+fault-tolerant elastic fabric (``--fabric N`` data-parallel replicas behind
+one admission queue, ``--inject crash@step=7,...`` for deterministic fault
+injection with checkpointed re-warm and a speculation-degradation ladder).
 """
 import argparse
 import dataclasses

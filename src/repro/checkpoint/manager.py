@@ -64,6 +64,7 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def save(self, step: int, params: Any, opt_state: Any, extra: Optional[Dict] = None) -> Path:
+        self._gc_tmp()
         tmp = self.dir / f"tmp.step_{step:08d}"
         if tmp.exists():
             shutil.rmtree(tmp)
@@ -89,6 +90,18 @@ class CheckpointManager:
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        """Remove stale ``tmp.step_*`` leftovers from interrupted saves.
+
+        A crash between ``tmp.mkdir`` and the atomic rename strands a torn
+        directory that restore already ignores (it only scans committed
+        ``step_*`` dirs) but that would otherwise accumulate forever.  Saves
+        are single-writer, so any tmp dir present when a new save begins is
+        by definition dead and safe to reap.
+        """
+        for p in self.dir.glob("tmp.step_*"):
+            shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------------
     def all_steps(self) -> List[int]:

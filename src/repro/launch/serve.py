@@ -1,33 +1,36 @@
-"""Production serving driver: a continuous-batching loop over a ragged slot
-pool, with speculative multi-token launches on the Agile decode plane.
+"""Production serving driver: an elastic fabric of continuous-batching serve
+replicas over one shared admission queue, with speculative multi-token
+launches on the Agile decode plane.
 
-Every decode launch processes ``spec_tokens`` tokens for every slot in ONE
-model call (one flash-decode launch and one moe_decode launch per layer —
+Each replica (:class:`ServeReplica`) is the continuous-batching loop over a
+ragged slot pool, factored into a **step-driven, snapshotable** object: every
+:meth:`ServeReplica.step` processes ``spec_tokens`` tokens for every slot in
+ONE model call (one flash-decode launch and one moe_decode launch per layer —
 per-token cache indices ride the scalar-prefetch path as control-word
-vectors).  Between launches the host:
+vectors).  Between launches the replica:
 
 * **verifies** each slot's draft greedily — the accepted prefix is exactly
   what sequential decode would have produced (rollback re-derives nothing:
   rejected cache rows are overwritten by the next launch, and the plan row
   consumed next launch is the one computed from the accepted position's
   route source, carried per draft position in the cache);
-* **admits** queued prompts into finished slots (per-request B=1 prefill
-  written into the batch cache — slots at different sequence depths share
-  launches via the per-sequence length vector);
+* **buffers** accepted tokens per request, publishing them only when the
+  request completes — the exactly-once contract the fabric's crash recovery
+  rests on (a half-served request is simply re-run; greedy decode being
+  deterministic, the re-run is byte-identical);
 * aggregates **plan-quality telemetry** (stale-vs-fresh top-k agreement per
   MoE layer) so lookahead-staleness regressions are visible in production
-  output, mirroring ``test_lookahead_plan_quality_degrades_gracefully``.
+  output.
 
-Tree drafts (``--draft-tree B1,B2,...``): each launch carries a draft *tree*
-(``core.plans.TreePlan`` — branching factors per depth, first child is the
-drafter's spine) instead of a chain.  The verifier walks the tree
+Admission (queued prompts into finished slots) is supervisor-driven:
+:meth:`ServeReplica.admit` runs the shared B=1 admission prefill
+(``launch.steps.build_admission``) and writes the slot into the batch cache
+sharding-preservingly.
+
+Tree drafts (``--draft-tree B1,B2,...``) and the model-based drafter
+(``--drafter model``) ride the same step: the verifier walks the tree
 (``greedy_accept_tree``), ``Model.commit_tree_path`` compacts the accepted
-root path's cache rows, and ``prev_accept`` becomes the accepted NODE index
-selecting the cache-carried plan row.  ``--drafter model`` drafts with a
-small draft model batched through the same decode plane
-(``speculative.ModelDrafter``: B=1 admission prefill, batched width-1
-catch-up launches, one batched launch per tree depth emitting top-k
-branching tokens).
+root path, and ``prev_accept`` becomes the accepted node index.
 
 Control-word invariants this loop relies on (and must uphold):
 
@@ -46,23 +49,36 @@ Control-word invariants this loop relies on (and must uphold):
 
 Distributed decode plane (``--model N``): the cache-carried ``DecodePlan`` is
 the distributed control word — plan rows replicate over the model axis, each
-shard executes only its resident expert slice (a filter on expert ids, no
-slot arithmetic) and ONE psum per MoE layer combines the partial outputs
-(:func:`repro.parallel.moe_parallel.make_sharded_decode_apply`).  Everything
-stays mesh-resident between launches: the batch cache is allocated directly
-with its serving sharding, the decode step compiles with in/out shardings
-pinned and the cache donated, and per-slot admission is a sharding-preserving
-``dynamic_update_slice`` of the B=1 prefilled cache — no host round trip, no
-re-layout between launches.
+shard executes only its resident expert slice and ONE psum per MoE layer
+combines the partial outputs.  Everything stays mesh-resident between
+launches: sharded cache allocation, pinned shardings, cache donation.
+
+Elastic serve fabric (``--fabric N``): N data-parallel replicas behind one
+queue, supervised by :class:`repro.runtime.fabric.ServeFabric` — replica
+crashes re-admit in-flight prompts (dedup by request id, no token emitted
+twice), transient launch failures retry with bounded exponential backoff,
+poisoned prompts are rejected by a per-request retry budget, a rejoining
+replica re-warms by replaying admission prefill from the periodic
+``CheckpointManager`` snapshot, and a straggling replica descends the
+speculation ladder (tree → chain → width 1) before exclusion.  ``--inject``
+drives the deterministic fault harness (``repro.runtime.faults``), e.g.
+``--inject crash@step=7,launch@step=3:times=2,stall@secs=9:times=4``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
         --smoke --slots 4 --prompt-len 32 --gen 16 --requests 8 \
-        --decode-plane --spec-tokens 4 --model 2 --telemetry
+        --decode-plane --spec-tokens 4 --fabric 2 --inject crash@step=7
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.runtime.fabric import Request, Result
+from repro.runtime.faults import RequestRejected
 
 
 # host-side draft policies: the tree fillers in launch.speculative (a chain
@@ -71,17 +87,368 @@ import time
 DRAFTER_CHOICES = ("model", "ngram", "repeat")
 
 
+class ServeReplica:
+    """One serve replica: the continuous-batching speculative decode loop as
+    a resumable object.
+
+    Crash model: ALL of this object (device caches and host slot state) may
+    vanish at any point; the supervisor's queue/ledger is the only durable
+    record.  Accepted tokens are therefore buffered per request in
+    ``emitted`` and only released by :meth:`step` when the request finishes.
+
+    The optional ``fault_hook(replica_id, step, phase, rids)`` is called
+    immediately before each launch (``phase="launch"``, ``step`` = 1-based
+    launch index) and each admission prefill (``phase="admit"``); it may
+    raise :class:`~repro.runtime.faults.ReplicaCrash` /
+    :class:`~repro.runtime.faults.TransientLaunchError` or return synthetic
+    stall seconds.  Nothing is mutated before the hook runs, so an injected
+    failure never leaves a launch half-applied.  A stall at or past
+    ``launch_timeout`` raises ``TransientLaunchError`` instead of running —
+    the per-launch timeout fails fast with state intact.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        mesh,
+        slots: int,
+        max_len: int,
+        params,
+        *,
+        tree=None,
+        drafter: str = "ngram",
+        telemetry: bool = False,
+        fault_hook=None,
+        replica_id: int = 0,
+        launch_timeout: Optional[float] = None,
+        drafter_key: int = 7,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs.base import ShapeCell
+        from repro.core.plans import TreePlan
+        from repro.launch.speculative import TREE_DRAFTERS, ModelDrafter
+        from repro.launch.steps import build_admission, build_model, build_spec_serve_step
+        from repro.parallel.sharding import param_shardings
+
+        self._jnp = jnp
+        self.cfg, self.mesh = cfg, mesh
+        self.B, self.max_len = slots, max_len
+        self.tree = tree
+        self.T = max(cfg.spec_tokens, 1)
+        self.telemetry = telemetry and cfg.decode_plane and cfg.is_moe
+        self.fault_hook = fault_hook
+        self.replica_id = replica_id
+        self.launch_timeout = launch_timeout
+        with mesh:
+            bundle = build_spec_serve_step(
+                cfg, mesh, ShapeCell("d", max_len, slots, "decode"),
+                telemetry=self.telemetry, tree=tree,
+            )
+            self.model = bundle.model
+            self._c_shard = bundle.in_shardings[1]
+            self.params = jax.device_put(params, bundle.in_shardings[0])
+            # the serving cache is allocated directly with its mesh layout and
+            # never leaves it: the decode step donates it in place, and
+            # admission writes prefilled slots into it sharding-preservingly
+            self.cache = self.model.init_cache(slots, max_len, shardings=self._c_shard)
+            adm = build_admission(cfg, mesh, self.model, max_len, self._c_shard)
+            self._prefill, self._one_cache_init, self._admit = (
+                adm.prefill, adm.one_cache_init, adm.admit,
+            )
+            self._decode = bundle.jit()
+            self._commit = (
+                jax.jit(self.model.commit_tree_path, donate_argnums=(0,),
+                        out_shardings=self._c_shard)
+                if tree is not None
+                else None
+            )
+            self._drafter = None
+            if drafter == "model" and self.T > 1:
+                # same family, one layer, width-1 launches: the draft model
+                # rides the identical decode plane (and admission path)
+                draft_cfg = dataclasses.replace(cfg, num_layers=1, spec_tokens=1)
+                draft_model = build_model(draft_cfg, mesh, slots)
+                dp = draft_model.init(jax.random.PRNGKey(drafter_key))
+                dp = jax.device_put(dp, param_shardings(dp, mesh))
+                self._drafter = ModelDrafter(draft_model, dp, slots, max_len)
+            self._propose_tree = tree if tree is not None else TreePlan.chain(self.T)
+            self._tree_fill = TREE_DRAFTERS.get(drafter, TREE_DRAFTERS["ngram"])
+
+        # host-side slot state (the ragged-batch control words)
+        B = slots
+        self.lengths = np.zeros((B,), np.int32)
+        self.prev_accept = np.zeros((B,), np.int32)
+        self.last_tok = np.zeros((B,), np.int32)
+        self.gen_left = np.zeros((B,), np.int32)
+        self.active = np.zeros((B,), bool)
+        self.history: List[List[int]] = [[] for _ in range(B)]
+        self.requests: List[Optional[Request]] = [None] * B
+        self.emitted: List[List[int]] = [[] for _ in range(B)]
+
+        self.steps = 0            # launch counter — the fault-spec step index
+        self.launches = 0
+        self.prefills = 0
+        self.accepted_total = 0
+        self.drafted_total = 0
+        self.accept_hist = np.zeros((self.T + 1,), np.int64)
+        self.agreements: List[float] = []
+        self.prefill_ms = 0.0
+        self.last_stall = 0.0
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [b for b in range(self.B) if not self.active[b]]
+
+    def in_flight(self) -> List[Request]:
+        """Requests currently being served, in slot order (= admission order
+        for the supervisor's front-of-queue re-admission on crash)."""
+        return [r for r in self.requests if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.active.any())
+
+    def snapshot_meta(self) -> dict:
+        """JSON-serializable slot metadata for the fabric's checkpoint: the
+        admission ledger a rejoining replica replays prefill from."""
+        return {
+            "steps": int(self.steps),
+            "rids": [int(r.rid) for r in self.requests if r is not None],
+            "lengths": [int(v) for v in self.lengths],
+        }
+
+    # ------------------------------------------------------------------
+    def admit(self, req: Request) -> int:
+        """Prefill ``req`` into a free slot; returns the slot index.
+
+        Raises :class:`RequestRejected` for prompts that can never finish
+        within the slot budget (checked BEFORE any launch), and lets the
+        fault hook veto the admission (poisoned prompts) while no state has
+        been touched."""
+        jnp = self._jnp
+        if len(req.prompt) + req.gen + self.T > self.max_len:
+            raise RequestRejected(
+                f"prompt len {len(req.prompt)} + gen {req.gen} + spec width "
+                f"{self.T} exceeds the slot budget {self.max_len}",
+                rid=req.rid,
+            )
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError(f"replica {self.replica_id}: no free slot")
+        if self.fault_hook is not None:
+            self.fault_hook(self.replica_id, self.steps + 1, "admit", (req.rid,))
+        b = free[0]
+        t0 = time.perf_counter()
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32))
+        with self.mesh:
+            one = self._one_cache_init()
+            if self.cfg.frontend:
+                fe = jnp.zeros(
+                    (1, self.cfg.frontend_tokens, self.cfg.frontend_dim), jnp.bfloat16
+                )
+                logits1, one = self._prefill(self.params, prompt[None], one, fe)
+            else:
+                logits1, one = self._prefill(self.params, prompt[None], one)
+            self.cache = self._admit(self.cache, one, b)
+        self.prefill_ms += (time.perf_counter() - t0) * 1e3
+        self.prefills += 1
+        first = int(jnp.argmax(logits1[0]))
+        self.lengths[b] = len(req.prompt)
+        self.last_tok[b] = first
+        self.prev_accept[b] = 0
+        self.gen_left[b] = req.gen
+        self.active[b] = True
+        self.history[b] = [first]
+        self.requests[b] = req
+        self.emitted[b] = [first]
+        if self._drafter is not None:
+            self._drafter.admit(b, prompt)
+        return b
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Result]:
+        """One speculative launch over the ragged pool: draft, decode,
+        greedy verify/rollback, tree commit; returns the requests that
+        completed this step (their full buffered token streams)."""
+        if not self.active.any():
+            return []
+        jnp = self._jnp
+        from repro.launch.speculative import greedy_accept_tree
+
+        step_no = self.steps + 1
+        self.last_stall = 0.0
+        if self.fault_hook is not None:
+            from repro.runtime.faults import TransientLaunchError
+
+            rids = tuple(r.rid for r in self.requests if r is not None)
+            stall = float(self.fault_hook(self.replica_id, step_no, "launch", rids) or 0.0)
+            if self.launch_timeout is not None and stall >= self.launch_timeout:
+                # fail fast BEFORE the launch: state is never half-mutated
+                raise TransientLaunchError(
+                    f"launch exceeded the {self.launch_timeout:.1f}s timeout "
+                    f"(stalled {stall:.1f}s)"
+                )
+            self.last_stall = stall
+        self.steps = step_no
+
+        T, B = self.T, self.B
+        # ---- draft: one launch's tokens for every slot ---------------------
+        # a chain is the degenerate tree, so ONE fill path serves both shapes
+        if self._drafter is not None and T > 1:
+            self._drafter.catch_up()
+            toks = self._drafter.propose(self.last_tok, self.lengths, self._propose_tree)
+        else:
+            toks = np.zeros((B, T), np.int32)
+            for b in range(B):
+                if self.active[b] and T > 1:
+                    toks[b] = self._tree_fill(
+                        self.history[b], int(self.last_tok[b]), self._propose_tree
+                    )
+        toks[:, 0] = self.last_tok
+
+        # ---- one speculative launch over the ragged pool -------------------
+        with self.mesh:
+            out = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lengths), jnp.asarray(self.prev_accept),
+            )
+        if self.telemetry:
+            logits, self.cache, metrics = out
+            self.agreements.append(float(metrics["plan_agreement"]))
+        else:
+            logits, self.cache = out
+        self.launches += 1
+        y = np.asarray(jnp.argmax(logits, -1))  # (B, T) verified tokens
+
+        # ---- greedy verify / rollback --------------------------------------
+        path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+        acc_n = np.zeros((B,), np.int32)
+        for b in range(B):
+            if not self.active[b]:
+                self.lengths[b] = 0  # park finished slots at depth 0
+                continue
+            path = greedy_accept_tree(toks[b], y[b], self._propose_tree, int(self.gen_left[b]))
+            a = len(path)
+            path_pad[b, :a] = path
+            accepted = [int(y[b, p]) for p in path]
+            self.prev_accept[b] = path[-1]
+            if self._drafter is not None:
+                # rows [lengths, lengths + a) of the true stream are the
+                # launch input followed by all but the last accepted token
+                self._drafter.observe(b, [int(self.last_tok[b])] + accepted[:-1])
+            self.history[b].extend(accepted)
+            self.emitted[b].extend(accepted)
+            self.accepted_total += a
+            self.drafted_total += T
+            self.accept_hist[a] += 1
+            acc_n[b] = a
+            self.gen_left[b] -= a
+            self.last_tok[b] = accepted[-1]
+        if self.tree is not None and not self.tree.is_chain():
+            # commit BEFORE advancing lengths: the accepted nodes move from
+            # scattered rows base+u_i to contiguous rows base+i
+            with self.mesh:
+                self.cache = self._commit(
+                    self.cache, jnp.asarray(self.lengths), jnp.asarray(path_pad)
+                )
+        done: List[Result] = []
+        for b in range(B):
+            if not self.active[b]:
+                continue
+            self.lengths[b] += acc_n[b]
+            if self.gen_left[b] <= 0 or self.lengths[b] + T > self.max_len:
+                req = self.requests[b]
+                done.append(Result(
+                    rid=req.rid, tokens=list(self.emitted[b]), replica=self.replica_id
+                ))
+                self.active[b] = False
+                self.requests[b] = None
+                self.emitted[b] = []
+        return done
+
+
+# ---------------------------------------------------------------------------
+# fabric assembly (shared by the CLI and the fault-tolerance tests)
+# ---------------------------------------------------------------------------
+
+
+def degrade_ladder(tree, spec_width: int) -> List[Any]:
+    """The speculation ladder a flagged replica descends: ``(tree, width)``
+    per level — full tree, then the chain of its spine, then width 1 (the
+    control plane de-configuring itself before the fabric excludes)."""
+    ladder = []
+    if tree is not None and not tree.is_chain():
+        ladder.append((tree, tree.num_nodes))
+        chain_w = len(tree.spine())
+    else:
+        chain_w = spec_width
+    if chain_w > 1:
+        ladder.append((None, chain_w))
+    ladder.append((None, 1))
+    return ladder
+
+
+def make_replica_factory(
+    cfg,
+    mesh,
+    slots: int,
+    max_len: int,
+    params,
+    ladder,
+    *,
+    drafter: str = "ngram",
+    telemetry: bool = False,
+    fault_hook=None,
+    launch_timeout: Optional[float] = None,
+    ckpt=None,
+    shrink_to: Optional[tuple] = None,
+):
+    """Build the fabric's replica factory.
+
+    On a re-warm rebuild the supervisor passes the checkpoint-restored params
+    (``params_`` below); a crash flagged as device loss (``shrunk``) rebuilds
+    through :func:`repro.runtime.elastic.reshard_serve_after_failure` on the
+    shrunken ``shrink_to = (n_healthy, model_axis)`` mesh when a committed
+    checkpoint exists — the model axis stays fixed, the data axis shrinks,
+    and params are re-placed with the new mesh's serve shardings.
+    """
+
+    def make(replica_id: int, level: int, params_=None, shrunk: bool = False):
+        from repro.configs.base import ShapeCell
+
+        tr, width = ladder[min(level, len(ladder) - 1)]
+        cfg_l = dataclasses.replace(cfg, spec_tokens=width)
+        m, p = mesh, params_ if params_ is not None else params
+        if shrunk and shrink_to is not None and ckpt is not None and ckpt.latest_step() is not None:
+            from repro.runtime.elastic import reshard_serve_after_failure
+
+            n_healthy, model_axis = shrink_to
+            state = reshard_serve_after_failure(
+                cfg_l, ShapeCell("d", max_len, slots, "decode"), ckpt,
+                n_healthy=n_healthy, model_axis=model_axis,
+            )
+            m, p = state.mesh, state.params
+        return ServeReplica(
+            cfg_l, m, slots, max_len, p, tree=tr, drafter=drafter,
+            telemetry=telemetry, fault_hook=fault_hook, replica_id=replica_id,
+            launch_timeout=launch_timeout,
+        )
+
+    return make
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
-                    help="decode slot pool size (continuous-batching batch)")
+                    help="decode slot pool size PER REPLICA")
     ap.add_argument("--prompt-len", type=int, default=64,
                     help="max synthetic prompt length (prompts arrive ragged)")
     ap.add_argument("--gen", type=int, default=16, help="tokens to generate per request")
     ap.add_argument("--requests", type=int, default=0,
-                    help="number of queued requests (default 2x slots)")
+                    help="number of queued requests (default 2x slots x replicas)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--decode-plane", action="store_true",
@@ -103,27 +470,40 @@ def main() -> None:
                          "plane")
     ap.add_argument("--telemetry", action="store_true",
                     help="report stale-vs-fresh plan top-k agreement per launch")
+    ap.add_argument("--fabric", type=int, default=1,
+                    help="number of data-parallel serve replicas behind the "
+                         "shared admission queue")
+    ap.add_argument("--inject", default="",
+                    help="deterministic fault specs, e.g. 'crash@step=7,"
+                         "launch@step=3:times=2,stall@secs=9:times=4,"
+                         "poison@rid=0' (see repro.runtime.faults)")
+    ap.add_argument("--launch-timeout", type=float, default=30.0,
+                    help="per-launch timeout in seconds; a stalled launch "
+                         "fails fast as a transient error and is retried "
+                         "with backoff")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="fabric snapshot directory (params + admission "
+                         "ledger); defaults to a temp dir when faults are "
+                         "injected")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="rounds between fabric snapshots (0 = off; "
+                         "defaults to 4 when --inject is set)")
     args = ap.parse_args()
 
-    import dataclasses
+    import sys
+    import tempfile
 
     import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from jax.sharding import NamedSharding
 
+    from repro.checkpoint import CheckpointManager
     from repro.configs import get_config, get_smoke_config
-    from repro.configs.base import ShapeCell
     from repro.core.plans import TreePlan
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.speculative import (
-        TREE_DRAFTERS,
-        ModelDrafter,
-        greedy_accept_tree,
-    )
-    from repro.launch.steps import build_model, build_spec_serve_step
-    from repro.models import transformer as trf
-    from repro.parallel.sharding import batch_spec, cache_shardings, param_shardings
+    from repro.models.model import Model
+    from repro.parallel.sharding import param_shardings
+    from repro.runtime.fabric import FabricConfig, ServeFabric
+    from repro.runtime.faults import FaultInjector, parse_faults
+    from repro.runtime.straggler import StragglerDetector
 
     tree = None
     spec_width = max(args.spec_tokens, 1)
@@ -140,188 +520,109 @@ def main() -> None:
     telemetry = args.telemetry and cfg.decode_plane and cfg.is_moe
     mesh = make_host_mesh(args.data, args.model)
     B, S, T = args.slots, args.prompt_len, spec_width
-    n_req = args.requests or 2 * B
+    n_req = args.requests or 2 * B * args.fabric
     max_len = S + args.gen + T
 
     # synthetic ragged request queue: a few distinct length buckets so the
     # per-length prefill jit cache stays small
     buckets = sorted({max(4, S // 2), max(4, (3 * S) // 4), S})
     rng = np.random.default_rng(0)
-    queue = [
-        np.asarray(
-            rng.integers(0, cfg.vocab_size, size=buckets[i % len(buckets)]), np.int32
+    requests = [
+        Request(
+            rid=i,
+            prompt=np.asarray(
+                rng.integers(0, cfg.vocab_size, size=buckets[i % len(buckets)]),
+                np.int32,
+            ),
+            gen=args.gen,
         )
         for i in range(n_req)
     ]
-    with mesh:
-        serve_b = build_spec_serve_step(
-            cfg, mesh, ShapeCell("d", max_len, B, "decode"), telemetry=telemetry,
-            tree=tree,
-        )
-        model = serve_b.model
-        c_shard = serve_b.in_shardings[1]
-        params = jax.device_put(model.init(jax.random.PRNGKey(0)), serve_b.in_shardings[0])
-        # the serving cache is allocated directly with its mesh layout and
-        # never leaves it: the decode step donates it in place, and admission
-        # below writes prefilled slots into it sharding-preservingly
-        cache = model.init_cache(B, max_len, shardings=c_shard)
-        # admission prefill runs at B=1 (batch replicated; KV heads stay
-        # model-sharded), through a model whose collectives are built for
-        # batch=1 — the serve model's batch axes need not divide 1
-        pf_model = build_model(cfg, mesh, 1)
-        c1_abs = jax.eval_shape(lambda: trf.init_cache(cfg, 1, max_len))
-        c1_shard = cache_shardings(c1_abs, 1, mesh)
-        lg1_shard = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
-        prefill = jax.jit(pf_model.prefill, out_shardings=(lg1_shard, c1_shard))
-        one_cache_init = jax.jit(
-            lambda: trf.init_cache(cfg, 1, max_len), out_shardings=c1_shard
-        )
-        admit = jax.jit(model.write_cache_slot, donate_argnums=(0,), out_shardings=c_shard)
-        decode = serve_b.jit()
-        commit = (
-            jax.jit(model.commit_tree_path, donate_argnums=(0,), out_shardings=c_shard)
-            if tree is not None
-            else None
-        )
 
-        # drafter: host heuristic (chain or tree fill) or the draft model
-        drafter = None
-        if args.drafter == "model":
-            # same family, one layer, width-1 launches: the draft model rides
-            # the identical decode plane (and the identical admission path)
-            draft_cfg = dataclasses.replace(cfg, num_layers=1, spec_tokens=1)
-            draft_model = build_model(draft_cfg, mesh, B)
-            draft_params = draft_model.init(jax.random.PRNGKey(7))
-            draft_params = jax.device_put(
-                draft_params, param_shardings(draft_params, mesh)
-            )
-            drafter = ModelDrafter(draft_model, draft_params, B, max_len)
-        propose_tree = tree if tree is not None else TreePlan.chain(T)
-        tree_fill = TREE_DRAFTERS.get(args.drafter)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    specs = parse_faults(args.inject)
+    injector = FaultInjector(specs) if specs else None
 
-        # host-side slot state (the ragged-batch control words)
-        lengths = np.zeros((B,), np.int32)
-        prev_accept = np.zeros((B,), np.int32)
-        last_tok = np.zeros((B,), np.int32)
-        gen_left = np.zeros((B,), np.int32)
-        active = np.zeros((B,), bool)
-        history = [[] for _ in range(B)]
+    ckpt = None
+    checkpoint_every = args.checkpoint_every or (4 if specs else 0)
+    tmpdir = None
+    if checkpoint_every:
+        ckpt_dir = args.checkpoint_dir
+        if not ckpt_dir:
+            tmpdir = tempfile.TemporaryDirectory(prefix="serve_fabric_ckpt_")
+            ckpt_dir = tmpdir.name
+        ckpt = CheckpointManager(ckpt_dir, keep=2)
 
-        launches = accepted_total = drafted_total = finished = 0
-        accept_hist = np.zeros((T + 1,), np.int64)  # accept-length distribution
-        prefill_ms = 0.0
-        agreements = []
-        t_start = time.perf_counter()
+    def restore_params(mgr):
+        abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        p, _, _, _ = mgr.restore(abs_p, {}, param_shardings=param_shardings(abs_p, mesh))
+        return p
 
-        while len(queue) or active.any():
-            # ---- admission: fill free slots from the queue -----------------
-            for b in range(B):
-                if active[b] or not queue:
-                    continue
-                prompt = queue.pop(0)
-                t0 = time.perf_counter()
-                one = one_cache_init()
-                fe = (
-                    jnp.zeros((1, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
-                    if cfg.frontend
-                    else None
-                )
-                logits1, one = (
-                    prefill(params, prompt[None], one, fe)
-                    if fe is not None
-                    else prefill(params, prompt[None], one)
-                )
-                cache = admit(cache, one, b)
-                prefill_ms += (time.perf_counter() - t0) * 1e3
-                lengths[b] = len(prompt)
-                last_tok[b] = int(jnp.argmax(logits1[0]))
-                prev_accept[b] = 0
-                gen_left[b] = args.gen
-                active[b] = True
-                history[b] = [last_tok[b]]
-                if drafter is not None:
-                    drafter.admit(b, prompt)
+    ladder = degrade_ladder(tree, T)
+    make = make_replica_factory(
+        cfg, mesh, B, max_len, params, ladder,
+        drafter=args.drafter, telemetry=telemetry,
+        fault_hook=injector.check if injector else None,
+        launch_timeout=args.launch_timeout, ckpt=ckpt,
+        shrink_to=(max(args.model, len(jax.devices()) // 2), args.model),
+    )
+    fabric = ServeFabric(
+        make, requests,
+        FabricConfig(
+            n_replicas=args.fabric,
+            launch_timeout=args.launch_timeout,
+            checkpoint_every=checkpoint_every,
+            max_degrade_level=len(ladder) - 1,
+            synthetic_step_times=bool(specs),
+        ),
+        ckpt=ckpt,
+        restore_params=restore_params if ckpt else None,
+        params=params,
+        detector=StragglerDetector(n_workers=args.fabric, warmup=8) if args.fabric > 1 else None,
+    )
+    t_start = time.perf_counter()
+    results = fabric.run()
+    wall = time.perf_counter() - t_start
+    if tmpdir is not None:
+        tmpdir.cleanup()
 
-            # ---- draft: one launch's tokens for every slot -----------------
-            # a chain is the degenerate tree, so ONE fill path serves both
-            # shapes (propose_tree is the CLI tree, or chain(T))
-            if drafter is not None and T > 1:
-                drafter.catch_up()
-                toks = drafter.propose(last_tok, lengths, propose_tree)
-            else:
-                toks = np.zeros((B, T), np.int32)
-                for b in range(B):
-                    if active[b] and T > 1:
-                        toks[b] = tree_fill(history[b], int(last_tok[b]), propose_tree)
-            toks[:, 0] = last_tok
-
-            # ---- one speculative launch over the ragged pool ---------------
-            out = decode(params, cache, jnp.asarray(toks), jnp.asarray(lengths),
-                         jnp.asarray(prev_accept))
-            if telemetry:
-                logits, cache, metrics = out
-                agreements.append(float(metrics["plan_agreement"]))
-            else:
-                logits, cache = out
-            launches += 1
-            y = np.asarray(jnp.argmax(logits, -1))  # (B, T) verified tokens
-
-            # ---- greedy verify / rollback ----------------------------------
-            # the tree walk (chain included: it degenerates to greedy_accept)
-            # returns the accepted root path; the identity-padded path map
-            # then compacts the accepted rows (a no-op for chain accepts)
-            path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
-            acc_n = np.zeros((B,), np.int32)
-            for b in range(B):
-                if not active[b]:
-                    lengths[b] = 0  # park finished slots at depth 0
-                    continue
-                path = greedy_accept_tree(toks[b], y[b], propose_tree, int(gen_left[b]))
-                a = len(path)
-                path_pad[b, :a] = path
-                accepted = [int(y[b, p]) for p in path]
-                prev_accept[b] = path[-1]
-                if drafter is not None:
-                    # rows [lengths, lengths + a) of the true stream are the
-                    # launch input followed by all but the last accepted token
-                    drafter.observe(b, [int(last_tok[b])] + accepted[:-1])
-                history[b].extend(accepted)
-                accepted_total += a
-                drafted_total += T
-                accept_hist[a] += 1
-                acc_n[b] = a
-                gen_left[b] -= a
-                last_tok[b] = accepted[-1]
-            if tree is not None and not tree.is_chain():
-                # commit BEFORE advancing lengths: the accepted nodes move
-                # from scattered rows base+u_i to contiguous rows base+i
-                cache = commit(cache, jnp.asarray(lengths), jnp.asarray(path_pad))
-            for b in range(B):
-                if not active[b]:
-                    continue
-                lengths[b] += acc_n[b]
-                if gen_left[b] <= 0 or lengths[b] + T > max_len:
-                    active[b] = False
-                    finished += 1
-
-        wall = time.perf_counter() - t_start
-        jax.block_until_ready(cache)
-
-    generated = accepted_total
-    print(f"served {finished} requests on {B} slots: {generated} tokens in "
-          f"{wall*1e3:.1f} ms ({generated/max(wall, 1e-9):.0f} tok/s, "
-          f"{launches} launches, prefill {prefill_ms:.1f} ms total)")
+    st = fabric.stats
+    generated = st["accepted"]
+    finished = sum(1 for r in results.values() if r.error is None)
+    print(f"served {finished} requests on {args.fabric}x{B} slots: {generated} "
+          f"tokens in {wall*1e3:.1f} ms ({generated/max(wall, 1e-9):.0f} tok/s, "
+          f"{st['launches']} launches, prefill {st['prefill_ms']:.1f} ms total)")
     if T > 1:
         shape = f"tree {args.draft_tree}" if tree is not None else f"width {T}"
         print(f"speculative: {shape} ({T} nodes), drafter {args.drafter}, "
-              f"accept rate {accepted_total/max(drafted_total, 1):.2f} "
-              f"({accepted_total/max(launches, 1):.2f} tokens/launch)")
-        dist = {a: int(n) for a, n in enumerate(accept_hist) if n}
-        print(f"accept-length distribution (tokens accepted -> launches): {dist}")
-    if telemetry and agreements:
+              f"accept rate {st['accepted']/max(st['drafted'], 1):.2f} "
+              f"({st['accepted']/max(st['launches'], 1):.2f} tokens/launch)")
+    if telemetry and st["agreements"]:
         print(f"plan telemetry: stale-vs-fresh top-k agreement "
-              f"mean {np.mean(agreements):.3f} min {np.min(agreements):.3f} "
-              f"over {len(agreements)} launches")
+              f"mean {np.mean(st['agreements']):.3f} min {np.min(st['agreements']):.3f} "
+              f"over {len(st['agreements'])} launches")
+    if args.fabric > 1 or specs:
+        print(f"fabric: {st['crashes']} crashes, {st['rejoins']} rejoins "
+              f"({st['rewarm_prefills']} re-warm prefills, {st['restores']} "
+              f"checkpoint restores), {st['transient_failures']} transient "
+              f"failures ({st['timeouts']} timeouts, {st['backoff_rounds']} "
+              f"backoff rounds), {st['poisoned']} poisoned, "
+              f"{len(st['degradations'])} degradations, {st['excluded']} "
+              f"excluded, {st['dropped']} dropped, {st['duplicates']} duplicates")
+
+    unanswered = [r.rid for r in requests if r.rid not in results]
+    poison_expected = any(s.kind == "poison" for s in specs)
+    errors = [r for r in results.values() if r.error is not None]
+    if unanswered:
+        print(f"FABRIC ERROR: {len(unanswered)} requests unanswered: {unanswered}")
+        sys.exit(1)
+    if errors and not poison_expected:
+        print(f"FABRIC ERROR: {len(errors)} requests errored without poison "
+              f"injection: {[(r.rid, r.error) for r in errors]}")
+        sys.exit(1)
+    if st["duplicates"]:
+        print(f"FABRIC ERROR: {st['duplicates']} duplicate results published")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

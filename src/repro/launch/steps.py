@@ -364,6 +364,42 @@ def build_spec_serve_step(
     )
 
 
+@dataclasses.dataclass
+class AdmissionBundle:
+    """The jitted B=1 admission path shared by every serve replica.
+
+    Admission prefill runs at batch 1 (batch replicated; KV heads stay
+    model-sharded) through a model whose collectives are built for batch=1 —
+    the serve model's batch axes need not divide 1 — and ``admit`` writes the
+    prefilled slot into the batch cache sharding-preservingly (donated
+    ``dynamic_update_slice``, no host round trip).
+    """
+
+    prefill: Callable        # (params, tokens (1, L), one_cache[, frontend])
+    one_cache_init: Callable  # () -> fresh B=1 cache allocated on the mesh
+    admit: Callable          # (batch_cache, one_cache, slot) -> batch_cache
+    model: Model             # the B=1 prefill model
+
+
+def build_admission(
+    cfg: ModelConfig, mesh: Mesh, serve_model: Model, max_len: int, cache_sharding: Any
+) -> AdmissionBundle:
+    pf_model = build_model(cfg, mesh, 1)
+    c1_abs = jax.eval_shape(lambda: T.init_cache(cfg, 1, max_len))
+    c1_shard = cache_shardings(c1_abs, 1, mesh)
+    lg1_shard = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
+    prefill = jax.jit(pf_model.prefill, out_shardings=(lg1_shard, c1_shard))
+    one_cache_init = jax.jit(
+        lambda: T.init_cache(cfg, 1, max_len), out_shardings=c1_shard
+    )
+    admit = jax.jit(
+        serve_model.write_cache_slot, donate_argnums=(0,), out_shardings=cache_sharding
+    )
+    return AdmissionBundle(
+        prefill=prefill, one_cache_init=one_cache_init, admit=admit, model=pf_model
+    )
+
+
 def build_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell, *, strategy: str = "tp") -> StepBundle:
     if cell.step == "train":
         return build_train_step(cfg, mesh, cell, strategy=strategy)

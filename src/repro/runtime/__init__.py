@@ -1,2 +1,17 @@
 from repro.runtime.straggler import StragglerDetector, Mitigation  # noqa: F401
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector  # noqa: F401
+from repro.runtime.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    ReplicaCrash,
+    ReplicaFault,
+    RequestRejected,
+    TransientLaunchError,
+    parse_faults,
+)
+from repro.runtime.fabric import (  # noqa: F401
+    FabricConfig,
+    Request,
+    Result,
+    ServeFabric,
+)

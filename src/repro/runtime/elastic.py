@@ -15,7 +15,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint import CheckpointManager
-from repro.launch.steps import build_train_step
+from repro.launch.steps import build_spec_serve_step, build_train_step
 from repro.parallel.sharding import param_shardings
 
 
@@ -27,6 +27,18 @@ class ElasticState:
     params: Any
     opt_state: Any
     step: int
+
+
+@dataclass
+class ServeElasticState:
+    """A serve replica's post-failure world: the shrunken mesh plus params
+    restored from the latest committed checkpoint with the new shardings."""
+
+    mesh: Mesh
+    bundle: Any          # spec-serve StepBundle for the new mesh
+    params: Any
+    step: int            # checkpoint step the params came from
+    extra: dict          # checkpoint extra (the fabric's admission ledger)
 
 
 def reshard_after_failure(
@@ -62,3 +74,38 @@ def reshard_after_failure(
         opt_state=opt_state,
         step=step,
     )
+
+
+def reshard_serve_after_failure(
+    cfg,
+    cell,
+    ckpt: CheckpointManager,
+    *,
+    n_healthy: Optional[int] = None,
+    model_axis: Optional[int] = None,
+    devices: Optional[list] = None,
+) -> ServeElasticState:
+    """The serve-fabric twin of :func:`reshard_after_failure`: rebuild the
+    largest (data, model) mesh from the surviving devices and restore only
+    the params (serving carries no optimizer state) from the latest
+    committed checkpoint, placed with the new mesh's serve shardings.
+
+    A rejoining replica whose crash lost devices calls this, then re-warms
+    its KV cache by replaying admission prefill for the requests the fabric
+    re-admits — the cache itself is never checkpointed (it is derived state;
+    the checkpoint's admission ledger is the durable record of what to
+    replay).
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = n_healthy if n_healthy is not None else len(devices)
+    model = model_axis or min(n, 1)
+    if n // model < 1:
+        raise ValueError(f"cannot build mesh: {n} devices, model={model}")
+    data = n // model
+    mesh = Mesh(np.asarray(devices[: data * model]).reshape(data, model), ("data", "model"))
+
+    with mesh:
+        bundle = build_spec_serve_step(cfg, mesh, cell)
+        params_abs, p_shard = bundle.abstract_inputs[0], bundle.in_shardings[0]
+        params, _, step, extra = ckpt.restore(params_abs, {}, param_shardings=p_shard)
+    return ServeElasticState(mesh=mesh, bundle=bundle, params=params, step=step, extra=extra)

@@ -35,10 +35,34 @@ class StragglerDetector:
     _ewma: Optional[np.ndarray] = field(default=None, init=False)
     _flagged: Optional[np.ndarray] = field(default=None, init=False)
     _steps: int = field(default=0, init=False)
+    _primed: bool = field(default=False, init=False)
 
     def __post_init__(self) -> None:
         self._ewma = np.zeros(self.n_workers)
         self._flagged = np.zeros(self.n_workers, np.int64)
+
+    def rebase(self, survivors: Sequence[int]) -> None:
+        """Re-shape the detector after an elastic membership change.
+
+        ``survivors`` are the (current-indexing) worker indices that remain;
+        their EWMA history carries over to the new compact indices while the
+        flag counters reset and warmup restarts — after an ``EXCLUDE`` +
+        re-shard the fleet must be re-measured before new verdicts (step
+        times change when the survivors absorb the excluded worker's load).
+        Without this the detector would keep the old ``n_workers`` shape and
+        reject every post-re-shard ``observe``.
+        """
+        keep = [int(w) for w in survivors]
+        if any(w < 0 or w >= self.n_workers for w in keep):
+            raise ValueError(
+                f"survivor indices {keep} out of range for {self.n_workers} workers"
+            )
+        if len(set(keep)) != len(keep):
+            raise ValueError(f"duplicate survivor indices: {keep}")
+        self.n_workers = len(keep)
+        self._ewma = self._ewma[keep].copy()
+        self._flagged = np.zeros(self.n_workers, np.int64)
+        self._steps = 0  # restart warmup: no verdicts until re-measured
 
     def observe(self, step_times: Sequence[float]) -> Dict[int, Mitigation]:
         """Feed per-worker durations for one step; returns worker -> action."""
@@ -46,8 +70,9 @@ class StragglerDetector:
         if t.shape != (self.n_workers,):
             raise ValueError(f"expected {self.n_workers} durations, got {t.shape}")
         self._steps += 1
-        if self._steps == 1:
+        if not self._primed:
             self._ewma[:] = t
+            self._primed = True
         else:
             self._ewma = self.alpha * t + (1 - self.alpha) * self._ewma
 

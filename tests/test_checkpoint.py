@@ -49,6 +49,29 @@ def test_atomicity_uncommitted_invisible(tmp_path):
     assert mgr.latest_step() == 1  # the torn step is not restorable
 
 
+def test_stale_tmp_reaped_on_next_save(tmp_path):
+    """A torn ``tmp.step_*`` from an interrupted save must neither block
+    later saves nor be selected by restore, and the next save reaps it
+    (single-writer: any tmp present at save start is dead)."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    params, opt = _tree(0), {"m": _tree(1)}
+    # two stranded tmp dirs: one torn mid-manifest, one for the very step we
+    # are about to save again
+    for name in ("tmp.step_00000002", "tmp.step_00000005"):
+        crash = Path(tmp_path) / name
+        crash.mkdir()
+        (crash / "params.00000.npy").write_bytes(b"torn")
+    assert mgr.all_steps() == []  # restore never sees tmp dirs
+    mgr.save(5, params, opt)  # neither tmp blocks the save...
+    assert mgr.latest_step() == 5
+    leftovers = [p.name for p in Path(tmp_path).glob("tmp.step_*")]
+    assert leftovers == []  # ...and both were garbage-collected
+    abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    abs_o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt)
+    _, _, step, _ = mgr.restore(abs_p, abs_o)
+    assert step == 5
+
+
 def test_gc_keeps_last_k(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=2)
     params, opt = _tree(0), {"m": _tree(1)}

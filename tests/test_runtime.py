@@ -54,6 +54,41 @@ def test_straggler_shape_validation():
         det.observe(np.ones(5))
 
 
+def test_straggler_rebase_reindexes_survivors_and_restarts_warmup():
+    """After an elastic membership change the detector must (1) shrink to
+    the survivor set with EWMA history carried over, (2) restart warmup so
+    no verdict fires before the new fleet is re-measured, and (3) accept
+    the new observation width (pre-fix it kept the old shape and rejected
+    every post-re-shard observe)."""
+    det = StragglerDetector(n_workers=4, warmup=2, patience=2, threshold=1.5, alpha=0.5)
+    for _ in range(6):
+        det.observe([1.0, 1.0, 4.0, 2.0])
+    ewma_before = det.ewma
+    det.rebase([0, 1, 3])  # worker 2 excluded
+    assert det.n_workers == 3
+    np.testing.assert_allclose(det.ewma, ewma_before[[0, 1, 3]])  # history carried
+    # warmup restarted: the survivors' first post-re-shard steps yield no
+    # verdicts even though worker 3 (now index 2) still looks slow...
+    assert det.observe([1.0, 1.0, 2.0]) == {}
+    assert det.observe([1.0, 1.0, 2.0]) == {}
+    # ...and the carried EWMA was NOT clobbered by the first observation
+    # (priming happens once per detector lifetime, not once per rebase)
+    assert det.ewma[2] > 1.9
+    v = det.observe([1.0, 1.0, 2.0])  # past warmup: verdicts flow again
+    assert v.get(2) in (Mitigation.REDISPATCH, Mitigation.EXCLUDE)
+
+
+def test_straggler_rebase_validates_indices():
+    det = StragglerDetector(n_workers=4)
+    det.observe(np.ones(4))
+    with pytest.raises(ValueError):
+        det.rebase([0, 4])  # out of range
+    with pytest.raises(ValueError):
+        det.rebase([1, 1])  # duplicates
+    det.rebase([2])  # shrink to one worker is legal
+    assert det.observe([1.0]) == {}
+
+
 # ---------------------------------------------------------------------------
 # trainer end-to-end (host devices, small model)
 # ---------------------------------------------------------------------------

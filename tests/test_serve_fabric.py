@@ -1,0 +1,583 @@
+"""Fault-tolerant elastic serve fabric: exactly-once results under injected
+replica crashes, transient launch failures, stalls, and poisoned prompts.
+
+The contract under test: a faulted fabric run must produce, per request,
+BYTE-IDENTICAL token streams to a fault-free run (requests may complete in a
+different order and on different replicas; no request is ever corrupted,
+dropped, or answered twice).  The supervisor policy (retry/backoff/requeue/
+degrade/exclude) is jax-free, so it is first exercised exhaustively with a
+fake replica; the end-to-end byte-identity claims then run against the real
+speculative decode plane, including an 8-device crash-and-re-shard run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.runtime.fabric import FabricConfig, Request, Result, ServeFabric
+from repro.runtime.faults import (
+    FaultInjector,
+    FaultSpec,
+    ReplicaCrash,
+    RequestRejected,
+    TransientLaunchError,
+    parse_faults,
+)
+from repro.runtime.straggler import StragglerDetector
+
+from tests.conftest import run_subprocess_devices
+
+
+# ---------------------------------------------------------------------------
+# fault spec grammar + injector determinism (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_faults_grammar():
+    specs = parse_faults(
+        "crash@step=7, launch@step=3:replica=1:times=2,"
+        "stall@secs=9:times=4, poison@rid=0, crash@step=5:shrink=1"
+    )
+    assert [s.kind for s in specs] == ["crash", "launch", "stall", "poison", "crash"]
+    assert specs[0].step == 7 and specs[0].times == 1 and not specs[0].shrink
+    assert specs[1].replica == 1 and specs[1].times == 2
+    assert specs[2].step is None and specs[2].secs == 9.0  # wildcard stall
+    assert specs[3].rid == 0 and specs[3].times == 0  # poison persists
+    assert specs[4].shrink
+    assert parse_faults("") == [] and parse_faults("  ") == []
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor")
+    with pytest.raises(ValueError):
+        FaultSpec(kind="crash")  # crash needs a step
+    with pytest.raises(ValueError):
+        FaultSpec(kind="poison")  # poison needs a rid
+    FaultSpec(kind="stall", secs=3.0)  # wildcard stall is legal
+    with pytest.raises(ValueError):
+        parse_faults("stall@bogus=1")
+
+
+def test_injector_explicit_specs_fire_deterministically():
+    specs = parse_faults("crash@step=2:replica=1,stall@secs=5:times=2,launch@step=3")
+    inj = FaultInjector(specs)
+    assert inj.check(0, 1) == 5.0  # wildcard stall, firing 1/2
+    assert inj.check(1, 1) == 5.0  # firing 2/2 -> disarmed
+    assert inj.check(0, 2) == 0.0  # crash spec filtered to replica 1
+    with pytest.raises(ReplicaCrash):
+        inj.check(1, 2)
+    with pytest.raises(TransientLaunchError):
+        inj.check(0, 3)
+    assert inj.check(0, 3) == 0.0  # launch spec fired its once
+    assert [k for _, _, k in inj.log] == ["stall", "stall", "crash", "launch"]
+
+
+def test_injector_poison_fires_only_at_admission_with_matching_rid():
+    inj = FaultInjector(parse_faults("poison@rid=7"))
+    assert inj.check(0, 1, "launch", (7,)) == 0.0  # launches never poisoned
+    assert inj.check(0, 1, "admit", (3,)) == 0.0   # other rids untouched
+    for _ in range(3):  # times=0: persists forever
+        with pytest.raises(TransientLaunchError) as ei:
+            inj.check(0, 1, "admit", (7,))
+        assert ei.value.rid == 7
+
+
+def test_injector_seeded_layer_is_call_order_independent():
+    """Randomized verdicts derive from (seed, replica, step) alone, so two
+    injectors probed in different orders agree everywhere."""
+    def verdict(inj, replica, step):
+        try:
+            inj.check(replica, step)
+            return "ok"
+        except ReplicaCrash:
+            return "crash"
+        except TransientLaunchError:
+            return "transient"
+
+    probes = [(r, s) for r in range(3) for s in range(1, 30)]
+    a = FaultInjector(seed=11, p_crash=0.15, p_transient=0.2)
+    b = FaultInjector(seed=11, p_crash=0.15, p_transient=0.2)
+    va = {p: verdict(a, *p) for p in probes}
+    vb = {p: verdict(b, *p) for p in reversed(probes)}
+    assert va == vb
+    assert "crash" in va.values() and "transient" in va.values()
+    c = FaultInjector(seed=12, p_crash=0.15, p_transient=0.2)
+    assert {p: verdict(c, *p) for p in probes} != va
+
+
+# ---------------------------------------------------------------------------
+# supervisor policy against a fake replica (no jax): retry, backoff,
+# requeue-on-crash, poison budget, exclusion, capacity floor
+# ---------------------------------------------------------------------------
+
+
+class FakeReplica:
+    """Minimal stand-in honoring the ServeReplica duck-type: one token per
+    step per slot, deterministic stream ``rid*1000 + i`` — so exactly-once
+    violations (dropped/duplicated/corrupted tokens) are detectable."""
+
+    def __init__(self, replica_id, *, slots=1, fault_hook=None, launch_timeout=None):
+        self.replica_id = replica_id
+        self.fault_hook = fault_hook
+        self.launch_timeout = launch_timeout
+        self.requests = [None] * slots
+        self.emitted = [[] for _ in range(slots)]
+        self.left = [0] * slots
+        self.steps = 0
+        self.launches = 0
+        self.prefills = 0
+        self.accepted_total = 0
+        self.drafted_total = 0
+        self.prefill_ms = 0.0
+        self.agreements = []
+        self.last_stall = 0.0
+
+    def free_slots(self):
+        return [b for b, r in enumerate(self.requests) if r is None]
+
+    def in_flight(self):
+        return [r for r in self.requests if r is not None]
+
+    def has_work(self):
+        return any(r is not None for r in self.requests)
+
+    def snapshot_meta(self):
+        return {"steps": self.steps, "rids": [r.rid for r in self.in_flight()]}
+
+    def admit(self, req):
+        if self.fault_hook is not None:
+            self.fault_hook(self.replica_id, self.steps + 1, "admit", (req.rid,))
+        b = self.free_slots()[0]
+        self.requests[b] = req
+        self.emitted[b] = [req.rid * 1000]
+        self.left[b] = req.gen
+        self.prefills += 1
+
+    def step(self):
+        step_no = self.steps + 1
+        self.last_stall = 0.0
+        if self.fault_hook is not None:
+            rids = tuple(r.rid for r in self.in_flight())
+            stall = float(self.fault_hook(self.replica_id, step_no, "launch", rids) or 0.0)
+            if self.launch_timeout is not None and stall >= self.launch_timeout:
+                raise TransientLaunchError(f"launch exceeded the {self.launch_timeout}s timeout")
+            self.last_stall = stall
+        self.steps = step_no
+        self.launches += 1
+        done = []
+        for b, req in enumerate(self.requests):
+            if req is None:
+                continue
+            self.emitted[b].append(req.rid * 1000 + len(self.emitted[b]))
+            self.accepted_total += 1
+            self.drafted_total += 1
+            self.left[b] -= 1
+            if self.left[b] <= 0:
+                done.append(Result(rid=req.rid, tokens=list(self.emitted[b]),
+                                   replica=self.replica_id))
+                self.requests[b] = None
+                self.emitted[b] = []
+        return done
+
+
+def _expected_tokens(rid, gen):
+    return [rid * 1000 + i for i in range(gen + 1)]
+
+
+def _run_fake(specs, cfg, *, n_req=4, gen=5, detector=None, slots=1):
+    inj = FaultInjector(parse_faults(specs)) if specs else None
+    reqs = [Request(rid=i, prompt=[i], gen=gen) for i in range(n_req)]
+    fabric = ServeFabric(
+        lambda w, level, params, shrunk: FakeReplica(
+            w, slots=slots, fault_hook=inj.check if inj else None,
+            launch_timeout=cfg.launch_timeout,
+        ),
+        reqs, cfg, detector=detector,
+    )
+    return fabric.run(), fabric.stats, reqs
+
+
+def test_fake_fabric_serves_exactly_once_without_faults():
+    results, stats, reqs = _run_fake("", FabricConfig(n_replicas=2))
+    assert set(results) == {r.rid for r in reqs}
+    for r in reqs:
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+
+
+def test_fake_fabric_crash_requeues_in_flight_exactly_once():
+    results, stats, reqs = _run_fake(
+        "crash@step=3", FabricConfig(n_replicas=1, rejoin_after=1), n_req=3
+    )
+    assert stats["crashes"] == 1 and stats["rejoins"] == 1
+    assert stats["rewarm_prefills"] >= 1  # the in-flight prompt was replayed
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+    for r in reqs:  # discarded partial buffer regenerated identically
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+
+
+def test_fake_fabric_transient_backoff_then_escalation():
+    """4 consecutive transient failures at the same launch: 3 retries with
+    exponential cooldowns (1, 2, 4 rounds), then escalation to a crash."""
+    results, stats, reqs = _run_fake(
+        "launch@step=2:times=4",
+        FabricConfig(n_replicas=1, max_launch_retries=3, backoff_base=1, backoff_cap=8),
+        n_req=2,
+    )
+    assert stats["transient_failures"] == 4
+    assert stats["backoff_rounds"] == 1 + 2 + 4
+    assert stats["crashes"] == 1 and stats["rejoins"] == 1
+    assert stats["dropped"] == 0
+    for r in reqs:
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+
+
+def test_fake_fabric_poisoned_request_rejected_not_crash_looped():
+    results, stats, reqs = _run_fake(
+        "poison@rid=1", FabricConfig(n_replicas=1, request_retry_budget=2), n_req=3
+    )
+    assert stats["poisoned"] == 1 and stats["crashes"] == 0
+    bad = results[1]
+    assert bad.error is not None and bad.tokens == [] and bad.retries == 3
+    for r in reqs:
+        if r.rid != 1:
+            assert results[r.rid].error is None
+            assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+    assert stats["dropped"] == 0
+
+
+def test_fake_fabric_timeout_stall_fails_fast_and_recovers():
+    results, stats, reqs = _run_fake(
+        "stall@step=2:secs=60:times=1",
+        FabricConfig(n_replicas=1, launch_timeout=30.0),
+        n_req=2,
+    )
+    assert stats["timeouts"] == 1 and stats["transient_failures"] == 1
+    assert stats["crashes"] == 0 and stats["dropped"] == 0
+    for r in reqs:
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+
+
+def test_fake_fabric_persistent_straggler_excluded_other_replica_drains():
+    det = StragglerDetector(n_workers=2, alpha=0.7, threshold=1.5, patience=2, warmup=1)
+    results, stats, reqs = _run_fake(
+        "stall@secs=9:times=0:replica=1",
+        FabricConfig(n_replicas=2, max_degrade_level=0, synthetic_step_times=True),
+        n_req=6, detector=det,
+    )
+    assert stats["excluded"] == 1
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+    for r in reqs:
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+    assert all(results[r.rid].replica == 0 for r in reqs if results[r.rid].replica >= 0)
+
+
+def test_fake_fabric_capacity_floor_resurrects_retired_replica():
+    """All replicas retired with work still queued: the fabric must
+    resurrect one at the ladder bottom rather than deadlock."""
+    results, stats, reqs = _run_fake(
+        "crash@step=1:times=2", FabricConfig(n_replicas=1, max_rejoins=0), n_req=2
+    )
+    assert stats["crashes"] == 2 and stats["retired"] == 2
+    assert stats["dropped"] == 0
+    for r in reqs:
+        assert results[r.rid].tokens == _expected_tokens(r.rid, r.gen)
+
+
+def test_fake_fabric_rejects_duplicate_request_ids():
+    with pytest.raises(ValueError):
+        ServeFabric(
+            lambda *a: FakeReplica(0),
+            [Request(rid=1, prompt=[], gen=1), Request(rid=1, prompt=[], gen=1)],
+            FabricConfig(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on the real decode plane: byte-identity under faults
+# ---------------------------------------------------------------------------
+
+GEN = 6
+WIDTH = 3  # speculative width; also the node count of the 2-branch test tree
+
+
+@pytest.fixture(scope="module")
+def env():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, spec_tokens=WIDTH
+    )
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=(6, 9)[i % 2]).astype(np.int32),
+            gen=GEN,
+        )
+        for i in range(4)
+    ]
+    max_len = 9 + GEN + WIDTH
+    return {"cfg": cfg, "mesh": mesh, "params": params,
+            "requests": requests, "max_len": max_len}
+
+
+def _run_real(env, specs, *, n_replicas=1, tree=None, detector=None,
+              ckpt=None, checkpoint_every=0, fab_kwargs=None):
+    import jax
+
+    from repro.launch.serve import degrade_ladder, make_replica_factory
+    from repro.parallel.sharding import param_shardings
+
+    inj = FaultInjector(parse_faults(specs)) if specs else None
+    ladder = degrade_ladder(tree, WIDTH)
+    make = make_replica_factory(
+        env["cfg"], env["mesh"], 2, env["max_len"], env["params"], ladder,
+        fault_hook=inj.check if inj else None, launch_timeout=30.0, ckpt=ckpt,
+    )
+
+    def restore_params(mgr):
+        abs_p = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), env["params"]
+        )
+        p, _, _, _ = mgr.restore(
+            abs_p, {}, param_shardings=param_shardings(abs_p, env["mesh"])
+        )
+        return p
+
+    fabric = ServeFabric(
+        make, list(env["requests"]),
+        FabricConfig(
+            n_replicas=n_replicas, launch_timeout=30.0,
+            checkpoint_every=checkpoint_every,
+            max_degrade_level=len(ladder) - 1, synthetic_step_times=True,
+            **(fab_kwargs or {}),
+        ),
+        ckpt=ckpt, restore_params=restore_params if ckpt else None,
+        params=env["params"], detector=detector,
+    )
+    return fabric.run(), fabric.stats
+
+
+@pytest.fixture(scope="module")
+def oracle(env):
+    """Per-request sequential greedy streams — the reference every faulted
+    run must reproduce byte-for-byte."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(env["cfg"], spec_tokens=1)
+    model = Model(cfg)
+    dec = jax.jit(
+        lambda p, c, t, l, a: model.decode_tokens(p, c, t, l, a)
+    )
+    out = {}
+    for req in env["requests"]:
+        cache = model.init_cache(1, env["max_len"])
+        lg, cache = jax.jit(model.prefill)(
+            env["params"], jnp.asarray(req.prompt)[None], cache
+        )
+        tok, length = int(jnp.argmax(lg[0])), len(req.prompt)
+        toks = [tok]
+        for _ in range(req.gen):
+            logits, cache = dec(
+                env["params"], cache, jnp.asarray([[tok]], jnp.int32),
+                jnp.asarray([length], jnp.int32), jnp.zeros((1,), jnp.int32),
+            )
+            tok = int(jnp.argmax(logits[0, 0]))
+            toks.append(tok)
+            length += 1
+        out[req.rid] = toks
+    return out
+
+
+def _assert_byte_identical(results, oracle, env, *, skip=()):
+    for req in env["requests"]:
+        if req.rid in skip:
+            continue
+        res = results[req.rid]
+        assert res.error is None, f"rid {req.rid} errored: {res.error}"
+        assert res.tokens == oracle[req.rid], (
+            f"rid {req.rid}: faulted stream {res.tokens} != "
+            f"fault-free {oracle[req.rid]}"
+        )
+
+
+def test_fabric_matches_sequential_greedy(env, oracle):
+    """Fault-free fabric == the sequential greedy oracle per request: the
+    byte-identity baseline everything below leans on."""
+    results, stats = _run_real(env, "")
+    assert set(results) == set(oracle)
+    _assert_byte_identical(results, oracle, env)
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+
+
+def test_crash_mid_decode_recovers_byte_identical(env, oracle, tmp_path):
+    """Replica crashes mid-decode with requests in flight; the rejoining
+    replica restores params from the checkpoint and re-warms by replaying
+    admission prefill — every stream still byte-identical, none dropped."""
+    from repro.checkpoint import CheckpointManager
+
+    ckpt = CheckpointManager(tmp_path / "fab", keep=2)
+    results, stats = _run_real(
+        env, "crash@step=4", ckpt=ckpt, checkpoint_every=2
+    )
+    assert stats["crashes"] == 1 and stats["rejoins"] == 1
+    assert stats["rewarm_prefills"] >= 1
+    assert stats["restores"] >= 1  # params came back through the checkpoint
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+    _assert_byte_identical(results, oracle, env)
+    # the snapshot carries the admission ledger a rejoin replays from
+    import jax
+
+    abs_p = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), env["params"]
+    )
+    _, _, _, extra = ckpt.restore(abs_p, {})
+    assert "ledger" in extra and "round" in extra
+
+
+def test_transient_failures_and_timeout_byte_identical(env, oracle):
+    """Transient launch failures retry with backoff; a stall past the launch
+    timeout fails fast pre-launch.  Token streams must not move."""
+    results, stats = _run_real(
+        env, "launch@step=2:times=2,stall@step=5:secs=60:times=1"
+    )
+    assert stats["transient_failures"] == 3 and stats["timeouts"] == 1
+    assert stats["backoff_rounds"] >= 2 and stats["crashes"] == 0
+    assert stats["dropped"] == 0
+    _assert_byte_identical(results, oracle, env)
+
+
+def test_poisoned_admission_rejected_others_unharmed(env, oracle):
+    rid = env["requests"][1].rid
+    results, stats = _run_real(env, f"poison@rid={rid}")
+    assert stats["poisoned"] == 1 and stats["crashes"] == 0
+    assert results[rid].error is not None and results[rid].tokens == []
+    assert stats["dropped"] == 0
+    _assert_byte_identical(results, oracle, env, skip=(rid,))
+
+
+def test_oversized_prompt_rejected_with_error_result(env, oracle):
+    """A prompt that can never finish within the slot budget is rejected at
+    admission (error result), and the rest of the queue is unaffected."""
+    big = Request(
+        rid=99,
+        prompt=np.zeros((env["max_len"],), np.int32),
+        gen=GEN,
+    )
+    env2 = dict(env, requests=env["requests"] + [big])
+    results, stats = _run_real(env2, "")
+    assert stats["rejected"] == 1 and stats["dropped"] == 0
+    assert results[99].error is not None and "budget" in results[99].error
+    _assert_byte_identical(results, oracle, env)
+
+
+def test_straggler_descends_speculation_ladder_byte_identical(env, oracle):
+    """A persistently stalled replica walks tree -> chain -> width 1 (each
+    level a full rebuild + re-warm of its in-flight work) before any
+    exclusion; outputs stay byte-identical throughout."""
+    from repro.core.plans import TreePlan
+
+    tree = TreePlan.from_branching([2]).validate()  # 3 nodes, spine len 2
+    assert tree.num_nodes == WIDTH
+    det = StragglerDetector(n_workers=2, alpha=0.7, threshold=1.5, patience=4, warmup=1)
+    results, stats = _run_real(
+        env, "stall@secs=9:times=0:replica=1",
+        n_replicas=2, tree=tree, detector=det,
+    )
+    assert len(stats["degradations"]) >= 1
+    assert stats["degradations"][0] == (1, 0, 1)  # tree -> chain first
+    for w, frm, to in stats["degradations"]:
+        assert w == 1 and to == frm + 1  # one rung at a time, stalled replica only
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+    _assert_byte_identical(results, oracle, env)
+
+
+# ---------------------------------------------------------------------------
+# 8-device: crash flagged as device loss -> elastic re-shard on rejoin
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_crash_reshard_8dev_byte_identical():
+    """On a (2, 4) mesh, a crash flagged ``shrink=1`` makes the rejoining
+    replica rebuild through reshard_serve_after_failure onto the surviving
+    (1, 4) mesh, restore params from the checkpoint, and re-warm — the
+    sharded, re-sharded, faulted run emits byte-identical streams."""
+    out = run_subprocess_devices(
+        """
+import dataclasses, tempfile
+import numpy as np
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import degrade_ladder, make_replica_factory
+from repro.models.model import Model
+from repro.parallel.sharding import param_shardings
+from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+from repro.runtime.faults import FaultInjector, parse_faults
+
+GEN, T = 4, 2
+cfg = dataclasses.replace(
+    get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, spec_tokens=T
+)
+mesh = make_host_mesh(2, 4)
+params = Model(cfg).init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+reqs = lambda: [
+    Request(rid=i, prompt=rng_prompts[i], gen=GEN) for i in range(3)
+]
+rng_prompts = [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32) for _ in range(3)]
+max_len = 6 + GEN + T
+ladder = degrade_ladder(None, T)
+
+def run(specs, ckpt, checkpoint_every):
+    inj = FaultInjector(parse_faults(specs)) if specs else None
+    make = make_replica_factory(
+        cfg, mesh, 2, max_len, params, ladder,
+        fault_hook=inj.check if inj else None, launch_timeout=30.0,
+        ckpt=ckpt, shrink_to=(4, 4),
+    )
+    def restore_params(mgr):
+        abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        p, _, _, _ = mgr.restore(abs_p, {}, param_shardings=param_shardings(abs_p, mesh))
+        return p
+    fabric = ServeFabric(
+        make, reqs(),
+        FabricConfig(n_replicas=1, launch_timeout=30.0,
+                     checkpoint_every=checkpoint_every,
+                     max_degrade_level=len(ladder) - 1,
+                     synthetic_step_times=True),
+        ckpt=ckpt, restore_params=restore_params if ckpt else None, params=params,
+    )
+    return fabric.run(), fabric.stats
+
+clean, _ = run("", None, 0)
+with tempfile.TemporaryDirectory() as d:
+    ckpt = CheckpointManager(d, keep=2)
+    faulted, stats = run("crash@step=3:shrink=1", ckpt, 2)
+assert stats["crashes"] == 1 and stats["rejoins"] == 1, stats
+assert stats["restores"] >= 1 and stats["rewarm_prefills"] >= 1, stats
+assert stats["dropped"] == 0 and stats["duplicates"] == 0, stats
+for rid in clean:
+    assert clean[rid].error is None and faulted[rid].error is None
+    assert faulted[rid].tokens == clean[rid].tokens, (
+        rid, faulted[rid].tokens, clean[rid].tokens)
+print("RESHARD_FABRIC_OK", len(clean))
+""",
+        n_devices=8,
+    )
+    assert "RESHARD_FABRIC_OK 3" in out

@@ -120,3 +120,106 @@ def test_ngram_tree_siblings_hedge_with_distinct_followers():
     # recent first -> [2, 9], third slot falls back to the parent token
     out = draft_tree_ngram([5, 9, 5, 2], 5, tree)
     assert out == [5, 2, 9, 5]
+
+
+# ---------------------------------------------------------------------------
+# serve-loop error paths: admission edge cases on a real replica
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def replica_env():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, spec_tokens=2
+    )
+    return {
+        "cfg": cfg,
+        "mesh": make_host_mesh(1, 1),
+        "params": Model(cfg).init(jax.random.PRNGKey(0)),
+        "max_len": 14,  # prompt 6-8 + gen 4 + spec 2
+    }
+
+
+def _mk_replica(env, slots):
+    from repro.launch.serve import ServeReplica
+
+    return ServeReplica(
+        env["cfg"], env["mesh"], slots, env["max_len"], env["params"]
+    )
+
+
+def _req(rid, length, gen=4):
+    from repro.runtime.fabric import Request
+
+    rng = np.random.default_rng(rid)
+    return Request(
+        rid=rid,
+        prompt=rng.integers(0, 256, size=length).astype(np.int32),
+        gen=gen,
+    )
+
+
+def test_out_of_budget_prompt_rejected_before_any_launch(replica_env):
+    """A prompt that cannot finish within the slot budget must be rejected
+    at admission — no prefill, no slot consumed — and the replica must keep
+    serving valid requests afterwards."""
+    from repro.runtime.faults import RequestRejected
+
+    rep = _mk_replica(replica_env, slots=2)
+    with pytest.raises(RequestRejected) as ei:
+        rep.admit(_req(0, length=replica_env["max_len"]))
+    assert ei.value.rid == 0 and "budget" in str(ei.value)
+    assert rep.prefills == 0 and rep.free_slots() == [0, 1]
+    rep.admit(_req(1, length=6))
+    done = []
+    while rep.has_work():
+        done.extend(rep.step())
+    assert [r.rid for r in done] == [1]
+    assert len(done[0].tokens) == 1 + 4  # prefill token + gen
+
+
+def test_admission_into_full_slot_pool(replica_env):
+    """With every slot occupied, admission must fail loudly (the supervisor
+    only admits into free slots); once a request completes, the freed slot
+    accepts the queued prompt and both streams come out whole."""
+    rep = _mk_replica(replica_env, slots=2)
+    rep.admit(_req(10, length=6, gen=2))
+    rep.admit(_req(11, length=8, gen=4))
+    assert rep.free_slots() == []
+    with pytest.raises(RuntimeError, match="no free slot"):
+        rep.admit(_req(12, length=6))
+    done = []
+    while not rep.free_slots():
+        done.extend(rep.step())
+    assert [r.rid for r in done] == [10]  # the short request freed its slot
+    rep.admit(_req(12, length=6, gen=3))
+    while rep.has_work():
+        done.extend(rep.step())
+    by_rid = {r.rid: r for r in done}
+    assert set(by_rid) == {10, 11, 12}
+    for rid, gen in ((10, 2), (11, 4), (12, 3)):
+        assert len(by_rid[rid].tokens) == 1 + gen
+
+
+def test_queue_exhaustion_with_idle_slots_terminates(replica_env):
+    """Fewer requests than slots: the fabric must drain and stop cleanly
+    (no spin waiting for prompts that will never arrive), with every
+    request answered exactly once."""
+    from repro.runtime.fabric import FabricConfig, ServeFabric
+
+    fabric = ServeFabric(
+        lambda w, level, params, shrunk: _mk_replica(replica_env, slots=4),
+        [_req(20, length=6), _req(21, length=8)],
+        FabricConfig(n_replicas=1, max_rounds=50),
+    )
+    results = fabric.run()
+    assert set(results) == {20, 21}
+    assert all(r.error is None for r in results.values())
+    assert fabric.stats["dropped"] == 0 and fabric.stats["duplicates"] == 0
+    assert len(results[20].tokens) == len(results[21].tokens) == 1 + 4
