@@ -34,6 +34,14 @@ Three sections:
   byte-identical to the fault-free run, and the recovery ledger (re-warm
   prefills, checkpoint restores, ladder steps) recorded as exact structural
   counts.
+* **paged** (PR 7): the paged KV plane.  Block-table indirection on the
+  scalar-prefetch path is bitwise-invisible at the identity table (chain
+  parity at page sizes 8 and 16, rolling-window layers across the wrap
+  point), a trie-resident prompt admits with ZERO KV rows copied (the
+  block table binds the shared pages by pointer), and the branchy tree
+  commit is fused into the next launch as (dst, src) control words — zero
+  dedicated compaction launches.  Streams verified against sequential
+  greedy.
 * **sharded** (PR 4): the distributed decode plane on a forced 8-device CPU
   host mesh (spawned subprocess: the device count must be set before jax
   initializes).  With the cache-carried plan sliced per shard
@@ -542,6 +550,154 @@ def _bench_fabric(cfg) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# paged KV plane: block-table indirection, zero-copy admission, fused commit
+# ---------------------------------------------------------------------------
+
+
+def _bench_paged(cfg) -> dict:
+    """The paged KV plane vs the contiguous plane it replaces.
+
+    Structural claims: (1) the block-table indirection is INVISIBLE at the
+    identity table — the paged chain path reproduces contiguous
+    ``decode_tokens`` bitwise at page sizes 8 and 16, and rolling-window
+    layers (which stay modulo-addressed under ``cfg.paged``) cross the wrap
+    point bitwise; (2) a trie-resident prompt admits with ZERO KV rows
+    copied — the block table binds the shared pages by pointer, so the
+    admission cost of a repeated system prompt is control words, not KV
+    bytes; (3) the branchy tree commit is fused into the next launch as
+    (dst, src) control words — zero dedicated compaction launches (the
+    contiguous plane pays one gather/scatter launch per verify round).
+    Every serve stream is verified against the sequential greedy oracle.
+    """
+    from repro.core.plans import TreePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica
+    from repro.models.transformer import identity_page_table
+    from repro.runtime.fabric import Request
+
+    out = {}
+
+    # (1a) chain parity: two serve-shaped launches (initial + rollback-shaped
+    # relaunch) through paginate_cache + the identity table, bitwise
+    Tn = SPEC_T
+    B, S, max_len = 4, 16, 32
+    base_c = dataclasses.replace(cfg, decode_plane=True, spec_tokens=Tn)
+    m = Model(base_c)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache0 = m.init_cache(B, max_len)
+    _, cache0 = jax.jit(m.prefill)(params, prompts, cache0)
+    draft = jax.random.randint(jax.random.PRNGKey(2), (B, 2, Tn), 0, cfg.vocab_size)
+    dt_c = jax.jit(m.decode_tokens)
+    for ps in (8, 16):
+        cp = dataclasses.replace(base_c, paged=True, page_size=ps)
+        pm = Model(cp)
+        pcache = pm.paginate_cache(cache0, max_len)
+        pages = identity_page_table(cp, B, max_len)
+        dt_p = jax.jit(pm.decode_tokens)
+        cache, ok = cache0, 1
+        for i in range(2):
+            lens = jnp.full((B,), S + i * Tn, jnp.int32)
+            acc = jnp.full((B,), 0 if i == 0 else Tn - 1, jnp.int32)
+            lg_c, cache = dt_c(params, cache, draft[:, i], lens, acc)
+            lg_p, pcache = dt_p(params, pcache, draft[:, i], lens, acc, pages=pages)
+            ok &= int(np.array_equal(np.asarray(lg_c), np.asarray(lg_p)))
+        out[f"chain_bitwise_ps{ps}"] = ok
+
+    # (1b) rolling-window layers stay modulo under cfg.paged: three launches
+    # crossing the wrap point at W=8 must stay bitwise-equal
+    W, Ts = 8, 2
+    cl = dataclasses.replace(
+        base_c, attention_kind="local", local_window=W, spec_tokens=Ts, page_size=8
+    )
+    ml = Model(cl)
+    params_l = ml.init(jax.random.PRNGKey(0))
+    Bl, Sl, ml_len = 2, 6, 16
+    pr = jax.random.randint(jax.random.PRNGKey(1), (Bl, Sl), 0, cfg.vocab_size)
+    cch = ml.init_cache(Bl, ml_len)
+    _, cch = jax.jit(ml.prefill)(params_l, pr, cch)
+    pml = Model(dataclasses.replace(cl, paged=True))
+    pcch = pml.paginate_cache(cch, ml_len)
+    pages_l = identity_page_table(pml.cfg, Bl, ml_len)
+    dl_c, dl_p = jax.jit(ml.decode_tokens), jax.jit(pml.decode_tokens)
+    toks_l = jax.random.randint(jax.random.PRNGKey(2), (Bl, 3, Ts), 0, cfg.vocab_size)
+    okr = 1
+    for i in range(3):  # positions 6..11 cross the wrap at W=8
+        lens = jnp.full((Bl,), Sl + i * Ts, jnp.int32)
+        acc = jnp.full((Bl,), 0 if i == 0 else Ts - 1, jnp.int32)
+        lg_c, cch = dl_c(params_l, cch, toks_l[:, i], lens, acc)
+        lg_p, pcch = dl_p(params_l, pcch, toks_l[:, i], lens, acc, pages=pages_l)
+        okr &= int(np.array_equal(np.asarray(lg_c), np.asarray(lg_p)))
+    out["rolling_wrap_bitwise"] = okr
+
+    # (2)+(3) serve: two identical prompts through a branchy tree replica —
+    # the second admission must bind every full prompt page from the prefix
+    # trie (zero KV rows copied) and no commit launch may ever run
+    tree = TreePlan.from_branching([2, 1]).validate()
+    gen, Sp, ps = 5, 8, 4
+    cs = dataclasses.replace(
+        cfg, decode_plane=True, spec_tokens=tree.num_nodes, paged=True, page_size=ps
+    )
+    max_len_s = Sp + gen + tree.num_nodes
+    mesh = make_host_mesh(1, 1)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=Sp
+    ).astype(np.int32)
+    rep = ServeReplica(cs, mesh, 2, max_len_s, params, tree=tree)
+    rep.admit(Request(rid=0, prompt=prompt, gen=gen))
+    cold_rows = rep.admit_copy_rows
+    rep.admit(Request(rid=1, prompt=prompt.copy(), gen=gen))
+    hit_rows = rep.admit_copy_rows - cold_rows
+
+    # KV bytes behind one logical row: every paged (pk, pv) pool pays
+    # nkv * hd * itemsize per row, summed over layers
+    bytes_per_row = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(rep.cache)[0]:
+        if getattr(path[-1], "key", None) in ("pk", "pv"):
+            bytes_per_row += int(
+                leaf.shape[-2] * leaf.shape[-1] * leaf.dtype.itemsize
+            )
+
+    done = {}
+    while rep.has_work():
+        for r in rep.step():
+            done[r.rid] = r.tokens
+
+    # sequential greedy oracle for the served streams
+    c1 = dataclasses.replace(cs, spec_tokens=1, paged=False)
+    m1 = Model(c1)
+    cache1 = m1.init_cache(1, max_len_s)
+    lg1, cache1 = jax.jit(m1.prefill)(params, jnp.asarray(prompt)[None], cache1)
+    tok = int(jnp.argmax(lg1[0]))
+    oracle = [tok]
+    dec1 = jax.jit(m1.decode_step)
+    for i in range(gen):
+        lg1, cache1 = dec1(
+            params, cache1, jnp.asarray([tok], jnp.int32), jnp.int32(Sp + i)
+        )
+        tok = int(jnp.argmax(lg1[0]))
+        oracle.append(tok)
+
+    st = rep.paged_stats()
+    out.update({
+        "page_size": ps,
+        "prompt_pages": Sp // ps,
+        "pages_shared_trie_hit": rep.pages_shared_total,
+        "rows_admission_copy_cold": cold_rows,
+        "rows_admission_copy_trie_hit": hit_rows,
+        "bytes_admission_copy_cold": cold_rows * bytes_per_row,
+        "bytes_admission_copy_trie_hit": hit_rows * bytes_per_row,
+        "tree_commit_launches": int(rep._commit is not None),
+        "streams_match_sequential": int(
+            done[0] == oracle and done[1] == oracle
+        ),
+        "trie_nodes": st["trie_nodes"],
+        "pool_occupancy_at_drain": st["occupancy"],
+    })
+    return out
+
+
+# ---------------------------------------------------------------------------
 # distributed decode plane (forced 8-device host mesh, subprocess)
 # ---------------------------------------------------------------------------
 
@@ -671,6 +827,7 @@ def run() -> dict:
         "tree": _bench_tree(cfg),
         "rolling": _bench_rolling(cfg),
         "fabric": _bench_fabric(cfg),
+        "paged": _bench_paged(cfg),
     }
     if sharded is not None:
         out["sharded"] = sharded
@@ -766,6 +923,43 @@ def main() -> None:
         f"ladder {fb['degrade_ladder_taken']}; "
         f"dropped {fb['requests_dropped_under_faults']}, duplicates {fb['duplicate_results']}, "
         f"streams byte-identical: {bool(fb['streams_byte_identical'])}"
+    )
+
+    pg = results["paged"]
+    assert pg["chain_bitwise_ps8"] == 1 and pg["chain_bitwise_ps16"] == 1, (
+        "the paged chain path must be bitwise-equal to contiguous "
+        "decode_tokens at page sizes 8 and 16", pg,
+    )
+    assert pg["rolling_wrap_bitwise"] == 1, (
+        "rolling-window layers must stay bitwise across the wrap point "
+        "under cfg.paged (they remain modulo-addressed)", pg,
+    )
+    assert pg["pages_shared_trie_hit"] == pg["prompt_pages"] > 0, (
+        "the repeated prompt must bind every full prompt page from the "
+        "prefix trie", pg,
+    )
+    assert pg["bytes_admission_copy_trie_hit"] == 0, (
+        "a trie-resident admission must copy ZERO KV bytes — the block "
+        "table binds shared pages by pointer", pg,
+    )
+    assert pg["bytes_admission_copy_cold"] > 0, (
+        "the cold admission should still pay the prompt KV copy "
+        "(otherwise the zero-copy claim is vacuous)", pg,
+    )
+    assert pg["tree_commit_launches"] == 0, (
+        "the paged tree commit is fused into the next launch — no "
+        "dedicated compaction launch may exist", pg,
+    )
+    assert pg["streams_match_sequential"] == 1, (
+        "paged tree-draft streams must equal the sequential greedy oracle", pg,
+    )
+    print(
+        f"# paged KV plane (page size {pg['page_size']}): chain bitwise at ps 8/16, "
+        f"rolling wrap bitwise; trie-hit admission copies "
+        f"{pg['bytes_admission_copy_cold']/1e3:.1f} -> "
+        f"{pg['bytes_admission_copy_trie_hit']/1e3:.1f} KB "
+        f"({pg['pages_shared_trie_hit']}/{pg['prompt_pages']} prompt pages bound "
+        f"by pointer), tree-commit launches: {pg['tree_commit_launches']}"
     )
 
     if "sharded" not in results:

@@ -22,6 +22,23 @@ import jax
 import numpy as np
 
 
+def _jsonify(obj: Any) -> Any:
+    """Coerce numpy scalars/arrays hiding in ``extra`` to JSON-pure python.
+
+    Serve-side ledgers (slot lengths, page tables, trie snapshots) are built
+    from numpy state; ``json.dump`` rejects ``np.int32`` et al., and a torn
+    manifest would break the atomic-commit contract — normalize up front."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonify(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path) for path, _ in leaves]
@@ -73,7 +90,7 @@ class CheckpointManager:
             "step": step,
             "params": save_tree(tmp, params, prefix="params"),
             "opt_state": save_tree(tmp, opt_state, prefix="opt"),
-            "extra": extra or {},
+            "extra": _jsonify(extra or {}),
         }
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)

@@ -68,6 +68,15 @@ class ModelConfig:
     # models/model.decode_tokens and launch/serve.py's continuous-batching
     # loop.  1 = plain one-token-per-launch decode (PR 2 semantics).
     spec_tokens: int = 1
+    # Paged KV plane: full-attention KV lives in a shared pool of fixed-size
+    # pages addressed through a per-slot block table (a host control word on
+    # the same scalar-prefetch path as DecodePlan/TreePlan).  Admission becomes
+    # page assignment (+ prefix-trie sharing) instead of a stripe copy, and
+    # tree commit becomes row moves inside the boundary page fused into the
+    # next decode launch.  Rolling (modulo-addressed) local-attention caches
+    # stay unpaged — their byte bound is the window, not max_len.
+    paged: bool = False
+    page_size: int = 16
 
     # -- recurrent (RG-LRU) ----------------------------------------------------
     lru_width: int = 0

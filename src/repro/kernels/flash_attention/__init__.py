@@ -1,5 +1,6 @@
 from repro.kernels.flash_attention.decode import (  # noqa: F401
     flash_decode,
+    flash_decode_paged,
     flash_decode_window,
 )
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

@@ -306,6 +306,105 @@ def flash_decode_window_pallas(
 
 
 # ---------------------------------------------------------------------------
+# paged variant: block-table indirection on the scalar-prefetch path
+# ---------------------------------------------------------------------------
+
+
+def _flash_decode_paged_kernel(
+    len_ref, anc_ref, base_ref, tbl_ref,
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bkv: int, n_kv: int, scale: float, T: int,
+):
+    # the block table steers only the index_map (which physical page each
+    # logical KV block DMAs from); inside the block the math is the linear
+    # kernel's, byte for byte — kv_pos stays LOGICAL, so the length clamp and
+    # ancestor mask are untouched by the physical layout
+    _flash_decode_kernel(
+        len_ref, anc_ref, base_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+        acc_ref, bkv=bkv, n_kv=n_kv, scale=scale, T=T,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def flash_decode_paged_pallas(
+    q: jnp.ndarray,        # (B, T, nq, hd)
+    k: jnp.ndarray,        # (P, nkv, page_size, hd) physical page pool
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B*T,) int32 valid prefix length per token, >= 1
+    table: jnp.ndarray,    # (B*max_pages,) int32 flattened block tables
+    anc_words: Optional[jnp.ndarray] = None,  # (T,) int32 ancestor bitmasks
+    base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    *,
+    page_size: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged flash-decode: one more prefetched control word — the block table.
+
+    The grid walks LOGICAL pages (``max_pages`` per slot); the KV index_map
+    composes the existing per-token length clamp with a block-table lookup
+    (``page = table[b, ki]``), so each DMA pulls the physical page backing
+    that logical block while the in-kernel mask math (length clamp, ancestor
+    words, online softmax) is identical to :func:`flash_decode_pallas` at
+    ``bkv = page_size``.  With an identity table the chain default is
+    therefore bitwise-equal to the contiguous kernel — the same contract the
+    all-ones ancestor words uphold for trees vs chains.
+    """
+    B, T, nq, hd = q.shape
+    nkv, ps = k.shape[1], k.shape[2]
+    assert ps == page_size
+    group = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+    max_pages = table.shape[0] // B
+    grid = (B, T, nq, max_pages)
+    if anc_words is None:
+        anc_words = jnp.full((T,), -1, jnp.int32)
+    if base is None:
+        base = jnp.zeros((B,), jnp.int32)
+
+    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref):
+        # length clamp FIRST (logical blocks past the token's prefix re-map
+        # to its last valid block; compute skipped), THEN the block-table
+        # indirection to the physical page.  Unallocated entries (-1) can
+        # only be reached beyond the clamp, so max() keeps the index legal.
+        last = (len_ref[b * T + t] - 1) // ps
+        phys = tbl_ref[b * max_pages + jnp.minimum(ki, last)]
+        return (jnp.maximum(phys, 0), h // group, 0, 0)
+
+    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref):
+        return (b, t, h, 0)
+
+    kern = functools.partial(
+        _flash_decode_paged_kernel, bkv=ps, n_kv=max_pages, scale=scale, T=T
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd), qo_map),
+                pl.BlockSpec((1, 1, ps, hd), kv_map),
+                pl.BlockSpec((1, 1, ps, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd), qo_map),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, T, nq, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        lengths, anc_words.astype(jnp.int32), base.astype(jnp.int32),
+        table.reshape(-1).astype(jnp.int32), q, k, v,
+    )
+
+
+# ---------------------------------------------------------------------------
 # model-layout wrappers
 # ---------------------------------------------------------------------------
 
@@ -394,4 +493,39 @@ def flash_decode_window(
     positions = (idx[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]).reshape(B * T)
     return flash_decode_window_pallas(
         q, kt, vt, positions, window=window, bkv=bkv_, interpret=it
+    )
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,  # (B, T, nq, hd) — model layout
+    k: jnp.ndarray,  # (R, nkv, hd) flat physical page pool, R = P * page_size
+    v: jnp.ndarray,
+    cache_index: jnp.ndarray,  # scalar | (B,) | (B, T) int32 token position(s)
+    pages: jnp.ndarray,        # (B, max_pages) int32 block tables (-1 = unallocated)
+    *,
+    page_size: int,
+    ancestors: Optional[jnp.ndarray] = None,  # (T,) int32 packed ancestor words
+    base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Paged multi-token attention: :func:`flash_decode` semantics against a
+    flat page pool addressed through per-slot block tables.
+
+    The pool row backing logical position ``pos`` of slot ``b`` is
+    ``pages[b, pos // page_size] * page_size + pos % page_size``; the lookup
+    rides the scalar-prefetch path as one more control word.  With the
+    identity table the chain default is bitwise-equal to
+    :func:`flash_decode` at ``bkv = page_size``.
+    """
+    it = (not on_tpu()) if interpret is None else interpret
+    B, T, nq, hd = q.shape
+    R = k.shape[0]
+    assert R % page_size == 0, "pool rows must be a whole number of pages"
+    P = R // page_size
+    kt = jnp.swapaxes(k.reshape(P, page_size, *k.shape[1:]), 1, 2)
+    vt = jnp.swapaxes(v.reshape(P, page_size, *v.shape[1:]), 1, 2)
+    lengths = _as_length_vector(cache_index, B, T)
+    return flash_decode_paged_pallas(
+        q, kt, vt, lengths, pages.reshape(-1), anc_words=ancestors, base=base,
+        page_size=page_size, interpret=it,
     )

@@ -141,6 +141,30 @@ class ServeReplica:
         self.fault_hook = fault_hook
         self.replica_id = replica_id
         self.launch_timeout = launch_timeout
+        self._branchy = tree is not None and not tree.is_chain()
+
+        # paged KV plane: physical pages + per-slot block tables replace the
+        # contiguous slot stripes; the block table is the control word every
+        # launch prefetches, and admission becomes page assignment + a prefix
+        # trie probe instead of a stripe copy
+        self.paged = bool(cfg.paged)
+        self.page_telemetry = bool(telemetry) and self.paged
+        self.pager = None
+        self.trie = None
+        self._pending_commit = None  # (dst, src) maps fused into the NEXT launch
+        if self.paged:
+            from repro.core.pages import PageTable, PrefixTrie
+            from repro.models.transformer import max_pages_for, num_pages
+
+            self.pager = PageTable(
+                slots, max_pages_for(cfg, max_len),
+                num_pages(cfg, slots, max_len), cfg.page_size,
+            )
+            self.trie = PrefixTrie(cfg.page_size)
+            self.pages_shared_total = 0
+            self.admissions_paged = 0
+            self.admit_copy_rows = 0
+            self.trie_nodes_created = 0
         with mesh:
             bundle = build_spec_serve_step(
                 cfg, mesh, ShapeCell("d", max_len, slots, "decode"),
@@ -158,17 +182,23 @@ class ServeReplica:
                 adm.prefill, adm.one_cache_init, adm.admit,
             )
             self._decode = bundle.jit()
+            # paged tree commit is pointer rewiring fused into the next
+            # launch's (dst, src) control words — no row-compaction launch
             self._commit = (
                 jax.jit(self.model.commit_tree_path, donate_argnums=(0,),
                         out_shardings=self._c_shard)
-                if tree is not None
+                if tree is not None and not self.paged
                 else None
             )
             self._drafter = None
             if drafter == "model" and self.T > 1:
                 # same family, one layer, width-1 launches: the draft model
                 # rides the identical decode plane (and admission path)
-                draft_cfg = dataclasses.replace(cfg, num_layers=1, spec_tokens=1)
+                # the 1-layer draft model keeps its own contiguous cache —
+                # it never shares pages with the target pool
+                draft_cfg = dataclasses.replace(
+                    cfg, num_layers=1, spec_tokens=1, paged=False
+                )
                 draft_model = build_model(draft_cfg, mesh, slots)
                 dp = draft_model.init(jax.random.PRNGKey(drafter_key))
                 dp = jax.device_put(dp, param_shardings(dp, mesh))
@@ -211,12 +241,71 @@ class ServeReplica:
 
     def snapshot_meta(self) -> dict:
         """JSON-serializable slot metadata for the fabric's checkpoint: the
-        admission ledger a rejoining replica replays prefill from."""
-        return {
+        admission ledger a rejoining replica replays prefill from.  Under the
+        paged plane this also snapshots the block table + refcounts and the
+        prefix trie — page allocation is deterministic (lowest free id), so a
+        re-warm replay of the ledger reproduces the snapshot byte-for-byte,
+        and the snapshot itself round-trips through ``PageTable.from_snapshot``
+        / ``PrefixTrie.from_snapshot`` for direct restore."""
+        meta = {
             "steps": int(self.steps),
             "rids": [int(r.rid) for r in self.requests if r is not None],
             "lengths": [int(v) for v in self.lengths],
         }
+        if self.paged:
+            meta["pager"] = self.pager.snapshot()
+            meta["trie"] = self.trie.snapshot()
+        return meta
+
+    def paged_stats(self) -> dict:
+        """Page-pool telemetry: occupancy, sharing, fragmentation."""
+        live = [int(l) for l, a in zip(self.lengths, self.active) if a]
+        return {
+            "occupancy": self.pager.occupancy(),
+            "allocated_pages": self.pager.allocated_pages(),
+            "fragmentation": self.pager.fragmentation(live),
+            "pages_shared_total": int(self.pages_shared_total),
+            "admissions": int(self.admissions_paged),
+            "pages_shared_per_admission": (
+                self.pages_shared_total / max(self.admissions_paged, 1)
+            ),
+            "admit_copy_rows": int(self.admit_copy_rows),
+            "trie_nodes": int(self.trie.nodes),
+        }
+
+    # ------------------------------------------------------------------
+    def _bind_pages(self, b: int, prompt: np.ndarray) -> np.ndarray:
+        """Paged admission = page assignment + trie probe, never a stripe copy.
+
+        Probe the prefix trie for full pages already holding this prompt's KV
+        (``probe`` increfs the matches for us), bind them directly into slot
+        ``b``'s block-table row, allocate private pages for the remainder, and
+        publish the prompt's own full pages for future requests.  Returns the
+        ``(max_len,)`` physical-row vector for the admission scatter: shared
+        positions (and positions past the prompt) carry the out-of-range
+        sentinel so their writes drop — a trie-resident prompt admits with
+        ZERO KV rows copied.  Generation writes land at positions >=
+        ``len(prompt)``, which shared pages (full prompt pages only) never
+        cover, so sharing needs no copy-on-write on this path."""
+        ps = self.cfg.page_size
+        pager, trie = self.pager, self.trie
+        evict = lambda: trie.evict_one(pager)
+        L = len(prompt)
+        shared = trie.probe(prompt, pager)
+        for i, page in enumerate(shared):
+            pager.table[b, i] = page  # probe already took our reference
+        pager.ensure(b, max(L, 1), evict=evict)
+        self.trie_nodes_created += trie.insert(
+            prompt, [int(pager.table[b, i]) for i in range(L // ps)], pager
+        )
+        sentinel = pager.num_pages * ps  # positive OOB: scatter drops, never wraps
+        rows = np.full((self.max_len,), sentinel, np.int32)
+        for pos in range(len(shared) * ps, L):
+            rows[pos] = int(pager.table[b, pos // ps]) * ps + pos % ps
+        self.pages_shared_total += len(shared)
+        self.admit_copy_rows += max(L - len(shared) * ps, 0)
+        self.admissions_paged += 1
+        return rows
 
     # ------------------------------------------------------------------
     def admit(self, req: Request) -> int:
@@ -240,7 +329,8 @@ class ServeReplica:
             self.fault_hook(self.replica_id, self.steps + 1, "admit", (req.rid,))
         b = free[0]
         t0 = time.perf_counter()
-        prompt = jnp.asarray(np.asarray(req.prompt, np.int32))
+        prompt_np = np.asarray(req.prompt, np.int32)
+        prompt = jnp.asarray(prompt_np)
         with self.mesh:
             one = self._one_cache_init()
             if self.cfg.frontend:
@@ -250,7 +340,11 @@ class ServeReplica:
                 logits1, one = self._prefill(self.params, prompt[None], one, fe)
             else:
                 logits1, one = self._prefill(self.params, prompt[None], one)
-            self.cache = self._admit(self.cache, one, b)
+            if self.paged:
+                rows = self._bind_pages(b, prompt_np)
+                self.cache = self._admit(self.cache, one, b, jnp.asarray(rows))
+            else:
+                self.cache = self._admit(self.cache, one, b)
         self.prefill_ms += (time.perf_counter() - t0) * 1e3
         self.prefills += 1
         first = int(jnp.argmax(logits1[0]))
@@ -308,11 +402,40 @@ class ServeReplica:
         toks[:, 0] = self.last_tok
 
         # ---- one speculative launch over the ragged pool -------------------
+        if self.paged:
+            # grow each active slot's block table to cover this launch's
+            # writes BEFORE prefetch; the table is the launch's control word
+            evict = lambda: self.trie.evict_one(self.pager)
+            for b in range(B):
+                if self.active[b]:
+                    self.pager.ensure(b, int(self.lengths[b]) + T, evict=evict)
         with self.mesh:
-            out = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lengths), jnp.asarray(self.prev_accept),
-            )
+            if self.paged and self._branchy:
+                # previous step's accepted tree path rides in as (dst, src)
+                # row-move maps, applied at the top of this launch (fused
+                # commit: zero extra launches); identity (-1) on step one
+                dst, src = (
+                    self._pending_commit
+                    if self._pending_commit is not None
+                    else (np.full((B, T), -1, np.int32),) * 2
+                )
+                out = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.lengths), jnp.asarray(self.prev_accept),
+                    jnp.asarray(self.pager.table), jnp.asarray(dst),
+                    jnp.asarray(src),
+                )
+            elif self.paged:
+                out = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.lengths), jnp.asarray(self.prev_accept),
+                    jnp.asarray(self.pager.table),
+                )
+            else:
+                out = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.lengths), jnp.asarray(self.prev_accept),
+                )
         if self.telemetry:
             logits, self.cache, metrics = out
             self.agreements.append(float(metrics["plan_agreement"]))
@@ -345,13 +468,23 @@ class ServeReplica:
             acc_n[b] = a
             self.gen_left[b] -= a
             self.last_tok[b] = accepted[-1]
-        if self.tree is not None and not self.tree.is_chain():
-            # commit BEFORE advancing lengths: the accepted nodes move from
-            # scattered rows base+u_i to contiguous rows base+i
-            with self.mesh:
-                self.cache = self._commit(
-                    self.cache, jnp.asarray(self.lengths), jnp.asarray(path_pad)
+        if self._branchy:
+            if self.paged:
+                # pointer-rewired commit: derive (dst, src) row-move maps from
+                # the PRE-accept lengths; they are consumed by the NEXT launch
+                # (fused at the top of each layer, before its new writes)
+                from repro.core.pages import commit_maps
+
+                self._pending_commit = commit_maps(
+                    self.lengths, path_pad, acc_n, T
                 )
+            else:
+                # commit BEFORE advancing lengths: the accepted nodes move
+                # from scattered rows base+u_i to contiguous rows base+i
+                with self.mesh:
+                    self.cache = self._commit(
+                        self.cache, jnp.asarray(self.lengths), jnp.asarray(path_pad)
+                    )
         done: List[Result] = []
         for b in range(B):
             if not self.active[b]:
@@ -365,6 +498,21 @@ class ServeReplica:
                 self.active[b] = False
                 self.requests[b] = None
                 self.emitted[b] = []
+                if self.paged:
+                    # retire: release every page reference (trie keeps shared
+                    # ones alive) and void the slot's pending commit row — its
+                    # freed pages may be re-bound before the next launch
+                    self.pager.free_slot(b)
+                    if self._pending_commit is not None:
+                        self._pending_commit[0][b] = -1
+                        self._pending_commit[1][b] = -1
+        if self.page_telemetry:
+            stp = self.paged_stats()
+            print(f"[replica {self.replica_id} step {self.steps}] paged: "
+                  f"occupancy {stp['occupancy']:.2f} "
+                  f"({stp['allocated_pages']} pages), shared/admission "
+                  f"{stp['pages_shared_per_admission']:.2f}, fragmentation "
+                  f"{stp['fragmentation']:.3f}")
         return done
 
 
@@ -463,6 +611,21 @@ def main() -> None:
                          "draft TREES, e.g. '2,2,1' (first child continues "
                          "the spine); overrides --spec-tokens with the node "
                          "count")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve KV through the paged plane: fixed-size "
+                         "physical pages + per-slot block tables as the "
+                         "scalar-prefetch control word (admission = page "
+                         "assignment + prefix-trie probe, tree commit = "
+                         "pointer rewiring fused into the next launch)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV rows per physical page (0 = config default)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared synthetic system prompt of this "
+                         "many tokens to every request (exercises cross-"
+                         "request prefix sharing under --paged)")
+    ap.add_argument("--expect-shared-pages", action="store_true",
+                    help="exit nonzero unless at least one page was shared "
+                         "across admissions (CI guard for --paged runs)")
     ap.add_argument("--drafter", choices=sorted(DRAFTER_CHOICES),
                     default="ngram",
                     help="draft policy: host heuristics (repeat/ngram) or a "
@@ -516,24 +679,34 @@ def main() -> None:
     cfg = dataclasses.replace(
         cfg, decode_plane=args.decode_plane or cfg.decode_plane,
         spec_tokens=spec_width,
+        paged=args.paged or cfg.paged,
+        page_size=args.page_size or cfg.page_size,
     )
     telemetry = args.telemetry and cfg.decode_plane and cfg.is_moe
     mesh = make_host_mesh(args.data, args.model)
     B, S, T = args.slots, args.prompt_len, spec_width
     n_req = args.requests or 2 * B * args.fabric
-    max_len = S + args.gen + T
+    max_len = S + args.shared_prefix + args.gen + T
 
     # synthetic ragged request queue: a few distinct length buckets so the
-    # per-length prefill jit cache stays small
+    # per-length prefill jit cache stays small; --shared-prefix prepends one
+    # common system prompt to every request so admissions after the first
+    # bind its full pages straight from the prefix trie
     buckets = sorted({max(4, S // 2), max(4, (3 * S) // 4), S})
     rng = np.random.default_rng(0)
+    sys_prompt = np.asarray(
+        rng.integers(0, cfg.vocab_size, size=args.shared_prefix), np.int32
+    )
     requests = [
         Request(
             rid=i,
-            prompt=np.asarray(
-                rng.integers(0, cfg.vocab_size, size=buckets[i % len(buckets)]),
-                np.int32,
-            ),
+            prompt=np.concatenate([
+                sys_prompt,
+                np.asarray(
+                    rng.integers(0, cfg.vocab_size, size=buckets[i % len(buckets)]),
+                    np.int32,
+                ),
+            ]),
             gen=args.gen,
         )
         for i in range(n_req)
@@ -597,6 +770,11 @@ def main() -> None:
         print(f"speculative: {shape} ({T} nodes), drafter {args.drafter}, "
               f"accept rate {st['accepted']/max(st['drafted'], 1):.2f} "
               f"({st['accepted']/max(st['launches'], 1):.2f} tokens/launch)")
+    if args.paged or cfg.paged:
+        adm = st["paged_admissions"]
+        print(f"paged: {adm} admissions, {st['pages_shared']} pages bound via "
+              f"prefix trie ({st['pages_shared']/max(adm, 1):.2f}/admission), "
+              f"{st['admit_copy_rows']} KV rows copied at admission")
     if telemetry and st["agreements"]:
         print(f"plan telemetry: stale-vs-fresh top-k agreement "
               f"mean {np.mean(st['agreements']):.3f} min {np.min(st['agreements']):.3f} "
@@ -622,6 +800,10 @@ def main() -> None:
         sys.exit(1)
     if st["duplicates"]:
         print(f"FABRIC ERROR: {st['duplicates']} duplicate results published")
+        sys.exit(1)
+    if args.expect_shared_pages and st["pages_shared"] == 0:
+        print("FABRIC ERROR: --expect-shared-pages set but no page was shared "
+              "across admissions")
         sys.exit(1)
 
 

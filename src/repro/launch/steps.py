@@ -319,6 +319,13 @@ def build_spec_serve_step(
     spec_tokens``) turns each launch into a draft-tree launch: the topology
     is compiled into the step closure (static under jit), the verifier walks
     it host-side, and ``prev_accept`` becomes the accepted node index.
+
+    Under ``cfg.paged`` the launch takes one more control word: ``pages``,
+    the replicated (B, max_pages) int32 block table.  A BRANCHY tree launch
+    additionally takes the previous verify round's fused commit maps
+    ``(dst, src)`` — the chain/no-tree step statically omits them, which is
+    what keeps the paged chain path bitwise-identical to the contiguous one
+    (no commit gather/scatter ever enters the compiled graph).
     """
     B, S = cell.global_batch, cell.seq_len
     Tn = max(cfg.spec_tokens, 1)
@@ -327,12 +334,26 @@ def build_spec_serve_step(
             f"tree has {tree.num_nodes} nodes but cfg.spec_tokens is {Tn}"
         )
     model = build_model(cfg, mesh, B)
+    branchy = tree is not None and not tree.is_chain()
 
-    def spec_step(params, cache, tokens, lengths, prev_accept):
-        return model.decode_tokens(
-            params, cache, tokens, lengths, prev_accept, telemetry=telemetry,
-            tree=tree,
-        )
+    if cfg.paged and branchy:
+        def spec_step(params, cache, tokens, lengths, prev_accept, pages, dst, src):
+            return model.decode_tokens(
+                params, cache, tokens, lengths, prev_accept, telemetry=telemetry,
+                tree=tree, pages=pages, commit=(dst, src),
+            )
+    elif cfg.paged:
+        def spec_step(params, cache, tokens, lengths, prev_accept, pages):
+            return model.decode_tokens(
+                params, cache, tokens, lengths, prev_accept, telemetry=telemetry,
+                tree=tree, pages=pages,
+            )
+    else:
+        def spec_step(params, cache, tokens, lengths, prev_accept):
+            return model.decode_tokens(
+                params, cache, tokens, lengths, prev_accept, telemetry=telemetry,
+                tree=tree,
+            )
 
     params_abs = _abstract_params(cfg)
     p_shard = param_shardings(params_abs, mesh)
@@ -340,14 +361,27 @@ def build_spec_serve_step(
     c_shard = cache_shardings(cache_abs, B, mesh)
     tok_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=1))
     vec_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=0))
+    rep_shard = NamedSharding(mesh, P())
 
-    abstract = (
+    abstract = [
         jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), params_abs, p_shard),
         jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), cache_abs, c_shard),
         jax.ShapeDtypeStruct((B, Tn), jnp.int32, sharding=tok_shard),
         jax.ShapeDtypeStruct((B,), jnp.int32, sharding=vec_shard),
         jax.ShapeDtypeStruct((B,), jnp.int32, sharding=vec_shard),
-    )
+    ]
+    in_shardings = [p_shard, c_shard, tok_shard, vec_shard, vec_shard]
+    if cfg.paged:
+        # the block table is a control word: replicated, like the plan scalars
+        mp = T.max_pages_for(cfg, S)
+        abstract.append(jax.ShapeDtypeStruct((B, mp), jnp.int32, sharding=rep_shard))
+        in_shardings.append(rep_shard)
+        if branchy:
+            for _ in ("dst", "src"):
+                abstract.append(
+                    jax.ShapeDtypeStruct((B, Tn), jnp.int32, sharding=tok_shard)
+                )
+                in_shardings.append(tok_shard)
     logits_shard = NamedSharding(mesh, batch_spec(B, mesh, extra_dims=2))
     out_shardings = (logits_shard, c_shard)
     if telemetry:
@@ -356,9 +390,9 @@ def build_spec_serve_step(
     return StepBundle(
         name="spec_serve_step",
         fn=spec_step,
-        in_shardings=(p_shard, c_shard, tok_shard, vec_shard, vec_shard),
+        in_shardings=tuple(in_shardings),
         out_shardings=out_shardings,
-        abstract_inputs=abstract,
+        abstract_inputs=tuple(abstract),
         donate_argnums=(1,),
         model=model,
     )
@@ -384,16 +418,26 @@ class AdmissionBundle:
 def build_admission(
     cfg: ModelConfig, mesh: Mesh, serve_model: Model, max_len: int, cache_sharding: Any
 ) -> AdmissionBundle:
-    pf_model = build_model(cfg, mesh, 1)
-    c1_abs = jax.eval_shape(lambda: T.init_cache(cfg, 1, max_len))
+    """Under ``cfg.paged`` the B=1 prefill runs CONTIGUOUS (``paged=False``
+    twin config — prefill writes stripes) and ``admit`` becomes the paged
+    scatter :meth:`~repro.models.model.Model.write_cache_slot_paged`:
+    ``admit(batch_cache, one_cache, slot, rows)`` with the host-computed
+    physical-row vector — trie-shared pages send sentinel rows, so a
+    trie-resident prompt admits with zero KV copies."""
+    pf_cfg = dataclasses.replace(cfg, paged=False) if cfg.paged else cfg
+    pf_model = build_model(pf_cfg, mesh, 1)
+    c1_abs = jax.eval_shape(lambda: T.init_cache(pf_cfg, 1, max_len))
     c1_shard = cache_shardings(c1_abs, 1, mesh)
     lg1_shard = NamedSharding(mesh, batch_spec(1, mesh, extra_dims=1))
     prefill = jax.jit(pf_model.prefill, out_shardings=(lg1_shard, c1_shard))
     one_cache_init = jax.jit(
-        lambda: T.init_cache(cfg, 1, max_len), out_shardings=c1_shard
+        lambda: T.init_cache(pf_cfg, 1, max_len), out_shardings=c1_shard
+    )
+    admit_fn = (
+        serve_model.write_cache_slot_paged if cfg.paged else serve_model.write_cache_slot
     )
     admit = jax.jit(
-        serve_model.write_cache_slot, donate_argnums=(0,), out_shardings=cache_sharding
+        admit_fn, donate_argnums=(0,), out_shardings=cache_sharding
     )
     return AdmissionBundle(
         prefill=prefill, one_cache_init=one_cache_init, admit=admit, model=pf_model

@@ -245,6 +245,8 @@ class Model:
         *,
         telemetry: bool = False,
         tree: Optional[Any] = None,  # core.plans.TreePlan — draft-tree topology
+        pages: Optional[jnp.ndarray] = None,  # (B, max_pages) int32 block tables
+        commit: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (dst, src)
     ):
         """One speculative serve launch: T tokens per sequence, ragged batch.
 
@@ -267,6 +269,15 @@ class Model:
         :meth:`commit_tree_path` compacts the accepted path's cache rows;
         ``prev_accept`` is then the accepted NODE INDEX (for a chain this is
         the accepted-count-minus-one of the linear path — same number).
+
+        Paged caches (``cfg.paged``) take two more control words: ``pages``,
+        the per-slot block table steering every KV access through
+        logical→physical translation, and ``commit``, the PREVIOUS verify
+        round's accepted-path row moves ``(dst, src)`` in logical positions
+        (-1 = no-op) which are applied at the top of each layer before its
+        new writes — tree commit fused into the decode launch, so the paged
+        tree path issues ZERO standalone commit launches (full pages were
+        rewired on the host; only boundary-page rows move here).
         """
         cfg = self.cfg
         B = tokens.shape[0]
@@ -294,7 +305,7 @@ class Model:
                     h, rs, p_sb[f"b{j}"], c_sb[f"b{j}"], kind, cfg,
                     lengths, prev_accept, self.moe_apply,
                     decode_apply=self.decode_moe_apply, telemetry=telemetry,
-                    tree=tree,
+                    tree=tree, pages=pages, commit=commit,
                 )
                 new_c[f"b{j}"] = nc
                 agg = agg + a
@@ -312,7 +323,7 @@ class Model:
             x, route_src, nc, a = T.apply_layer_decode_spec(
                 x, route_src, p, c, kind, cfg, lengths, prev_accept,
                 self.moe_apply, decode_apply=self.decode_moe_apply,
-                telemetry=telemetry, tree=tree,
+                telemetry=telemetry, tree=tree, pages=pages, commit=commit,
             )
             new_cache["rest"].append(nc)
             agree_sum = agree_sum + a
@@ -345,6 +356,94 @@ class Model:
             "rest": jax.tree.map(at_axis(0), cache["rest"], one_cache["rest"]),
         }
 
+    def write_cache_slot_paged(self, cache: Params, one_cache: Params, slot, rows) -> Params:
+        """Paged admission: page assignment + scatter, never a stripe copy.
+
+        ``one_cache`` comes from a CONTIGUOUS B=1 prefill (build the prefill
+        model with ``paged=False``); ``rows`` is the (max_len,) int32 vector
+        of physical pool rows backing each logical prompt position — entries
+        at/above the pool size are dropped, which is how trie-shared pages
+        (and positions past the prompt) skip the copy entirely: admitting a
+        fully trie-resident prompt moves ZERO KV bytes, the block table just
+        adopts the shared pages on the host.  Non-pool leaves (DecodePlans,
+        rolling-window buffers) are per-slot and write at batch ``slot``
+        exactly as :meth:`write_cache_slot` does.
+        """
+        rows = jnp.asarray(rows, jnp.int32)
+
+        def conv(dest, src, axis):
+            if isinstance(dest, dict):
+                out = {}
+                for name, d in dest.items():
+                    if name in ("pk", "pv"):
+                        s = src[name[1:]]  # the contiguous prefill leaf (k/v)
+                        if axis == 1:  # scan-stacked: superblock axis leads
+                            out[name] = d.at[:, rows].set(
+                                s[:, 0].astype(d.dtype), mode="drop"
+                            )
+                        else:
+                            out[name] = d.at[rows].set(
+                                s[0].astype(d.dtype), mode="drop"
+                            )
+                    else:
+                        out[name] = conv(d, src[name], axis)
+                return out
+            if isinstance(dest, list):
+                return [conv(d, s, axis) for d, s in zip(dest, src)]
+            return jax.lax.dynamic_update_slice_in_dim(
+                dest, src.astype(dest.dtype), slot, axis=axis
+            )
+
+        return {
+            "scan": conv(cache["scan"], one_cache["scan"], 1),
+            "rest": conv(cache["rest"], one_cache["rest"], 0),
+        }
+
+    def paginate_cache(self, cache: Params, max_len: int) -> Params:
+        """Re-layout a contiguous cache into the paged pool layout.
+
+        Benchmark/test plumbing for the bitwise-parity contract: with the
+        identity block table (:func:`repro.models.transformer.identity_page_table`)
+        slot ``b``'s logical position ``pos`` lands at pool row
+        ``b * max_pages * page_size + pos`` — exactly the flattened contiguous
+        buffer — so the paged chain path must be bitwise-equal to the
+        contiguous path on the converted cache.  Rolling-window leaves (and
+        rec/ssm states, plans) pass through untouched, mirroring
+        ``init_layer_cache``.
+        """
+        cfg = self.cfg
+        pat, n_sb, n_rest = self._pattern()
+        kinds = cfg.layer_kinds
+        ps, mp = cfg.page_size, T.max_pages_for(cfg, max_len)
+
+        def conv_layer(c, kind, stacked):
+            window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+            if kind not in ("attn", "local", "moe") or window:
+                return c
+            out = dict(c)
+            for name, pname in (("k", "pk"), ("v", "pv")):
+                leaf = out.pop(name)
+                pad = mp * ps - leaf.shape[-3]
+                if pad:
+                    cfgpad = [(0, 0)] * leaf.ndim
+                    cfgpad[-3] = (0, pad)
+                    leaf = jnp.pad(leaf, cfgpad)
+                nkv, hd = leaf.shape[-2:]
+                lead = leaf.shape[:-4]  # () or (n_sb,)
+                out[pname] = leaf.reshape(*lead, -1, nkv, hd)
+            return out
+
+        scan = (
+            {f"b{j}": conv_layer(cache["scan"][f"b{j}"], pat[j], True) for j in range(len(pat))}
+            if n_sb
+            else {}
+        )
+        rest = [
+            conv_layer(c, kinds[n_sb * len(pat) + j], False)
+            for j, c in enumerate(cache["rest"])
+        ]
+        return {"scan": scan, "rest": rest}
+
     def commit_tree_path(self, cache: Params, lengths, path) -> Params:
         """Compact an accepted draft-tree root path into contiguous cache rows.
 
@@ -358,6 +457,11 @@ class Model:
         leaves move; plan rows stay node-indexed (``prev_accept`` selects the
         accepted node's row directly) and rejected rows are overwritten by
         the next launch, exactly like linear rollback.
+
+        This standalone launch serves the LEGACY contiguous path only.  Paged
+        caches never call it: full pages are rewired in the host block table
+        and boundary-page row moves ride the next decode launch as fused
+        ``commit`` maps (see :func:`repro.core.pages.commit_maps`).
         """
         lengths = jnp.asarray(lengths, jnp.int32)
         path = jnp.asarray(path, jnp.int32)

@@ -151,6 +151,28 @@ def init_params(key, cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 
+def max_pages_for(cfg: ModelConfig, max_len: int) -> int:
+    """Block-table width: logical pages covering one slot's max_len."""
+    return -(-int(max_len) // int(cfg.page_size))
+
+
+def num_pages(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    """Default physical pool size: the contiguous capacity, in pages."""
+    return batch * max_pages_for(cfg, max_len)
+
+
+def identity_page_table(cfg: ModelConfig, batch: int, max_len: int) -> jnp.ndarray:
+    """The (B, max_pages) block table reproducing the contiguous layout:
+    slot b's logical page i is physical page ``b * max_pages + i``.  Used by
+    benchmarks/tests without the serve allocator — with it the paged chain
+    path is bitwise-identical to the contiguous path."""
+    mp = max_pages_for(cfg, max_len)
+    return (
+        jnp.arange(batch, dtype=jnp.int32)[:, None] * mp
+        + jnp.arange(mp, dtype=jnp.int32)[None, :]
+    )
+
+
 def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
@@ -162,10 +184,24 @@ def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtyp
         spec_slack = -(-(max(int(cfg.spec_tokens), 1) - 1) // 8) * 8
         S = min(max_len, window + spec_slack) if window else max_len
         hd = cfg.resolved_head_dim
-        c = {
-            "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
-            "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
-        }
+        if cfg.paged and not window:
+            # Paged KV plane: full-attention KV lives in a flat physical page
+            # pool (NO batch axis) addressed through the per-slot block table
+            # that rides the launch as a control word.  The default pool
+            # matches the contiguous capacity (batch * ceil(max_len/ps)
+            # pages); the serve allocator shares/evicts pages within it.
+            # Rolling caches stay modulo-addressed — their byte bound is the
+            # window, and paging a W-sized buffer would buy nothing.
+            pages = num_pages(cfg, batch, max_len)
+            c = {
+                "pk": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), dtype),
+                "pv": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), dtype),
+            }
+        else:
+            c = {
+                "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+            }
         if kind == "moe" and cfg.decode_plane:
             # Agile decode plane: the layer's next-step DecodePlan lives in
             # the cache alongside the KV entries (uniform placeholder until
@@ -264,6 +300,12 @@ def apply_layer_prefill(
     aux = jnp.zeros((2,), jnp.float32)
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        if "pk" in cache:
+            raise ValueError(
+                "prefill writes contiguous stripes; paged caches are seeded "
+                "through the admission path (B=1 contiguous prefill + page "
+                "scatter) — build the prefill model with paged=False"
+            )
         xn = L.rms_norm(x, p["ln1"])
         q, k, v = L._qkv(xn, p["attn"], cfg, positions)
         S = x.shape[1]
@@ -331,6 +373,12 @@ def apply_layer_decode(
     aux = jnp.zeros((2,), jnp.float32)
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
+        if "pk" in cache:
+            raise ValueError(
+                "paged caches decode through Model.decode_tokens (the block "
+                "table is a launch argument); decode_step has no page-table "
+                "plumbing — use spec width 1 through decode_tokens instead"
+            )
         xn = L.rms_norm(x, p["ln1"])
         if cfg.decode_plane and not window:
             # Agile decode plane: full-attention caches are prefix-valid, so
@@ -384,6 +432,8 @@ def apply_layer_decode_spec(
     decode_apply: Optional[DecodeApply] = None,
     telemetry: bool = False,
     tree: Optional[TreePlan] = None,
+    pages: Optional[jnp.ndarray] = None,  # (B, max_pages) int32 block table
+    commit: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (dst, src) (B, Tc)
 ):
     """Multi-token (speculative) ragged decode for one layer.
 
@@ -409,8 +459,18 @@ def apply_layer_decode_spec(
     routed from its PARENT's route source — each root-to-node path
     reproduces the sequential trace for that token sequence exactly.  The
     degenerate chain tree takes this same code path and is bitwise-equal to
-    ``tree=None``.  Rolling-window layers serve chains only (a branchy tree
-    raises — its scattered commit does not compose with modulo addressing).
+    ``tree=None``.
+
+    Paged caches (``"pk"``/``"pv"`` pool leaves) additionally take ``pages``
+    — the per-slot block table, a launch-argument control word — steering
+    writes and reads through logical→physical row translation, and
+    ``commit`` — the previous verify round's accepted-path row moves
+    ``(dst, src)`` in LOGICAL positions (-1 = no-op), fused into this
+    launch ahead of any new writes so tree commit never needs its own
+    launch.  Under ``cfg.paged`` branchy trees are also served on
+    rolling-window layers (the fused commit maps compose with modulo
+    addressing); the legacy non-paged path keeps the chain-only
+    restriction.
 
     Returns ``(x, route_src, new_cache, plan_agreement)`` where
     ``plan_agreement`` is the stale-vs-fresh top-k overlap (0 when not a MoE
@@ -420,19 +480,43 @@ def apply_layer_decode_spec(
     B, T, d = x.shape
     if kind in ("attn", "local", "moe"):
         window = cfg.local_window if (kind == "local" or cfg.attention_kind == "local") else 0
-        if tree is not None and window:
-            if not tree.is_chain():
-                raise NotImplementedError(
-                    "branchy draft trees are not supported on rolling-window "
-                    "layers (modulo-addressed caches cannot commit a scattered "
-                    "root path); serve local-attention archs with chain drafts"
-                )
+        paged = "pk" in cache
+        if paged and pages is None:
+            raise ValueError(
+                "paged cache without a block table: pass pages=(B, max_pages) "
+                "int32 (see models.transformer.identity_page_table)"
+            )
+        if commit is not None:
+            # fused tree commit: apply the previous verify round's accepted
+            # row moves before this launch writes new draft rows — the dst
+            # rows [L_old, L_new) are disjoint from this launch's writes
+            # [L_new, L_new + T), and gather-before-scatter makes overlapping
+            # (dst, src) windows safe
+            cache = _apply_commit(cache, commit, pages, cfg)
+        if tree is not None and window and tree.is_chain():
             tree = None  # chains serve through the linear rolling path
+        if tree is not None and window and not cfg.paged:
+            raise NotImplementedError(
+                "branchy draft trees on rolling-window layers need the paged "
+                "KV plane's fused commit maps (cfg.paged=True); the legacy "
+                "contiguous path serves local-attention archs with chain "
+                "drafts only"
+            )
         xn = L.rms_norm(x, p["ln1"])
-        if tree is not None:
+        if tree is not None and window:
+            a, new_cache = _decode_attn_rolling_tree(
+                xn, p["attn"], cfg, cache, lengths, window, tree
+            )
+        elif tree is not None and paged:
+            a, new_cache = _decode_attn_paged_tree(
+                xn, p["attn"], cfg, cache, lengths, tree, pages
+            )
+        elif tree is not None:
             a, new_cache = _decode_attn_prefix_tree(xn, p["attn"], cfg, cache, lengths, tree)
         elif window:
             a, new_cache = _decode_attn_rolling_spec(xn, p["attn"], cfg, cache, lengths, window)
+        elif paged:
+            a, new_cache = _decode_attn_paged_spec(xn, p["attn"], cfg, cache, lengths, pages)
         else:
             a, new_cache = _decode_attn_prefix_spec(xn, p["attn"], cfg, cache, lengths)
         h = _res(x + a)
@@ -659,6 +743,236 @@ def _decode_attn_rolling_spec(
         w = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def _paged_rows(pages: jnp.ndarray, pos: jnp.ndarray, ps: int, R: int) -> jnp.ndarray:
+    """Translate logical positions to physical pool rows via the block table.
+
+    ``pages`` is (B, max_pages) int32 (-1 = unallocated); ``pos`` is (B, T)
+    logical absolute positions.  Unmapped positions resolve to row ``R`` —
+    one past the pool — so callers can scatter with ``mode="drop"`` (JAX
+    would WRAP a negative row back into the pool; the sentinel must be
+    out-of-bounds POSITIVE).
+    """
+    idx = jnp.minimum(pos // ps, pages.shape[1] - 1)
+    phys = jnp.take_along_axis(pages, idx, axis=1)  # (B, T)
+    return jnp.where(
+        phys >= 0, phys * ps + jnp.remainder(pos, ps), R
+    ).astype(jnp.int32)
+
+
+def _paged_view(pool: jnp.ndarray, pages: jnp.ndarray, ps: int) -> jnp.ndarray:
+    """Gather the flat pool into the per-slot contiguous layout
+    (B, max_pages * ps, ...) the masked-jnp attention paths expect.  Unmapped
+    pages gather page 0 — callers mask those columns out."""
+    B, mp = pages.shape
+    safe = jnp.where(pages >= 0, pages, 0)
+    rows = (safe * ps)[:, :, None] + jnp.arange(ps, dtype=jnp.int32)[None, None, :]
+    return pool[rows.reshape(B, mp * ps)]
+
+
+def _apply_commit(
+    cache: Params,
+    commit: Tuple[jnp.ndarray, jnp.ndarray],
+    pages: Optional[jnp.ndarray],
+    cfg: ModelConfig,
+) -> Params:
+    """Fused tree commit: move the accepted path's KV rows, one gather and
+    one scatter, at the top of the decode launch (before any new writes).
+
+    ``commit = (dst, src)`` are (B, Tc) LOGICAL absolute positions with -1 as
+    the no-op sentinel (see :func:`repro.core.pages.commit_maps`).  Pool
+    caches translate through the block table — only rows inside the boundary
+    page ever move, full pages were rewired on the host for free; rolling
+    caches move rows modulo W.  Gather-before-scatter makes overlapping
+    (dst, src) windows safe; sentinels become positive out-of-bounds rows so
+    ``mode="drop"`` discards them (negative indices would wrap).
+    """
+    dst, src = commit
+    new_cache = dict(cache)
+    if "pk" in cache:
+        ck, cv = cache["pk"], cache["pv"]
+        R = ck.shape[0]
+        ps = cfg.page_size
+        src_rows = jnp.minimum(_paged_rows(pages, jnp.maximum(src, 0), ps, R), R - 1)
+        dst_rows = jnp.where(
+            dst >= 0, _paged_rows(pages, jnp.maximum(dst, 0), ps, R), R
+        )
+        new_cache["pk"] = ck.at[dst_rows].set(ck[src_rows], mode="drop")
+        new_cache["pv"] = cv.at[dst_rows].set(cv[src_rows], mode="drop")
+        return new_cache
+    ck, cv = cache["k"], cache["v"]
+    B, W = ck.shape[0], ck.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    src_slot = jnp.remainder(jnp.maximum(src, 0), W)
+    dst_slot = jnp.where(dst >= 0, jnp.remainder(dst, W), W)
+    new_cache["k"] = ck.at[bidx, dst_slot].set(ck[bidx, src_slot], mode="drop")
+    new_cache["v"] = cv.at[bidx, dst_slot].set(cv[bidx, src_slot], mode="drop")
+    return new_cache
+
+
+def _decode_attn_paged_spec(
+    xn: jnp.ndarray,  # (B, T, d)
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,)
+    pages: jnp.ndarray,    # (B, max_pages) int32 block table
+) -> Tuple[jnp.ndarray, Params]:
+    """Paged twin of :func:`_decode_attn_prefix_spec`: same per-token valid
+    prefixes, but KV rows live in the flat page pool and every access goes
+    through the block table.  With the identity table this is bitwise-equal
+    to the contiguous path (the gather view IS the contiguous buffer)."""
+    B, T, _ = xn.shape
+    ps = cfg.page_size
+    R = cache["pk"].shape[0]
+    pos = _spec_positions(lengths, T)
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    rows = _paged_rows(pages, pos, ps, R)
+    ck = cache["pk"].at[rows].set(k.astype(cache["pk"].dtype), mode="drop")
+    cv = cache["pv"].at[rows].set(v.astype(cache["pv"].dtype), mode="drop")
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode_paged
+
+        out = flash_decode_paged(q, ck, cv, pos, pages, page_size=ps)
+    else:
+        Smax = pages.shape[1] * ps
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        groups = cfg.num_heads // nkv
+        vk = _paged_view(ck, pages, ps)  # (B, Smax, nkv, hd)
+        vv = _paged_view(cv, pages, ps)
+        mapped = jnp.repeat(pages >= 0, ps, axis=1)  # (B, Smax)
+        valid = mapped[:, None, :] & (
+            jnp.arange(Smax)[None, None, :] <= pos[:, :, None]
+        )  # (B, T, Smax)
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, T, nkv, groups, hd)
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), vk.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngts,bsnh->btngh", w, vv.astype(jnp.float32))
+        out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"pk": ck, "pv": cv}
+
+
+def _decode_attn_paged_tree(
+    xn: jnp.ndarray,  # (B, T, d) — T draft-tree nodes per sequence
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,) committed-prefix length per sequence
+    tree: "TreePlan",
+    pages: jnp.ndarray,    # (B, max_pages) int32 block table
+) -> Tuple[jnp.ndarray, Params]:
+    """Paged twin of :func:`_decode_attn_prefix_tree`: node t occupies
+    LOGICAL row ``lengths[b] + t`` (physical row via the block table) at
+    rotary position ``lengths[b] + depth(t)``; the ancestor mask operates on
+    logical rows so the physical layout never leaks into the math."""
+    B, T, _ = xn.shape
+    ps = cfg.page_size
+    R = cache["pk"].shape[0]
+    depths = jnp.asarray(tree.depths(), jnp.int32)
+    lrows = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    pos = lengths[:, None] + depths[None, :]  # rotary positions
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    rows = _paged_rows(pages, lrows, ps, R)
+    ck = cache["pk"].at[rows].set(k.astype(cache["pk"].dtype), mode="drop")
+    cv = cache["pv"].at[rows].set(v.astype(cache["pv"].dtype), mode="drop")
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import flash_decode_paged
+
+        out = flash_decode_paged(
+            q, ck, cv, lengths, pages, page_size=ps,
+            ancestors=jnp.asarray(tree.ancestor_words(), jnp.int32),
+            base=lengths,
+        )
+    else:
+        Smax = pages.shape[1] * ps
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        groups = cfg.num_heads // nkv
+        vk = _paged_view(ck, pages, ps)
+        vv = _paged_view(cv, pages, ps)
+        mapped = jnp.repeat(pages >= 0, ps, axis=1)  # (B, Smax)
+        table = jnp.asarray(tree.ancestor_table(), bool)  # (T, T)
+        u = jnp.arange(Smax)[None, :] - lengths[:, None]  # (B, Smax) draft-row index
+        in_draft = (u >= 0) & (u < T)
+        anc_ok = table[:, jnp.clip(u, 0, T - 1)]  # (T, B, Smax)
+        valid = mapped[:, None, :] & (
+            (u < 0)[:, None, :]
+            | (in_draft[:, None, :] & jnp.transpose(anc_ok, (1, 0, 2)))
+        )  # (B, T, Smax)
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(B, T, nkv, groups, hd)
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), vk.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bngts,bsnh->btngh", w, vv.astype(jnp.float32))
+        out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
+    return y, {"pk": ck, "pv": cv}
+
+
+def _decode_attn_rolling_tree(
+    xn: jnp.ndarray,  # (B, T, d) — T draft-tree nodes per sequence
+    p: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    lengths: jnp.ndarray,  # (B,) committed-prefix length per sequence
+    window: int,
+    tree: "TreePlan",
+) -> Tuple[jnp.ndarray, Params]:
+    """Ancestor-masked tree attention against a rolling (modulo) KV cache.
+
+    Node t lands at slot ``(lengths[b] + t) % W`` with rotary position
+    ``lengths[b] + depth(t)``.  Validity combines three predicates: the slot
+    must hold a written row (abs_pos >= 0), the row must be inside the
+    node's window measured in SEQUENTIAL positions (an ancestor's sequential
+    position is ``lengths + depth``, not its row index — using row indices
+    would widen the window for deep trees), and draft rows must be on the
+    node's root path.  The accepted path's row moves arrive NEXT launch as
+    fused commit maps (mod W) — this is what un-bans branchy trees on
+    rolling layers under the paged plane.
+    """
+    B, T, _ = xn.shape
+    W = cache["k"].shape[1]
+    assert T <= W, "draft tree must not exceed the rolling window"
+    depths = jnp.asarray(tree.depths(), jnp.int32)
+    lrows = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    pos = lengths[:, None] + depths[None, :]  # rotary / sequential positions
+    q, k, v = L._qkv(xn, p, cfg, pos)
+    bidx = jnp.arange(B)[:, None]
+    slots = jnp.remainder(lrows, W)
+    ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
+    limit = min(window, W) if window else W
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    groups = cfg.num_heads // nkv
+    head = lengths + T - 1  # (B,) last written row's absolute index
+    slot = jnp.arange(W)
+    write = jnp.remainder(head, W)
+    abs_pos = head[:, None] - jnp.remainder(write[:, None] - slot[None, :], W)  # (B, W)
+    u = abs_pos - lengths[:, None]  # draft-row index of each slot (>= 0 iff draft)
+    in_draft = (u >= 0) & (u < T)
+    table = jnp.asarray(tree.ancestor_table(), bool)  # (T, T)
+    anc_ok = jnp.transpose(table[:, jnp.clip(u, 0, T - 1)], (1, 0, 2))  # (B, T, W)
+    # window cut on sequential positions: committed rows sit at their row
+    # index; a draft row's sequential position (if accepted) is its depth
+    eff = jnp.where(in_draft, lengths[:, None] + depths[jnp.clip(u, 0, T - 1)], abs_pos)
+    valid = (
+        (abs_pos >= 0)[:, None, :]
+        & (eff[:, None, :] > pos[:, :, None] - limit)
+        & ((u < 0)[:, None, :] | (in_draft[:, None, :] & anc_ok))
+    )  # (B, T, W)
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, T, nkv, groups, hd)
+    s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+    out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
     return y, {"k": ck, "v": cv}
 

@@ -217,7 +217,7 @@ def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
     spec = [None] * len(shape)
     if stack:
         spec[0] = None
-    if len(shape) > stack:
+    if name not in ("pk", "pv") and len(shape) > stack:
         spec[stack] = baxes
 
     def try_model(ax: int) -> bool:
@@ -227,7 +227,14 @@ def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
             return True
         return False
 
-    if name in ("k", "v"):          # (B, S, nkv, hd)
+    if name in ("pk", "pv"):
+        # paged KV pool (R, nkv, hd): NO batch axis — the pool is shared
+        # across slots and addressed through the replicated block table, so
+        # the batch never touches its layout.  Same preference order as the
+        # contiguous cache: KV heads first, then the row (page) axis, then
+        # head_dim as last resort.
+        try_model(1) or try_model(0) or try_model(2)
+    elif name in ("k", "v"):        # (B, S, nkv, hd)
         # perf iteration H-C1 (EXPERIMENTS.md §Perf): prefer the KV-head axis,
         # THEN the sequence axis.  Sharding head_dim (the old fallback) forces
         # the decode q@k contraction into an all-reduce of the full (B, nq, S)

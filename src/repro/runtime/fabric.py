@@ -143,6 +143,8 @@ class ServeFabric:
             # aggregated replica counters (absorbed on retirement + at exit)
             "launches": 0, "prefills": 0, "accepted": 0, "drafted": 0,
             "prefill_ms": 0.0, "agreements": [],
+            # paged KV plane counters (zero when replicas are unpaged)
+            "paged_admissions": 0, "pages_shared": 0, "admit_copy_rows": 0,
         }
 
     # ------------------------------------------------------------------
@@ -172,6 +174,9 @@ class ServeFabric:
         self.stats["drafted"] += getattr(rep, "drafted_total", 0)
         self.stats["prefill_ms"] += getattr(rep, "prefill_ms", 0.0)
         self.stats["agreements"].extend(getattr(rep, "agreements", []))
+        self.stats["paged_admissions"] += getattr(rep, "admissions_paged", 0)
+        self.stats["pages_shared"] += getattr(rep, "pages_shared_total", 0)
+        self.stats["admit_copy_rows"] += getattr(rep, "admit_copy_rows", 0)
 
     def _requeue_in_flight(self, rep: Any) -> None:
         """Return a dying replica's in-flight requests to the queue front

@@ -1,0 +1,400 @@
+"""Paged KV plane, device side: block-table indirection on the
+scalar-prefetch path, bitwise parity with the contiguous plane, the
+pointer-rewired (fused) tree commit, and cross-request prefix sharing
+through the serve loop and the fault-tolerant fabric.
+
+Contract, layer by layer:
+
+* kernel — ``flash_decode_paged`` with the identity block table is BITWISE
+  equal to ``flash_decode`` at ``bkv = page_size``, chain and
+  ancestor-masked tree alike (indirection composes after the length clamp
+  and ancestor mask, so the block walk is unchanged);
+* model — the paged chain path (``paginate_cache`` + identity table)
+  reproduces contiguous ``decode_tokens`` bitwise at page sizes 8 and 16,
+  including rolling-window layers across the wrap point (which stay modulo
+  under ``cfg.paged``);
+* serve — branchy draft trees now serve on rolling-window (local
+  attention) layers through the paged plane's fused commit maps — the
+  exact configuration the contiguous plane still bans — and every stream
+  equals sequential greedy; a trie-resident prompt admits with zero KV
+  copies and no commit launch ever runs on the paged path;
+* fabric — a crashed-and-rejoined paged replica reproduces the sequential
+  oracle byte-for-byte, with the pager + trie riding the checkpoint ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _moe_cfg(**kw):
+    return dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), **kw)
+
+
+def _local_cfg(**kw):
+    """Dense single-layer local-attention config: every layer is a
+    rolling-window layer, the shape the contiguous plane bans trees on."""
+    return dataclasses.replace(
+        get_smoke_config("qwen3-32b"),
+        num_layers=1, attention_kind="local", decode_plane=True, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel: block-table indirection is invisible at the identity table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ps", [8, 16])
+def test_flash_decode_paged_identity_table_bitwise_chain(ps):
+    from repro.kernels.flash_attention import flash_decode, flash_decode_paged
+
+    rng = np.random.default_rng(0)
+    B, Tn, nq, nkv, hd, S = 2, 3, 4, 2, 16, 32
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    idx = jnp.asarray([7, 19], jnp.int32)
+    want = flash_decode(q, ck, cv, idx, bkv=ps, interpret=True)
+    mp = S // ps
+    pages = (jnp.arange(B, dtype=jnp.int32)[:, None] * mp
+             + jnp.arange(mp, dtype=jnp.int32)[None, :])
+    got = flash_decode_paged(
+        q, ck.reshape(B * S, nkv, hd), cv.reshape(B * S, nkv, hd),
+        idx, pages, page_size=ps, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_decode_paged_identity_table_bitwise_tree():
+    """Ancestor-masked tree drafts through the paged kernel: the block-table
+    lookup composes AFTER the ancestor mask, so the identity table stays
+    bitwise-equal to the contiguous tree kernel."""
+    from repro.core.plans import TreePlan
+    from repro.kernels.flash_attention import flash_decode, flash_decode_paged
+
+    tree = TreePlan.from_branching([2, 1]).validate()
+    words = jnp.asarray(tree.ancestor_words(), jnp.int32)
+    rng = np.random.default_rng(1)
+    ps = 8
+    B, Tn, nq, nkv, hd, S = 2, tree.num_nodes, 4, 2, 16, 32
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    base = jnp.asarray([5, 13], jnp.int32)
+    want = flash_decode(q, ck, cv, base, ancestors=words, base=base,
+                        bkv=ps, interpret=True)
+    mp = S // ps
+    pages = (jnp.arange(B, dtype=jnp.int32)[:, None] * mp
+             + jnp.arange(mp, dtype=jnp.int32)[None, :])
+    got = flash_decode_paged(
+        q, ck.reshape(B * S, nkv, hd), cv.reshape(B * S, nkv, hd),
+        base, pages, page_size=ps, ancestors=words, base=base, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_decode_paged_scattered_table_relocates_pages():
+    """A permuted (non-identity) block table must read the same logical
+    prefix from the scattered physical pages — equality against the
+    contiguous kernel on the unpermuted cache."""
+    from repro.kernels.flash_attention import flash_decode, flash_decode_paged
+
+    rng = np.random.default_rng(2)
+    ps = 8
+    B, Tn, nq, nkv, hd, S = 2, 2, 4, 2, 16, 32
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    idx = jnp.asarray([9, 21], jnp.int32)
+    want = flash_decode(q, ck, cv, idx, bkv=ps, interpret=True)
+
+    mp = S // ps
+    P = B * mp
+    perm = np.random.default_rng(3).permutation(P)
+    pool_k = np.zeros((P * ps, nkv, hd), np.float32)
+    pool_v = np.zeros((P * ps, nkv, hd), np.float32)
+    flat_k = np.asarray(ck).reshape(P, ps, nkv, hd)
+    flat_v = np.asarray(cv).reshape(P, ps, nkv, hd)
+    for lp in range(P):
+        pp = perm[lp]
+        pool_k[pp * ps:(pp + 1) * ps] = flat_k[lp]
+        pool_v[pp * ps:(pp + 1) * ps] = flat_v[lp]
+    pages = jnp.asarray(perm.reshape(B, mp), jnp.int32)
+    got = flash_decode_paged(
+        q, jnp.asarray(pool_k), jnp.asarray(pool_v), idx, pages,
+        page_size=ps, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# model: paged chain path == contiguous path, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ps", [8, 16])
+def test_paged_chain_decode_bitwise_equals_contiguous(ps):
+    """paginate_cache + the identity table reproduce contiguous
+    decode_tokens bit-for-bit — the acceptance bar for making paged the
+    serve default."""
+    Tn = 4
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=Tn, page_size=ps)
+    B, S = 2, 8
+    max_len = 32  # a whole number of pages at both parametrized sizes
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = m.init_cache(B, max_len)
+    _, cache = jax.jit(m.prefill)(params, prompts, cache)
+    draft = jax.random.randint(jax.random.PRNGKey(2), (B, Tn), 0, cfg.vocab_size)
+    lens = jnp.full((B,), S, jnp.int32)
+    acc = jnp.zeros((B,), jnp.int32)
+    lg_c, _ = jax.jit(m.decode_tokens)(params, cache, draft, lens, acc)
+
+    pm = Model(dataclasses.replace(cfg, paged=True))
+    pcache = pm.paginate_cache(cache, max_len)
+    pages = T.identity_page_table(pm.cfg, B, max_len)
+    lg_p, _ = jax.jit(pm.decode_tokens)(
+        params, pcache, draft, lens, acc, pages=pages
+    )
+    np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+
+
+def test_paged_rolling_chain_crosses_wrap_bitwise():
+    """Rolling-window layers stay modulo-addressed under cfg.paged; decoding
+    across the wrap point must be bitwise-identical to the unpaged config
+    (the paged plane only changes global-attention layers)."""
+    W, Tn = 8, 2
+    cfg = _local_cfg(local_window=W, spec_tokens=Tn, page_size=8)
+    B, S = 2, 6
+    max_len = 16
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = m.init_cache(B, max_len)
+    _, cache = jax.jit(m.prefill)(params, prompts, cache)
+    pm = Model(dataclasses.replace(cfg, paged=True))
+    pcache = pm.paginate_cache(cache, max_len)
+    pages = T.identity_page_table(pm.cfg, B, max_len)
+
+    dt_c = jax.jit(m.decode_tokens)
+    dt_p = jax.jit(pm.decode_tokens)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 3, Tn), 0, cfg.vocab_size)
+    for i in range(3):  # positions 6..11 cross the wrap at W=8
+        lens = jnp.full((B,), S + i * Tn, jnp.int32)
+        acc = jnp.full((B,), 0 if i == 0 else Tn - 1, jnp.int32)
+        lg_c, cache = dt_c(params, cache, toks[:, i], lens, acc)
+        lg_p, pcache = dt_p(params, pcache, toks[:, i], lens, acc, pages=pages)
+        np.testing.assert_array_equal(
+            np.asarray(lg_c), np.asarray(lg_p), err_msg=f"launch {i}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# serve: trees on rolling-window layers (un-banned), zero-copy admission,
+# fused commit
+# ---------------------------------------------------------------------------
+
+
+def _sequential_greedy(cfg, params, prompt, gen, max_len):
+    c1 = dataclasses.replace(cfg, spec_tokens=1, paged=False)
+    m1 = Model(c1)
+    cache = m1.init_cache(1, max_len)
+    lg, cache = jax.jit(m1.prefill)(params, jnp.asarray(prompt)[None], cache)
+    tok = int(jnp.argmax(lg[0]))
+    out = [tok]
+    dec = jax.jit(m1.decode_step)
+    for i in range(gen):
+        lg, cache = dec(params, cache, jnp.asarray([tok], jnp.int32),
+                        jnp.int32(len(prompt) + i))
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+    return out
+
+
+def _drain(rep):
+    done = {}
+    while rep.has_work():
+        for r in rep.step():
+            done[r.rid] = r.tokens
+    return done
+
+
+def test_tree_draft_on_rolling_window_layers_matches_sequential_greedy():
+    """Satellite regression: a width-2 draft tree on local-attention
+    (rolling-window) layers serves through the paged plane and reproduces
+    sequential greedy — the configuration PR 5 had to ban."""
+    from repro.core.plans import TreePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica
+
+    tree = TreePlan.from_branching([2, 1]).validate()
+    gen, S, W = 6, 6, 8
+    cfg = _local_cfg(local_window=W, spec_tokens=tree.num_nodes,
+                     paged=True, page_size=4)
+    max_len = S + gen + tree.num_nodes
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=S).astype(np.int32)
+
+    rep = ServeReplica(cfg, mesh, 1, max_len, params, tree=tree)
+    assert rep._commit is None  # paged commit is fused — no compaction launch
+    rep.admit(Request(rid=0, prompt=prompt, gen=gen))
+    done = _drain(rep)
+    assert done[0] == _sequential_greedy(cfg, params, prompt, gen, max_len)
+
+
+def test_tree_draft_on_rolling_window_still_banned_without_paging():
+    """The chain fallback (and the explicit error for branchy trees) stays
+    for the non-paged legacy path."""
+    from repro.core.plans import TreePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica
+
+    tree = TreePlan.from_branching([2, 1]).validate()
+    cfg = _local_cfg(local_window=8, spec_tokens=tree.num_nodes, paged=False)
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    rep = ServeReplica(cfg, mesh, 1, 20, params, tree=tree)
+    rep.admit(Request(rid=0, prompt=np.arange(6, dtype=np.int32), gen=4))
+    with pytest.raises(NotImplementedError, match="paged"):
+        rep.step()
+
+
+def test_paged_serve_shares_prefix_pages_and_admits_with_zero_copies():
+    """Two requests with the same prompt: the second admission binds every
+    full prompt page straight from the prefix trie (zero KV rows copied),
+    and both streams still equal sequential greedy."""
+    from repro.core.plans import TreePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica
+
+    tree = TreePlan.from_branching([2, 1]).validate()
+    gen, S = 5, 8
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=tree.num_nodes,
+                   paged=True, page_size=4)
+    max_len = S + gen + tree.num_nodes
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=S).astype(np.int32)
+
+    rep = ServeReplica(cfg, mesh, 2, max_len, params, tree=tree)
+    rep.admit(Request(rid=0, prompt=prompt, gen=gen))
+    first_copy = rep.admit_copy_rows
+    assert first_copy == S           # cold admission copies the prompt rows
+    rep.admit(Request(rid=1, prompt=prompt.copy(), gen=gen))
+    assert rep.pages_shared_total == S // cfg.page_size
+    assert rep.admit_copy_rows == first_copy  # trie hit: ZERO rows copied
+
+    done = _drain(rep)
+    want = _sequential_greedy(cfg, params, prompt, gen, max_len)
+    assert done[0] == want and done[1] == want
+
+    st = rep.paged_stats()
+    assert st["pages_shared_per_admission"] == pytest.approx(1.0)
+    assert st["trie_nodes"] >= 2
+
+
+def test_paged_retirement_recycles_pages_for_later_admissions():
+    """More requests than slots: retired slots must free their private pages
+    (trie-shared ones stay resident) so later admissions find room."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica
+
+    gen, S = 4, 8
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=2, paged=True, page_size=4)
+    max_len = S + gen + 2
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=S).astype(np.int32)
+               for _ in range(3)]
+
+    rep = ServeReplica(cfg, mesh, 1, max_len, params)
+    done = {}
+    for rid, p in enumerate(prompts):
+        rep.admit(Request(rid=rid, prompt=p, gen=gen))
+        done.update(_drain(rep))
+    for rid, p in enumerate(prompts):
+        assert done[rid] == _sequential_greedy(cfg, params, p, gen, max_len)
+    assert (rep.pager.table == -1).all()  # every slot reference released
+
+
+# ---------------------------------------------------------------------------
+# fabric: crash -> re-warm of pages + block table + trie, byte-identical
+# ---------------------------------------------------------------------------
+
+
+def test_paged_fabric_crash_rejoin_byte_identical(tmp_path):
+    """A paged replica crashes mid-decode; the rejoining replica re-warms by
+    replaying admission (page allocation is deterministic, so the block
+    table and trie rebuild exactly) and every stream matches the
+    fault-free sequential oracle.  The checkpoint ledger carries the pager
+    and trie snapshots for direct restore."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.pages import PageTable, PrefixTrie
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import degrade_ladder, make_replica_factory
+    from repro.runtime.faults import FaultInjector, parse_faults
+
+    gen, S, width = 5, 8, 3
+    cfg = _moe_cfg(decode_plane=True, spec_tokens=width, paged=True, page_size=4)
+    max_len = S + gen + width
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    requests = [
+        Request(rid=i,
+                prompt=np.concatenate(
+                    [shared, rng.integers(0, cfg.vocab_size, size=S - 4)]
+                ).astype(np.int32),
+                gen=gen)
+        for i in range(3)
+    ]
+    oracle = {
+        r.rid: _sequential_greedy(cfg, params, r.prompt, gen, max_len)
+        for r in requests
+    }
+
+    ckpt = CheckpointManager(tmp_path / "fab", keep=2)
+    inj = FaultInjector(parse_faults("crash@step=3"))
+    ladder = degrade_ladder(None, width)
+    make = make_replica_factory(
+        cfg, mesh, 2, max_len, params, ladder,
+        fault_hook=inj.check, launch_timeout=30.0, ckpt=ckpt,
+    )
+    fabric = ServeFabric(
+        make, list(requests),
+        FabricConfig(n_replicas=1, launch_timeout=30.0, checkpoint_every=2,
+                     synthetic_step_times=True),
+        ckpt=ckpt, params=params,
+    )
+    results = fabric.run()
+    assert fabric.stats["crashes"] == 1 and fabric.stats["rejoins"] == 1
+    assert fabric.stats["dropped"] == 0 and fabric.stats["duplicates"] == 0
+    for r in requests:
+        assert results[r.rid].error is None
+        assert results[r.rid].tokens == oracle[r.rid], f"rid {r.rid} diverged"
+    assert fabric.stats["pages_shared"] > 0  # prefix sharing survived faults
+
+    _, _, _, extra = ckpt.restore({}, {})
+    meta = next(iter(extra["ledger"].values()))
+    pt = PageTable.from_snapshot(meta["pager"])
+    trie = PrefixTrie.from_snapshot(meta["trie"])
+    assert pt.table.shape == (2, -(-max_len // cfg.page_size))
+    assert trie.nodes >= 1

@@ -1,0 +1,220 @@
+"""Paged KV plane, host side: the deterministic page allocator, the prefix
+trie that shares full prompt pages across requests, and the pointer-rewired
+tree-commit maps.
+
+The contracts under test:
+
+* allocation is DETERMINISTIC (lowest free id first) — the property the
+  fabric's crash-rejoin byte-identity rests on: replaying the admission
+  ledger reproduces the exact block table;
+* refcounts make sharing safe: a shared page survives its original slot's
+  retirement as long as the trie (or another slot) holds it, and
+  copy-on-write rebinds before a divergent write;
+* the free list recycles retired pages, and trie eviction (oldest
+  shareable leaf first) turns a full pool back into allocatable space;
+* snapshots round-trip through :class:`CheckpointManager` with no drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.pages import PageTable, PoolExhausted, PrefixTrie, commit_maps
+
+
+def _prompt(seed: int, n: int, vocab: int = 97) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# PageTable: deterministic allocation, refcounts, CoW, free-list reuse
+# ---------------------------------------------------------------------------
+
+
+def test_allocation_is_deterministic_lowest_id_first():
+    """Two tables fed the identical op sequence end byte-identical — and the
+    ids handed out are always the lowest free ones (replay determinism)."""
+    def run():
+        pt = PageTable(slots=3, max_pages=4, num_pages=12, page_size=4)
+        pt.ensure(0, 9)    # pages 0, 1, 2
+        pt.ensure(1, 4)    # page 3
+        pt.free_slot(0)    # 0, 1, 2 return to the free list
+        pt.ensure(2, 6)    # reuses 0, 1 (lowest first)
+        pt.ensure(0, 2)    # reuses 2
+        return pt
+
+    a, b = run(), run()
+    np.testing.assert_array_equal(a.table, b.table)
+    np.testing.assert_array_equal(a.refcounts, b.refcounts)
+    assert list(a.table[2, :2]) == [0, 1]
+    assert a.table[0, 0] == 2
+
+
+def test_ensure_is_idempotent_and_reports_fresh_pages():
+    pt = PageTable(slots=1, max_pages=4, num_pages=4, page_size=4)
+    assert pt.ensure(0, 7) == 2     # two fresh pages cover positions [0, 7)
+    assert pt.ensure(0, 7) == 0     # already covered
+    assert pt.ensure(0, 9) == 1     # one more page for position 8
+    assert pt.allocated_pages() == 3
+
+
+def test_refcounts_share_and_copy_on_write_on_divergence():
+    """Adopting a page shares it (refcount 2); the first divergent write goes
+    through ensure_writable, which rebinds the writer to a private page and
+    hands back the old id for the row copy."""
+    pt = PageTable(slots=2, max_pages=2, num_pages=4, page_size=4)
+    pt.ensure(0, 8)
+    shared = int(pt.table[0, 0])
+    pt.adopt(1, 0, shared)
+    assert pt.refcounts[shared] == 2
+    old = pt.ensure_writable(1, 0)
+    assert old == shared
+    fresh = int(pt.table[1, 0])
+    assert fresh != shared and pt.refcounts[shared] == 1 and pt.refcounts[fresh] == 1
+    # already private: no-op
+    assert pt.ensure_writable(1, 0) is None
+    assert int(pt.table[1, 0]) == fresh
+
+
+def test_free_list_reuse_after_retirement():
+    """Retiring a slot returns its pages; the next admission gets the lowest
+    retired id back instead of growing the pool footprint."""
+    pt = PageTable(slots=2, max_pages=2, num_pages=4, page_size=4)
+    pt.ensure(0, 8)          # pages 0, 1
+    pt.ensure(1, 8)          # pages 2, 3
+    assert pt.allocated_pages() == 4
+    pt.free_slot(0)
+    assert pt.allocated_pages() == 2
+    assert (pt.table[0] == -1).all()
+    pt.ensure(0, 4)
+    assert int(pt.table[0, 0]) == 0  # lowest freed id recycled
+    with pytest.raises(PoolExhausted):
+        pt2 = PageTable(slots=1, max_pages=4, num_pages=1, page_size=4)
+        pt2.ensure(0, 8)
+
+
+# ---------------------------------------------------------------------------
+# PrefixTrie: cross-request sharing, refcounts, eviction under pressure
+# ---------------------------------------------------------------------------
+
+
+def test_trie_probe_matches_longest_full_page_prefix():
+    ps = 4
+    pt = PageTable(slots=2, max_pages=4, num_pages=8, page_size=ps)
+    trie = PrefixTrie(ps)
+    prompt = _prompt(0, 10)          # 2 full pages + a 2-token tail
+    pt.ensure(0, len(prompt))
+    own = [int(pt.table[0, i]) for i in range(len(prompt) // ps)]
+    assert trie.insert(prompt, own, pt) == 2
+    assert all(pt.refcounts[p] == 2 for p in own)   # slot ref + trie ref
+
+    # identical prompt: both full pages match; probe increfs for the caller
+    got = trie.probe(prompt, pt)
+    assert got == own
+    assert all(pt.refcounts[p] == 3 for p in own)
+
+    # diverge inside the second page: only the first page matches
+    div = prompt.copy()
+    div[ps + 1] = (div[ps + 1] + 1) % 97
+    assert trie.probe(div, pt) == own[:1]
+
+    # the 2-token tail is not a full page and must never be shared
+    assert trie.probe(prompt[: ps + 2], pt) == own[:1]
+
+
+def test_trie_keeps_pages_alive_past_retirement_and_evicts_under_pressure():
+    """A retired request's published pages stay resident for future sharers;
+    once the pool runs dry, eviction drops the oldest trie-only leaf and
+    allocation proceeds — and raises PoolExhausted with no evictor."""
+    ps = 4
+    pt = PageTable(slots=1, max_pages=2, num_pages=2, page_size=ps)
+    trie = PrefixTrie(ps)
+    first = _prompt(1, 8)
+    pt.ensure(0, 8)
+    trie.insert(first, [int(pt.table[0, i]) for i in range(2)], pt)
+    pt.free_slot(0)
+    assert pt.allocated_pages() == 2     # trie-only residency, nothing free
+    assert pt.refcounts.tolist() == [1, 1]
+
+    with pytest.raises(PoolExhausted):
+        pt.alloc()                        # no evictor -> hard failure
+    # a different prompt admits by evicting trie leaves (oldest first)
+    assert pt.ensure(0, 8, evict=lambda: trie.evict_one(pt)) == 2
+    assert trie.nodes == 0
+    assert not trie.evict_one(pt)         # nothing left to evict
+
+
+def test_trie_eviction_spares_pages_still_referenced_by_slots():
+    ps = 4
+    pt = PageTable(slots=2, max_pages=1, num_pages=2, page_size=ps)
+    trie = PrefixTrie(ps)
+    prompt = _prompt(2, 4)
+    pt.ensure(0, 4)
+    trie.insert(prompt, [int(pt.table[0, 0])], pt)
+    # slot 0 still references its page (rc 2): the leaf is not evictable
+    assert not trie.evict_one(pt)
+    pt.free_slot(0)
+    assert trie.evict_one(pt)
+
+
+# ---------------------------------------------------------------------------
+# telemetry + commit maps
+# ---------------------------------------------------------------------------
+
+
+def test_occupancy_and_fragmentation_counters():
+    pt = PageTable(slots=2, max_pages=4, num_pages=8, page_size=4)
+    pt.ensure(0, 6)        # 2 pages allocated, 6 rows used
+    assert pt.occupancy() == pytest.approx(2 / 8)
+    assert pt.fragmentation([6]) == pytest.approx(1 - 6 / 8)
+    pt.ensure(1, 8)        # fully used pages add no fragmentation
+    assert pt.fragmentation([6, 8]) == pytest.approx(1 - 14 / 16)
+
+
+def test_commit_maps_moves_only_out_of_place_accepted_nodes():
+    lengths = np.asarray([5, 9, 3], np.int32)
+    #          slot 0: path (0, 2, 3) — nodes 2, 3 out of place
+    #          slot 1: chain-shaped path (0, 1) — nothing moves
+    #          slot 2: parked (accepts 0) — all sentinels
+    paths = np.asarray([[0, 2, 3, 0], [0, 1, 0, 0], [0, 0, 0, 0]], np.int32)
+    accepts = np.asarray([3, 2, 0], np.int32)
+    dst, src = commit_maps(lengths, paths, accepts, 4)
+    np.testing.assert_array_equal(dst[0], [-1, 5 + 1, 5 + 2, -1])
+    np.testing.assert_array_equal(src[0], [-1, 5 + 2, 5 + 3, -1])
+    assert (dst[1] == -1).all() and (src[1] == -1).all()
+    assert (dst[2] == -1).all() and (src[2] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# snapshots: byte-exact round trip through the CheckpointManager
+# ---------------------------------------------------------------------------
+
+
+def test_page_table_and_trie_roundtrip_through_checkpoint_manager(tmp_path):
+    """The pager + trie ride a fabric snapshot's ``extra`` ledger; restoring
+    must reproduce the table, refcounts, free-list order, and trie matches
+    exactly (the crash-rejoin byte-identity contract)."""
+    from repro.checkpoint import CheckpointManager
+
+    ps = 4
+    pt = PageTable(slots=2, max_pages=3, num_pages=6, page_size=ps)
+    trie = PrefixTrie(ps)
+    prompt = _prompt(3, 8)
+    pt.ensure(0, 8)
+    trie.insert(prompt, [int(pt.table[0, i]) for i in range(2)], pt)
+    pt.ensure(1, 5)
+    pt.free_slot(1)        # leaves a hole so free-list order is non-trivial
+
+    mgr = CheckpointManager(tmp_path / "ck", keep=2)
+    mgr.save(1, {}, {}, extra={"pager": pt.snapshot(), "trie": trie.snapshot()})
+    _, _, step, extra = mgr.restore({}, {})
+    assert step == 1
+
+    rt = PageTable.from_snapshot(extra["pager"])
+    np.testing.assert_array_equal(rt.table, pt.table)
+    np.testing.assert_array_equal(rt.refcounts, pt.refcounts)
+    assert rt.alloc() == pt.alloc()    # identical free-list ordering
+
+    rtrie = PrefixTrie.from_snapshot(extra["trie"])
+    assert rtrie.nodes == trie.nodes
+    assert rtrie.probe(prompt, rt) == trie.probe(prompt, pt)

@@ -207,6 +207,79 @@ def test_admission_into_full_slot_pool(replica_env):
         assert len(by_rid[rid].tokens) == 1 + gen
 
 
+# ---------------------------------------------------------------------------
+# paged plane telemetry: occupancy / sharing / fragmentation per round
+# ---------------------------------------------------------------------------
+
+
+def _mk_paged_replica(env, slots, *, telemetry=False):
+    from repro.launch.serve import ServeReplica
+
+    cfg = dataclasses.replace(env["cfg"], paged=True, page_size=4)
+    return ServeReplica(
+        cfg, env["mesh"], slots, env["max_len"], env["params"],
+        telemetry=telemetry,
+    )
+
+
+def _same_prompt_req(rid, length=8, gen=4):
+    from repro.runtime.fabric import Request
+
+    rng = np.random.default_rng(99)  # same seed: identical prompts
+    return Request(
+        rid=rid, prompt=rng.integers(0, 256, size=length).astype(np.int32),
+        gen=gen,
+    )
+
+
+def test_paged_stats_track_occupancy_sharing_and_fragmentation(replica_env):
+    rep = _mk_paged_replica(replica_env, slots=2)
+    rep.admit(_same_prompt_req(0))
+    st = rep.paged_stats()
+    assert st["admissions"] == 1 and st["pages_shared_total"] == 0
+    assert st["allocated_pages"] == 2  # 8-token prompt at page_size 4
+    assert st["occupancy"] == pytest.approx(
+        st["allocated_pages"] / rep.pager.num_pages
+    )
+    assert st["admit_copy_rows"] == 8
+
+    rep.admit(_same_prompt_req(1))  # identical prompt: full trie hit
+    st = rep.paged_stats()
+    assert st["admissions"] == 2 and st["pages_shared_total"] == 2
+    assert st["pages_shared_per_admission"] == pytest.approx(1.0)
+    assert st["admit_copy_rows"] == 8  # second admission copied nothing
+    assert st["allocated_pages"] == 2  # both slots share the same two pages
+    assert 0.0 <= st["fragmentation"] <= 1.0
+    assert st["trie_nodes"] == 2
+
+
+def test_paged_telemetry_prints_per_scheduler_round(replica_env, capsys):
+    rep = _mk_paged_replica(replica_env, slots=2, telemetry=True)
+    rep.admit(_same_prompt_req(0, gen=2))
+    rep.step()
+    out = capsys.readouterr().out
+    assert "paged:" in out
+    for field in ("occupancy", "shared/admission", "fragmentation"):
+        assert field in out, f"missing telemetry field {field!r}: {out}"
+
+
+def test_fabric_absorbs_paged_counters(replica_env):
+    from repro.runtime.fabric import FabricConfig, ServeFabric
+
+    fabric = ServeFabric(
+        lambda w, level, params, shrunk: _mk_paged_replica(replica_env, slots=2),
+        [_same_prompt_req(30), _same_prompt_req(31)],
+        FabricConfig(n_replicas=1, max_rounds=50),
+    )
+    results = fabric.run()
+    assert all(r.error is None for r in results.values())
+    assert fabric.stats["paged_admissions"] == 2
+    assert fabric.stats["pages_shared"] == 2
+    assert fabric.stats["admit_copy_rows"] == 8
+    # identical prompts + greedy decode: identical streams
+    assert results[30].tokens == results[31].tokens
+
+
 def test_queue_exhaustion_with_idle_slots_terminates(replica_env):
     """Fewer requests than slots: the fabric must drain and stop cleanly
     (no spin waiting for prompts that will never arrive), with every

@@ -282,3 +282,74 @@ def test_sharded_serve_loop_matches_single_host_with_admission_and_rollback():
     """)
     out = run_subprocess_devices(code, n_devices=8)
     assert "OK" in out
+
+
+def test_sharded_paged_decode_tokens_match_single_host():
+    """Paged KV plane on forced 8-device meshes: the flat page pools shard
+    over `model` (no batch axis) while the block tables replicate, and the
+    chain decode path stays TOKEN-IDENTICAL to the single-host contiguous
+    plane across a rollback-shaped relaunch."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCell
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.steps import build_spec_serve_step
+        from repro.models.model import Model
+        from repro.models import transformer as T
+
+        Tn = 2
+        cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                                  decode_plane=True, spec_tokens=Tn,
+                                  paged=True, page_size=8)
+        B, S = 4, 16
+        max_len = 24  # three pages per slot
+        host = Model(dataclasses.replace(cfg, paged=False))
+        params_h = host.init(jax.random.PRNGKey(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+        # single-host contiguous reference: two launches incl. a rollback shape
+        cache = host.init_cache(B, max_len)
+        lg, cache = jax.jit(host.prefill)(params_h, prompts, cache)
+        t0 = jnp.argmax(lg, -1).astype(jnp.int32)
+        dh = jax.jit(host.decode_tokens)
+        launches = []
+        draft = jnp.tile(t0[:, None], (1, Tn))
+        lens = jnp.full((B,), S, jnp.int32)
+        acc = jnp.zeros((B,), jnp.int32)
+        lgh, cache = dh(params_h, cache, draft, lens, acc)
+        launches.append((draft, lens, acc, np.argmax(np.asarray(lgh), -1)))
+        nxt = jnp.asarray(launches[0][3][:, :1])
+        draft2 = jnp.tile(nxt, (1, Tn))
+        launches.append((draft2, jnp.full((B,), S + 1, jnp.int32),
+                         jnp.zeros((B,), jnp.int32), None))
+        lgh2, cache = dh(params_h, cache, *launches[1][:3])
+        launches[1] = launches[1][:3] + (np.argmax(np.asarray(lgh2), -1),)
+
+        # paged single-host prefill state, re-sharded onto each mesh
+        pm = Model(cfg)
+        pcache_h = None
+        pages_h = T.identity_page_table(cfg, B, max_len)
+        for dm in ((1, 2), (2, 4)):
+            mesh = make_host_mesh(*dm)
+            with mesh:
+                bundle = build_spec_serve_step(cfg, mesh, ShapeCell("d", max_len, B, "decode"))
+                params = jax.device_put(params_h, bundle.in_shardings[0])
+                if pcache_h is None:
+                    ccache = host.init_cache(B, max_len)
+                    _, ccache = jax.jit(host.prefill)(params_h, prompts, ccache)
+                    pcache_h = jax.device_get(pm.paginate_cache(ccache, max_len))
+                c = jax.device_put(pcache_h, bundle.in_shardings[1])
+                pages = jax.device_put(pages_h, bundle.in_shardings[5])
+                step = bundle.jit()
+                for i, (dr, ln, ac, want) in enumerate(launches):
+                    lgx, c = step(params, c, dr, ln, ac, pages)
+                    got = np.argmax(np.asarray(lgx), -1)
+                    assert np.array_equal(got, want), \\
+                        f"mesh={dm} launch {i}: paged tokens diverge"
+            print(f"mesh {dm} ok")
+        print("OK")
+    """)
+    out = run_subprocess_devices(code, n_devices=8)
+    assert "OK" in out
