@@ -549,6 +549,115 @@ def _bench_fabric(cfg) -> dict:
     }
 
 
+def _bench_xproc(cfg) -> dict:
+    """The cross-process fabric's recovery ledger, three ways.
+
+    * ``loopback`` — the supervisor and worker loops share a ManualClock, so
+      the heartbeat-liveness verdict is exact: a worker killed mid-stream is
+      declared dead after precisely ``heartbeat_miss_limit`` missed
+      deadlines, its in-flight requests re-enqueued, and every stream stays
+      byte-identical with zero drops / duplicates.
+    * ``admission`` — deadline-aware admission and backpressure: a request
+      whose deadline lapses in the queue is answered without ever costing a
+      launch, and submissions past the queue high-water mark are shed with
+      an error, all as exact ledger counts.
+    * ``process`` — the same supervisor over REAL OS worker processes
+      (multiprocessing spawn + pipes); worker 0 SIGKILLs its own pid and the
+      only death detector is the heartbeat deadline.  Wall-clock-dependent
+      counters (miss totals) are excluded; the recovery counts and the
+      byte-identity bit are structural.
+
+    ``cfg`` is unused (synthetic replicas): the fabric contract under test
+    is supervision, not decode — the real-model cross-process byte-identity
+    run lives in tests/test_serve_fabric.py.
+    """
+    del cfg
+    from repro.runtime.fabric import CrossProcessFabric, Request, XFabricConfig
+    from repro.runtime.faults import parse_faults
+    from repro.runtime.transport import ManualClock, MonotonicClock, make_process_spawn
+    from repro.runtime.worker import SyntheticReplica, make_loopback_spawn
+
+    gen = 5
+
+    def expected(rid):
+        return [rid * 1000 + i for i in range(gen + 1)]
+
+    def loopback_run(faults, n_req, *, queue_limit=0, deadlines=None):
+        clock = ManualClock()
+        spawn = make_loopback_spawn(
+            lambda w, inc: SyntheticReplica(2, replica_id=w), clock,
+            heartbeat_every=1.0,
+        )
+        reqs = [Request(rid=i, prompt=[0, 1], gen=gen) for i in range(n_req)]
+        for rid, dl in (deadlines or {}).items():
+            reqs[rid].deadline = dl
+        fab = CrossProcessFabric(
+            spawn, reqs,
+            XFabricConfig(
+                workers=2, slots_per_worker=2, heartbeat_every=1.0,
+                heartbeat_miss_limit=4, spawn_grace=0.0, poll_every=1.0,
+                queue_limit=queue_limit, max_rounds=10_000,
+            ),
+            clock=clock, specs=parse_faults(faults),
+        )
+        return fab.run(), fab.stats
+
+    # (a) heartbeat-detected kill, deterministic to the exact missed beat
+    res, st = loopback_run("kill@step=3:replica=0", 6)
+    lb_identical = int(all(
+        res[i].error is None and res[i].tokens == expected(i) for i in range(6)
+    ))
+    loopback = {
+        "workers": 2, "requests": 6,
+        "kills": st["kills"],
+        "heartbeat_misses": st["heartbeat_misses"],
+        "heartbeat_miss_limit": 4,
+        "requeued": st["requeued"],
+        "spawns": st["spawns"],
+        "streams_byte_identical": lb_identical,
+        "requests_dropped": st["dropped"],
+        "duplicate_results": st["duplicates"],
+    }
+
+    # (b) deadline + backpressure admission ledger
+    res, st = loopback_run("", 8, queue_limit=5, deadlines={4: 1.0})
+    admission = {
+        "deadline_expired": st["deadline_expired"],
+        "backpressure_rejects": st["backpressure_rejects"],
+        "served": sum(1 for r in res.values() if r.error is None),
+        "answered": len(res),
+        "launches_for_expired": 0 if "queued" in (res[4].error or "") else 1,
+    }
+
+    # (c) real OS worker processes, SIGKILL mid-stream
+    spawn = make_process_spawn(dict(kind="synthetic", slots=2, heartbeat_every=0.1))
+    reqs = [Request(rid=i, prompt=[0, 1], gen=gen) for i in range(4)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(
+            workers=2, slots_per_worker=2, heartbeat_every=0.1,
+            heartbeat_miss_limit=20, spawn_grace=60.0, poll_every=0.02,
+            max_rounds=500_000,
+        ),
+        clock=MonotonicClock(), specs=parse_faults("kill@step=3:replica=0"),
+    )
+    res = fab.run()
+    st = fab.stats
+    proc_identical = int(all(
+        res[i].error is None and res[i].tokens == expected(i) for i in range(4)
+    ))
+    process = {
+        "workers": 2, "requests": 4,
+        "kills": st["kills"],
+        "requeued": st["requeued"],
+        "spawns": st["spawns"],
+        "streams_byte_identical": proc_identical,
+        "requests_dropped": st["dropped"],
+        "duplicate_results": st["duplicates"],
+    }
+    return {"loopback": loopback, "admission": admission, "process": process}
+
+
 # ---------------------------------------------------------------------------
 # paged KV plane: block-table indirection, zero-copy admission, fused commit
 # ---------------------------------------------------------------------------
@@ -827,6 +936,7 @@ def run() -> dict:
         "tree": _bench_tree(cfg),
         "rolling": _bench_rolling(cfg),
         "fabric": _bench_fabric(cfg),
+        "xproc": _bench_xproc(cfg),
         "paged": _bench_paged(cfg),
     }
     if sharded is not None:
@@ -923,6 +1033,36 @@ def main() -> None:
         f"ladder {fb['degrade_ladder_taken']}; "
         f"dropped {fb['requests_dropped_under_faults']}, duplicates {fb['duplicate_results']}, "
         f"streams byte-identical: {bool(fb['streams_byte_identical'])}"
+    )
+
+    xp = results["xproc"]
+    lb, adm, pr = xp["loopback"], xp["admission"], xp["process"]
+    assert lb["kills"] == 1 and lb["heartbeat_misses"] == lb["heartbeat_miss_limit"], (
+        "loopback death must be declared at exactly the miss limit", lb,
+    )
+    assert lb["streams_byte_identical"] == 1 and pr["streams_byte_identical"] == 1, (
+        "cross-process streams must be byte-identical after recovery", xp,
+    )
+    assert lb["requests_dropped"] == 0 and lb["duplicate_results"] == 0, lb
+    assert pr["requests_dropped"] == 0 and pr["duplicate_results"] == 0, pr
+    assert pr["kills"] == 1 and pr["spawns"] == 3, (
+        "the SIGKILL'd OS worker must be detected and replaced", pr,
+    )
+    assert adm["deadline_expired"] == 1 and adm["launches_for_expired"] == 0, (
+        "a queue-expired deadline must cost no launch", adm,
+    )
+    assert adm["backpressure_rejects"] == 3 and adm["answered"] == 8, adm
+    print(
+        f"# xproc (loopback {lb['workers']} workers / {lb['requests']} requests): "
+        f"{lb['kills']} kill detected at exactly "
+        f"{lb['heartbeat_misses']}/{lb['heartbeat_miss_limit']} missed heartbeats, "
+        f"{lb['requeued']} re-queued, {lb['spawns']} spawns; "
+        f"admission: {adm['deadline_expired']} deadline-expired (0 launches), "
+        f"{adm['backpressure_rejects']} backpressure rejects, "
+        f"{adm['answered']}/8 answered; "
+        f"process: SIGKILL'd OS worker -> {pr['kills']} kill, {pr['spawns']} spawns, "
+        f"dropped {pr['requests_dropped']}, duplicates {pr['duplicate_results']}, "
+        f"byte-identical: {bool(pr['streams_byte_identical'])}"
     )
 
     pg = results["paged"]

@@ -1,1 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    TornCheckpointError,
+    restore_tree,
+    save_tree,
+)

@@ -5,6 +5,16 @@ Atomicity: a step is written into ``<dir>/tmp.step_N``, fsynced, then
 renamed to ``<dir>/step_N`` — a crash mid-write never corrupts the latest
 restorable step (restore scans for the largest *committed* step).
 
+Torn-snapshot recovery: the rename makes commits atomic on a sane
+filesystem, but a worker can still find a truncated committed step after a
+hard machine crash (rename visible, data blocks not) or operator damage.
+``restore`` therefore treats the latest step as a *candidate*: if its
+manifest or any leaf file is unreadable/truncated (``TornCheckpointError``),
+it falls back to the next-newest complete step instead of raising — a
+re-warming replica always gets the freshest snapshot that actually loads.
+Shape mismatches still raise: those are caller errors (wrong abstract
+tree), not torn data.
+
 Elastic restore: leaves are loaded host-side and ``jax.device_put`` with the
 TARGET mesh's shardings, so a checkpoint taken on (data=16, model=16) restores
 cleanly onto (data=8, model=16) after losing a rack — the runtime.elastic test
@@ -20,6 +30,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class TornCheckpointError(Exception):
+    """A committed step directory is unreadable or truncated (crash damage)."""
 
 
 def _jsonify(obj: Any) -> Any:
@@ -61,10 +75,20 @@ def restore_tree(step_dir: Path, abstract: Any, manifest_files: List[dict], *, s
     shard_leaves = (
         treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves_abs)
     )
+    if len(manifest_files) < len(leaves_abs):
+        raise TornCheckpointError(
+            f"manifest lists {len(manifest_files)} leaves, expected {len(leaves_abs)}"
+        )
     out = []
     for i, (leaf, shard) in enumerate(zip(leaves_abs, shard_leaves)):
         rec = manifest_files[i]
-        arr = np.load(step_dir / rec["file"])
+        try:
+            arr = np.load(step_dir / rec["file"])
+        except (OSError, EOFError, ValueError) as err:
+            # missing or truncated leaf file — torn data, not a caller error
+            raise TornCheckpointError(
+                f"checkpoint leaf {rec.get('name', rec.get('file'))} unreadable: {err}"
+            ) from err
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"checkpoint leaf {rec['name']} shape {arr.shape} != expected {tuple(leaf.shape)}"
@@ -132,6 +156,25 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _restore_step(
+        self,
+        step: int,
+        abstract_params: Any,
+        abstract_opt: Any,
+        param_shardings: Any,
+        opt_shardings: Any,
+    ) -> Tuple[Any, Any, int, Dict]:
+        d = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            files_p = manifest["params"]
+            files_o = manifest["opt_state"]
+        except (OSError, json.JSONDecodeError, KeyError, TypeError) as err:
+            raise TornCheckpointError(f"manifest for step {step} unreadable: {err}") from err
+        params = restore_tree(d, abstract_params, files_p, shardings=param_shardings)
+        opt = restore_tree(d, abstract_opt, files_o, shardings=opt_shardings)
+        return params, opt, manifest["step"], manifest.get("extra", {})
+
     def restore(
         self,
         abstract_params: Any,
@@ -141,11 +184,25 @@ class CheckpointManager:
         param_shardings: Any = None,
         opt_shardings: Any = None,
     ) -> Tuple[Any, Any, int, Dict]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is not None:
+            # explicit step stays strict: the caller asked for THIS snapshot
+            return self._restore_step(
+                step, abstract_params, abstract_opt, param_shardings, opt_shardings
+            )
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        params = restore_tree(d, abstract_params, manifest["params"], shardings=param_shardings)
-        opt = restore_tree(d, abstract_opt, manifest["opt_state"], shardings=opt_shardings)
-        return params, opt, manifest["step"], manifest.get("extra", {})
+        torn: List[Tuple[int, str]] = []
+        for s in reversed(steps):
+            try:
+                return self._restore_step(
+                    s, abstract_params, abstract_opt, param_shardings, opt_shardings
+                )
+            except TornCheckpointError as err:
+                # crash-damaged snapshot: remember why and fall back to the
+                # next-newest complete step
+                torn.append((s, str(err)))
+        raise FileNotFoundError(
+            f"no restorable checkpoint in {self.dir}; "
+            f"all committed steps torn: {torn}"
+        )

@@ -586,6 +586,92 @@ def make_replica_factory(
     return make
 
 
+def run_cross_process(args, cfg, requests, params, specs, ckpt, *,
+                      spec_width, branching, max_len) -> int:
+    """Serve through the cross-process fabric: real OS worker processes,
+    heartbeat liveness, deadline-aware admission, checkpoint re-warm.
+
+    Returns a process exit code: nonzero on any unanswered, dropped, or
+    duplicated rid, or on error results that no injected fault / deadline /
+    backpressure setting explains — a zero exit IS the exactly-once
+    assertion CI relies on.
+    """
+    from repro.runtime.fabric import CrossProcessFabric, XFabricConfig
+    from repro.runtime.transport import MonotonicClock, make_process_spawn
+
+    clock = MonotonicClock()
+    if args.deadline > 0:
+        t0 = clock.now()
+        for req in requests:
+            req.deadline = t0 + args.deadline
+    spec_base = dict(
+        kind="serve", arch=args.arch, smoke=args.smoke,
+        decode_plane=cfg.decode_plane, spec_tokens=spec_width,
+        draft_tree=branching, paged=cfg.paged, page_size=cfg.page_size,
+        drafter=args.drafter, slots=args.slots, max_len=max_len, seed=0,
+        faults=args.inject, launch_timeout=args.launch_timeout,
+        ckpt_dir=str(ckpt.dir) if ckpt is not None else None,
+        heartbeat_every=args.heartbeat_every,
+    )
+    fabric = CrossProcessFabric(
+        make_process_spawn(spec_base), requests,
+        XFabricConfig(
+            workers=args.workers,
+            slots_per_worker=args.slots,
+            heartbeat_every=args.heartbeat_every,
+            heartbeat_miss_limit=args.heartbeat_miss_limit,
+            # boot holiday covers interpreter start + jax import; the worker's
+            # heartbeat thread starts before the model build, so compile time
+            # needs no headroom here
+            spawn_grace=60.0,
+            poll_every=min(args.heartbeat_every / 2, 0.1),
+            queue_limit=args.queue_limit,
+            checkpoint_every=50 if ckpt is not None else 0,
+        ),
+        clock=clock, specs=specs, ckpt=ckpt, params=params,
+    )
+    t0 = clock.now()
+    results = fabric.run()
+    wall = clock.now() - t0
+
+    st = fabric.stats
+    finished = sum(1 for r in results.values() if r.error is None)
+    print(f"served {finished}/{len(requests)} requests across {args.workers} "
+          f"worker processes ({args.slots} slots each): {st['accepted']} tokens "
+          f"in {wall:.1f} s ({st['launches']} launches, {st['admitted']} "
+          f"admissions)")
+    print(f"xproc fabric: {st['kills']} kills, {st['heartbeat_misses']} "
+          f"heartbeat misses, {st['spawns']} spawns ({st['restores']} "
+          f"checkpoint re-warms), {st['requeued']} re-queued, "
+          f"{st['deadline_expired']} deadline-expired, "
+          f"{st['backpressure_rejects']} backpressure-rejected, "
+          f"{st['transient_failures']} transient, {st['poisoned']} poisoned, "
+          f"{st['stale_messages']} stale messages dropped, "
+          f"{st['dropped']} dropped, {st['duplicates']} duplicates")
+
+    unanswered = [r.rid for r in requests if r.rid not in results]
+    errors = [r for r in results.values() if r.error is not None]
+    expected_errors = (
+        any(s.kind == "poison" for s in specs)
+        or args.deadline > 0
+        or args.queue_limit > 0
+    )
+    code = 0
+    if unanswered:
+        print(f"FABRIC ERROR: {len(unanswered)} requests unanswered: {unanswered}")
+        code = 1
+    if errors and not expected_errors:
+        print(f"FABRIC ERROR: {len(errors)} requests errored without an "
+              f"explaining fault/deadline/queue-limit: "
+              f"{[(r.rid, r.error) for r in errors]}")
+        code = 1
+    if st["duplicates"] or st["dropped"]:
+        print(f"FABRIC ERROR: {st['duplicates']} duplicate / "
+              f"{st['dropped']} dropped results")
+        code = 1
+    return code
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -651,6 +737,26 @@ def main() -> None:
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="rounds between fabric snapshots (0 = off; "
                          "defaults to 4 when --inject is set)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through REAL OS worker processes (cross-"
+                         "process fabric): N heartbeat-supervised replicas "
+                         "whose only coupling to the supervisor is messages "
+                         "and the checkpoint directory (0 = in-process "
+                         "--fabric supervisor)")
+    ap.add_argument("--heartbeat-every", type=float, default=0.25,
+                    help="worker heartbeat period in seconds (cross-process "
+                         "fabric); liveness deadlines are multiples of this")
+    ap.add_argument("--heartbeat-miss-limit", type=int, default=12,
+                    help="consecutive missed heartbeat deadlines before a "
+                         "worker is declared dead, reaped, and respawned")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds from submission "
+                         "(cross-process fabric; 0 = none): expired-while-"
+                         "queued requests error without costing a launch")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="admission queue high-water mark (cross-process "
+                         "fabric; 0 = unbounded): submissions past it are "
+                         "rejected with a counted error result")
     args = ap.parse_args()
 
     import sys
@@ -669,6 +775,7 @@ def main() -> None:
     from repro.runtime.straggler import StragglerDetector
 
     tree = None
+    branching = None
     spec_width = max(args.spec_tokens, 1)
     if args.draft_tree:
         branching = [int(v) for v in args.draft_tree.split(",") if v.strip()]
@@ -725,6 +832,15 @@ def main() -> None:
             tmpdir = tempfile.TemporaryDirectory(prefix="serve_fabric_ckpt_")
             ckpt_dir = tmpdir.name
         ckpt = CheckpointManager(ckpt_dir, keep=2)
+
+    if args.workers > 0:
+        code = run_cross_process(
+            args, cfg, requests, params, specs, ckpt,
+            spec_width=spec_width, branching=branching, max_len=max_len,
+        )
+        if tmpdir is not None:
+            tmpdir.cleanup()
+        sys.exit(code)
 
     def restore_params(mgr):
         abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)

@@ -8,10 +8,13 @@ from repro.runtime.faults import (  # noqa: F401
     RequestRejected,
     TransientLaunchError,
     parse_faults,
+    split_process_specs,
 )
 from repro.runtime.fabric import (  # noqa: F401
+    CrossProcessFabric,
     FabricConfig,
     Request,
     Result,
     ServeFabric,
+    XFabricConfig,
 )

@@ -27,12 +27,30 @@ Fault kinds (the hook raises, or returns a synthetic stall duration):
   retry budget must reject it with an error result instead of crash-looping
   the replica.
 
+Process-level kinds (cross-process fabric; never raised through ``check`` —
+they act beneath the replica, at the worker/transport layer):
+
+* ``kill``     — hard SIGKILL of the worker process before the indexed
+  launch.  No exception crosses the channel: the supervisor may only learn
+  of the death through missed heartbeat deadlines.
+* ``hang``     — heartbeats stop but the process stays alive (a wedged
+  worker); the supervisor must declare it dead and reap it.
+* ``slowpipe`` — message delivery from the worker is delayed ``secs``
+  seconds (congested control link); stale messages arriving after the
+  worker was declared dead must be discarded by incarnation tag.
+
 Spec grammar (CLI-friendly): ``kind@key=val[:key=val...]`` joined by commas,
 e.g. ``crash@step=7``, ``launch@step=3:replica=1:times=2``,
-``stall@step=2:secs=9:times=4``, ``poison@rid=0``, ``crash@step=5:shrink=1``.
+``stall@step=2:secs=9:times=4``, ``poison@rid=0``, ``crash@step=5:shrink=1``,
+``kill@step=7``, ``hang@step=3:replica=1``, ``slowpipe@secs=2:replica=0``.
 ``step`` is the replica-local launch index (first launch = step 1); stall
 specs may omit it to stall every launch while armed (e.g.
 ``stall@secs=9:times=4:replica=1`` — a persistently slow replica).
+
+Cross-process, a wildcard (``replica=None``) ``kill``/``hang`` spec is
+*reserved* by the supervisor at spawn time for the first worker that claims
+it — ``times`` is charged globally at reservation, so ``kill@step=7`` kills
+exactly one worker fleet-wide and its replacement is not re-killed.
 """
 from __future__ import annotations
 
@@ -74,7 +92,11 @@ class RequestRejected(ReplicaFault):
         self.rid = rid
 
 
-_KINDS = ("crash", "launch", "stall", "poison")
+_KINDS = ("crash", "launch", "stall", "poison", "kill", "hang", "slowpipe")
+
+# Kinds handled at the worker/transport layer; FaultInjector.check ignores
+# them so a full --inject string can be shipped verbatim to worker processes.
+PROCESS_KINDS = ("kill", "hang", "slowpipe")
 
 
 @dataclasses.dataclass
@@ -92,8 +114,10 @@ class FaultSpec:
             raise ValueError(f"unknown fault kind {self.kind!r} (choose from {_KINDS})")
         if self.kind == "poison" and self.rid is None:
             raise ValueError("poison faults need rid=<request id>")
-        if self.kind in ("crash", "launch") and self.step is None:
+        if self.kind in ("crash", "launch", "kill", "hang") and self.step is None:
             raise ValueError(f"{self.kind} faults need step=<launch index>")
+        if self.kind == "slowpipe" and self.secs <= 0:
+            raise ValueError("slowpipe faults need secs=<delivery delay>")
 
 
 def parse_faults(text: str) -> List[FaultSpec]:
@@ -112,10 +136,25 @@ def parse_faults(text: str) -> List[FaultSpec]:
                 kw[key] = bool(int(val))
             else:
                 raise ValueError(f"unknown fault field {key!r} in {part!r}")
-        if kind == "poison":
-            kw.setdefault("times", 0)  # poison persists by default
+        if kind in ("poison", "slowpipe"):
+            kw.setdefault("times", 0)  # poison / slowpipe persist by default
         specs.append(FaultSpec(kind=kind, **kw))
     return specs
+
+
+def split_process_specs(
+    specs: Sequence[FaultSpec],
+) -> Tuple[List[FaultSpec], List[FaultSpec], List[FaultSpec]]:
+    """Partition specs into (kill/hang, slowpipe, in-replica) groups.
+
+    The first two groups are consumed by the cross-process supervisor (spec
+    reservation at spawn; pipe delay gates); the rest are replica-level and
+    travel to each worker's own :class:`FaultInjector`.
+    """
+    proc = [s for s in specs if s.kind in ("kill", "hang")]
+    slow = [s for s in specs if s.kind == "slowpipe"]
+    rest = [s for s in specs if s.kind not in PROCESS_KINDS]
+    return proc, slow, rest
 
 
 class FaultInjector:
@@ -154,6 +193,8 @@ class FaultInjector:
         return s.times <= 0 or self._fired[i] < s.times
 
     def _matches(self, s: FaultSpec, replica: int, step: int, phase: str, rids) -> bool:
+        if s.kind in PROCESS_KINDS:
+            return False  # handled at the worker/transport layer, not in-replica
         if s.replica is not None and s.replica != replica:
             return False
         if s.kind == "poison":

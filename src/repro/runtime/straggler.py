@@ -12,8 +12,9 @@ re-shard).
 from __future__ import annotations
 
 import enum
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,11 +32,17 @@ class StragglerDetector:
     threshold: float = 2.0      # x median EWMA => straggling
     patience: int = 3           # consecutive flagged steps before EXCLUDE
     warmup: int = 5             # steps before any verdicts (compile noise)
+    # injected clock stamping the verdict log — monotonic in production, a
+    # manual clock in tests, so flag timelines are reproducible; no policy
+    # decision here ever reads wall time directly
+    clock: Callable[[], float] = time.monotonic
 
     _ewma: Optional[np.ndarray] = field(default=None, init=False)
     _flagged: Optional[np.ndarray] = field(default=None, init=False)
     _steps: int = field(default=0, init=False)
     _primed: bool = field(default=False, init=False)
+    # (clock timestamp, worker index, action value) per verdict
+    flag_log: List[Tuple[float, int, str]] = field(default_factory=list, init=False)
 
     def __post_init__(self) -> None:
         self._ewma = np.zeros(self.n_workers)
@@ -87,6 +94,9 @@ class StragglerDetector:
                 verdict[int(w)] = Mitigation.EXCLUDE
             else:
                 verdict[int(w)] = Mitigation.REDISPATCH
+        now = self.clock()
+        for w, action in verdict.items():
+            self.flag_log.append((now, w, action.value))
         return verdict
 
     @property

@@ -1,0 +1,270 @@
+"""Pluggable transport for the cross-process serve fabric.
+
+PR 6's ``ServeFabric`` supervises replicas through in-process exceptions — a
+coupling the paper's control plane explicitly rejects (autonomous peers,
+loosely coupled in time, coordinating only through messages).  This module is
+the channel layer that severs that coupling: the supervisor sees a worker
+only as a :class:`WorkerHandle` (``send`` / ``recv`` / ``kill``), and two
+interchangeable implementations back it:
+
+* :class:`LoopbackHandle` — the worker's message loop runs in-process and is
+  pumped cooperatively on every ``recv``.  Combined with a shared
+  :class:`ManualClock` this makes heartbeat-timeout supervision **fully
+  deterministic**: unit tests advance time explicitly and every liveness
+  verdict happens at an exact logical round.
+* :class:`ProcessHandle` — a real OS process (``multiprocessing`` spawn
+  context, so children never inherit initialized jax state) running
+  ``repro.runtime.worker.worker_main`` over a duplex pipe.  ``kill()`` is a
+  hard SIGKILL; ``recv`` swallows broken-pipe errors so that death is only
+  ever *detected* by the supervisor's heartbeat deadlines, never by an
+  exception path.
+
+Clocks are explicit everywhere (no policy code reads ``time.time()``):
+:class:`MonotonicClock` for production, :class:`ManualClock` for tests and
+benchmarks, where ``sleep`` simply advances logical time.
+
+The ``slowpipe`` fault kind lives here too: :class:`SlowPipe` wraps a handle
+and delays inbound message delivery by a fixed number of seconds (FIFO order
+preserved), modeling a congested control network — delayed heartbeats can
+push a healthy worker past its liveness deadline, and the supervisor must
+stay exactly-once anyway (stale-incarnation messages are dropped).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Tuple
+
+Message = Tuple[str, dict]
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+
+class MonotonicClock:
+    """Wall time for production: monotonic reads, real sleeps."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class ManualClock:
+    """Deterministic logical time: ``sleep`` advances, nothing blocks.
+
+    Shared between a supervisor and its loopback workers, this pins every
+    heartbeat emission and every liveness deadline to an exact logical
+    instant — the heartbeat-timeout tests never read wall clock at all.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            self._t += seconds
+
+    def advance(self, seconds: float) -> None:
+        self._t += seconds
+
+
+# ---------------------------------------------------------------------------
+# in-memory duplex (loopback channel)
+# ---------------------------------------------------------------------------
+
+
+class DuplexEnd:
+    """One side of an in-memory bidirectional channel."""
+
+    def __init__(self, inbox: Deque[Message], outbox: Deque[Message]):
+        self._inbox = inbox
+        self._outbox = outbox
+
+    def send(self, msg: Message) -> None:
+        self._outbox.append(msg)
+
+    def drain(self) -> List[Message]:
+        out = list(self._inbox)
+        self._inbox.clear()
+        return out
+
+
+def duplex_pair() -> Tuple[DuplexEnd, DuplexEnd]:
+    a_to_b: Deque[Message] = deque()
+    b_to_a: Deque[Message] = deque()
+    return DuplexEnd(b_to_a, a_to_b), DuplexEnd(a_to_b, b_to_a)
+
+
+# ---------------------------------------------------------------------------
+# supervisor-side worker handles
+# ---------------------------------------------------------------------------
+
+
+class LoopbackHandle:
+    """In-process worker behind the message interface.
+
+    ``recv`` pumps the embedded worker loop once before draining its outbox,
+    so one supervisor round advances the worker by (at most) one launch —
+    the same cadence as the in-process ``ServeFabric`` scheduler, but with
+    every interaction funneled through messages.  ``kill`` silences the loop
+    permanently (the loopback analogue of SIGKILL: no farewell message, no
+    exception surfaces to the supervisor).
+    """
+
+    def __init__(self, endpoint: DuplexEnd, loop: Any, *, pumps_per_recv: int = 1):
+        self._end = endpoint
+        self.loop = loop
+        self._pumps = max(int(pumps_per_recv), 1)
+
+    def send(self, msg: Message) -> None:
+        self._end.send(msg)
+
+    def recv(self) -> List[Message]:
+        for _ in range(self._pumps):
+            self.loop.pump()
+        return self._end.drain()
+
+    def kill(self) -> None:
+        self.loop.terminate()
+
+    def close(self) -> None:
+        pass
+
+
+class ProcessHandle:
+    """A real OS worker process over a pipe (``multiprocessing`` spawn).
+
+    The pipe is never trusted for liveness: ``recv`` returns whatever is
+    readable and silently treats EOF/broken-pipe as "no messages" — a
+    SIGKILL'd worker therefore looks exactly like a silent one, and the
+    supervisor's heartbeat deadline is the only death detector (the PR's
+    no-exception-path contract).  ``kill`` delivers SIGKILL for reaping
+    hung workers the supervisor has already declared dead.
+    """
+
+    def __init__(self, spec: dict):
+        import multiprocessing as mp
+
+        from repro.runtime.worker import worker_main
+
+        ctx = mp.get_context("spawn")
+        self.conn, child = ctx.Pipe(duplex=True)
+        self.proc = ctx.Process(target=worker_main, args=(child, dict(spec)), daemon=True)
+        self.proc.start()
+        child.close()
+
+    def send(self, msg: Message) -> None:
+        try:
+            self.conn.send(msg)
+        except (BrokenPipeError, OSError, ValueError):
+            pass
+
+    def recv(self) -> List[Message]:
+        msgs: List[Message] = []
+        try:
+            while self.conn.poll(0):
+                msgs.append(self.conn.recv())
+        except (EOFError, BrokenPipeError, OSError):
+            pass
+        return msgs
+
+    def kill(self) -> None:
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5.0)
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5.0)
+
+
+class SlowPipe:
+    """Delay inbound delivery from one worker (the ``slowpipe`` fault).
+
+    Each armed delivery is held ``secs`` seconds past its arrival on the
+    fabric clock; FIFO order is preserved (a held message blocks everything
+    behind it), so the gate models a congested link, not a reordering one.
+    ``times`` follows the fault-spec convention: number of messages delayed,
+    ``<= 0`` meaning every message while armed.
+    """
+
+    def __init__(self, handle: Any, clock: Any, secs: float, *, times: int = 0):
+        self._handle = handle
+        self._clock = clock
+        self._secs = float(secs)
+        self._remaining = int(times) if times > 0 else -1  # -1 = forever
+        self._held: Deque[Tuple[float, Message]] = deque()
+
+    def _armed(self) -> bool:
+        return self._remaining != 0
+
+    def send(self, msg: Message) -> None:
+        self._handle.send(msg)
+
+    def recv(self) -> List[Message]:
+        now = self._clock.now()
+        for msg in self._handle.recv():
+            if self._held or self._armed():
+                delay = self._secs if self._armed() else 0.0
+                if self._armed() and self._remaining > 0:
+                    self._remaining -= 1
+                self._held.append((now + delay, msg))
+            else:
+                self._held.append((now, msg))
+        out: List[Message] = []
+        while self._held and self._held[0][0] <= now:
+            out.append(self._held.popleft()[1])
+        return out
+
+    def kill(self) -> None:
+        self._handle.kill()
+
+    def close(self) -> None:
+        self._handle.close()
+
+    @property
+    def loop(self) -> Any:  # loopback introspection passthrough (tests)
+        return getattr(self._handle, "loop", None)
+
+
+# spawn(worker_id, incarnation, proc_faults) -> handle.  ``proc_faults`` is
+# the supervisor's reservation of kill/hang specs for this incarnation
+# (list of {"kind", "step"} dicts).
+SpawnFn = Callable[[int, int, List[dict]], Any]
+
+
+def make_process_spawn(spec_base: dict) -> SpawnFn:
+    """Spawn factory for real worker processes.
+
+    ``spec_base`` carries everything a worker needs to rebuild its replica
+    from scratch — architecture/config fields, slot budget, the fault spec
+    string, and the checkpoint directory.  Nothing else is shared with the
+    supervisor: a replacement worker (``incarnation > 0``) re-warms purely
+    from the on-disk snapshot (``warm_start``), the initial fleet builds
+    from the seed.
+    """
+
+    def spawn(worker_id: int, incarnation: int, proc_faults: List[dict]):
+        spec = dict(
+            spec_base,
+            worker_id=worker_id,
+            incarnation=incarnation,
+            proc_faults=[{"kind": f["kind"], "step": f["step"]} for f in proc_faults],
+            warm_start=incarnation > 0,
+        )
+        return ProcessHandle(spec)
+
+    return spawn

@@ -88,3 +88,108 @@ def test_shape_mismatch_rejected(tmp_path):
     abs_o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt)
     with pytest.raises(ValueError, match="shape"):
         mgr.restore(bad, abs_o)
+
+
+# ---------------------------------------------------------------------------
+# torn-checkpoint recovery (crash-damaged committed snapshots)
+# ---------------------------------------------------------------------------
+
+
+def _abs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def test_truncated_leaf_falls_back_to_older_step(tmp_path):
+    """A committed snapshot with a truncated .npy (e.g. the disk filled or
+    the host died mid-flush after a non-atomic copy) must not poison
+    restore: the damaged step is classified torn and the next-newest
+    complete snapshot wins."""
+    from repro.checkpoint import TornCheckpointError
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    p0, p1 = _tree(0), _tree(3)
+    mgr.save(1, p0, {})
+    mgr.save(2, p1, {})
+    # tear the newest snapshot: truncate one leaf file to garbage
+    victim = sorted((Path(tmp_path) / "step_00000002").glob("params.*.npy"))[0]
+    victim.write_bytes(victim.read_bytes()[:16])
+    p, _, step, _ = mgr.restore(_abs(p0), {})
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # but asking for the torn step EXPLICITLY stays strict
+    with pytest.raises(TornCheckpointError):
+        mgr.restore(_abs(p0), {}, step=2)
+
+
+def test_torn_manifest_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    p0 = _tree(0)
+    mgr.save(1, p0, {})
+    mgr.save(2, _tree(1), {})
+    (Path(tmp_path) / "step_00000002" / "manifest.json").write_text('{"step": 2, "par')
+    _, _, step, _ = mgr.restore(_abs(p0), {})
+    assert step == 1
+
+
+def test_missing_leaf_file_is_torn_not_crash(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    p0 = _tree(0)
+    mgr.save(1, p0, {})
+    mgr.save(2, _tree(1), {})
+    victim = sorted((Path(tmp_path) / "step_00000002").glob("params.*.npy"))[-1]
+    victim.unlink()
+    _, _, step, _ = mgr.restore(_abs(p0), {})
+    assert step == 1
+
+
+def test_all_steps_torn_raises_with_ledger(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(0), {})
+    for f in (Path(tmp_path) / "step_00000001").glob("params.*.npy"):
+        f.write_bytes(b"\x00" * 8)
+    with pytest.raises(FileNotFoundError, match="torn"):
+        mgr.restore(_abs(_tree(0)), {})
+
+
+def test_save_killed_mid_write_then_rewarm(tmp_path, monkeypatch):
+    """End-to-end crash-during-save: np.save dies halfway through the second
+    snapshot, leaving a stranded tmp dir.  The re-warm path (what a
+    replacement worker runs) must land on the intact step 1 snapshot."""
+    import repro.checkpoint.manager as M
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    p0 = _tree(0)
+    mgr.save(1, p0, {})
+
+    real_save, calls = np.save, {"n": 0}
+
+    def dying_save(path, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise OSError("simulated power loss")
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(M.np, "save", dying_save)
+    with pytest.raises(OSError, match="power loss"):
+        mgr.save(2, _tree(1), {})
+    monkeypatch.undo()
+
+    assert mgr.latest_step() == 1  # torn save never committed
+    p, _, step, _ = mgr.restore(_abs(p0), {})
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_still_strict_not_torn(tmp_path):
+    """Caller-side shape disagreement is a bug, not crash damage: it must
+    stay a hard ValueError, never silently fall back to an older step."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(0), {})
+    bad = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((x.shape[0] + 1,) + x.shape[1:], x.dtype),
+        _tree(0),
+    )
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(bad, {})

@@ -89,6 +89,61 @@ def test_straggler_rebase_validates_indices():
     assert det.observe([1.0]) == {}
 
 
+def test_straggler_flag_log_deterministic_under_manual_clock():
+    """No policy code reads wall time: with an injected manual clock the
+    verdict timeline (timestamp, worker, action) is byte-reproducible run
+    over run."""
+    from repro.runtime.transport import ManualClock
+
+    def run():
+        clock = ManualClock()
+        det = StragglerDetector(n_workers=4, warmup=2, patience=2,
+                                threshold=2.0, clock=clock.now)
+        for _ in range(6):
+            det.observe([1.0, 1.0, 1.0, 5.0])
+            clock.advance(1.0)
+        return list(det.flag_log)
+
+    log_a, log_b = run(), run()
+    assert log_a == log_b and log_a, log_a
+    # redispatch at the first post-warmup flags, exclude once patience is hit
+    assert log_a[0][1] == 3 and log_a[0][2] == "redispatch"
+    assert log_a[-1][2] == "exclude"
+    # timestamps come from the manual clock, not wall time
+    assert all(t == float(int(t)) for t, _, _ in log_a)
+
+
+def test_fabric_policy_never_reads_wall_clock(monkeypatch):
+    """With clocks injected into both the fabric and the detector, a full
+    supervised run must complete with wall-clock functions poisoned — any
+    policy-layer ``time.monotonic()``/``perf_counter()`` read is a
+    regression."""
+    import time as _time
+
+    from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+    from repro.runtime.transport import ManualClock
+    from tests.test_serve_fabric import FakeReplica
+
+    clock = ManualClock()
+    det = StragglerDetector(n_workers=2, warmup=1, clock=clock.now)
+    fab = ServeFabric(
+        lambda i, lvl, params, shrunk: FakeReplica(i, slots=2),
+        [Request(rid=i, prompt=[0], gen=4) for i in range(4)],
+        FabricConfig(n_replicas=2),
+        detector=det, clock=clock.now,
+    )
+
+    def _forbidden(*a, **k):
+        raise AssertionError("policy code read the wall clock")
+
+    monkeypatch.setattr(_time, "monotonic", _forbidden)
+    monkeypatch.setattr(_time, "perf_counter", _forbidden)
+    res = fab.run()
+    monkeypatch.undo()
+    assert len(res) == 4 and all(r.error is None for r in res.values())
+    assert fab.stats["dropped"] == 0
+
+
 # ---------------------------------------------------------------------------
 # trainer end-to-end (host devices, small model)
 # ---------------------------------------------------------------------------

@@ -581,3 +581,48 @@ print("RESHARD_FABRIC_OK", len(clean))
         n_devices=8,
     )
     assert "RESHARD_FABRIC_OK 3" in out
+
+
+# ---------------------------------------------------------------------------
+# cross-process fabric: real model in real worker processes (PR 8 acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_xproc_real_model_sigkill_byte_identical(env, oracle, tmp_path):
+    """ACCEPTANCE: real-model replicas in separate OS processes, one worker
+    SIGKILL'd mid-stream.  Death is detected purely via missed heartbeats
+    (the pipe swallows EOF), the in-flight requests are re-enqueued, the
+    replacement re-warms from the on-disk checkpoint, and every stream is
+    byte-identical to the sequential-greedy oracle with zero drops and zero
+    duplicates."""
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime.fabric import CrossProcessFabric, XFabricConfig
+    from repro.runtime.transport import MonotonicClock, make_process_spawn
+
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    spec_base = dict(
+        kind="serve", arch="qwen3-moe-235b-a22b", smoke=True,
+        decode_plane=True, spec_tokens=WIDTH, slots=2,
+        max_len=env["max_len"], seed=0, launch_timeout=120.0,
+        ckpt_dir=str(tmp_path), heartbeat_every=0.25,
+    )
+    # 6 tokens at draft width 3 needs >= 2 launches per request, so worker 0
+    # (two slots) is guaranteed to reach step 2 before it can drain.
+    fab = CrossProcessFabric(
+        make_process_spawn(spec_base), list(env["requests"]),
+        XFabricConfig(
+            workers=2, slots_per_worker=2, heartbeat_every=0.25,
+            heartbeat_miss_limit=20, spawn_grace=120.0, poll_every=0.1,
+            checkpoint_every=50, max_rounds=500_000,
+        ),
+        clock=MonotonicClock(), specs=parse_faults("kill@step=2:replica=0"),
+        ckpt=ckpt, params=env["params"],
+    )
+    results = fab.run()
+    assert fab.stats["kills"] == 1, fab.stats
+    assert fab.stats["heartbeat_misses"] >= 20, fab.stats
+    assert fab.stats["spawns"] == 3, fab.stats
+    assert fab.stats["requeued"] >= 1, fab.stats
+    assert fab.stats["restores"] == 1, fab.stats  # replacement re-warmed
+    assert fab.stats["dropped"] == 0 and fab.stats["duplicates"] == 0, fab.stats
+    _assert_byte_identical(results, oracle, env)

@@ -296,3 +296,88 @@ def test_queue_exhaustion_with_idle_slots_terminates(replica_env):
     assert all(r.error is None for r in results.values())
     assert fabric.stats["dropped"] == 0 and fabric.stats["duplicates"] == 0
     assert len(results[20].tokens) == len(results[21].tokens) == 1 + 4
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission + backpressure (cross-process supervisor ledger)
+# ---------------------------------------------------------------------------
+
+
+def _xproc(n_req, *, workers=1, slots=1, queue_limit=0, deadlines=None, gen=4):
+    from repro.runtime.fabric import CrossProcessFabric, Request, XFabricConfig
+    from repro.runtime.transport import ManualClock
+    from repro.runtime.worker import SyntheticReplica, make_loopback_spawn
+
+    clock = ManualClock()
+    spawn = make_loopback_spawn(
+        lambda w, inc: SyntheticReplica(slots, replica_id=w), clock,
+        heartbeat_every=1.0,
+    )
+    reqs = [Request(rid=i, prompt=[0, 1], gen=gen) for i in range(n_req)]
+    for rid, dl in (deadlines or {}).items():
+        reqs[rid].deadline = dl
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(workers=workers, slots_per_worker=slots,
+                      heartbeat_every=1.0, heartbeat_miss_limit=4,
+                      spawn_grace=0.0, poll_every=1.0,
+                      queue_limit=queue_limit, max_rounds=10_000),
+        clock=clock,
+    )
+    return fab, fab.run()
+
+
+def test_deadline_expiry_while_queued_never_reaches_a_worker():
+    """A request whose deadline lapses in the admission queue is answered
+    with an error without ever costing a worker admission or launch — and
+    the expiry is a first-class ledger entry, not a buried error string."""
+    fab, res = _xproc(3, deadlines={2: 2.0})
+    assert fab.stats["deadline_expired"] == 1
+    assert res[2].error is not None and "queued" in res[2].error
+    assert res[2].tokens == []
+    assert fab.stats["admitted"] == 2 and fab.stats["launches"] > 0
+    assert res[0].error is None and res[1].error is None
+
+
+def test_deadline_expiry_for_request_in_flight_on_crashed_worker():
+    """A request in flight on a worker that dies goes back to the queue
+    front; if its deadline lapsed while it was riding the doomed worker, it
+    must expire at re-admission — never re-run past its deadline."""
+    from repro.runtime.fabric import CrossProcessFabric, Request, XFabricConfig
+    from repro.runtime.faults import parse_faults
+    from repro.runtime.transport import ManualClock
+    from repro.runtime.worker import SyntheticReplica, make_loopback_spawn
+
+    clock = ManualClock()
+    spawn = make_loopback_spawn(
+        lambda w, inc: SyntheticReplica(1, replica_id=w), clock,
+        heartbeat_every=1.0,
+    )
+    # kill fires at worker step 2 (t~2); death needs 4 missed 1s deadlines,
+    # so re-admission happens at t>=4 — past this deadline.
+    reqs = [Request(rid=0, prompt=[0, 1], gen=8, deadline=4.0)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(workers=1, slots_per_worker=1, heartbeat_every=1.0,
+                      heartbeat_miss_limit=4, spawn_grace=0.0, poll_every=1.0,
+                      max_rounds=10_000),
+        clock=clock, specs=parse_faults("kill@step=2:replica=0"),
+    )
+    res = fab.run()
+    assert fab.stats["kills"] == 1
+    assert fab.stats["deadline_expired"] == 1
+    assert res[0].error is not None and "dead worker" in res[0].error
+
+
+def test_backpressure_reject_is_counted_and_surfaced():
+    """Past the queue high-water mark the fabric rejects instead of buffering
+    without bound; rejects carry an error result AND a ledger count, so
+    telemetry can distinguish shed load from served load."""
+    fab, res = _xproc(6, queue_limit=3)
+    assert fab.stats["backpressure_rejects"] == 3
+    shed = {rid for rid, r in res.items() if r.error is not None}
+    assert shed == {3, 4, 5}
+    for rid in shed:
+        assert "high-water mark" in res[rid].error
+    # every submitted rid is answered exactly once, served or shed
+    assert len(res) == 6 and fab.stats["dropped"] == 0

@@ -1,0 +1,285 @@
+"""Cross-process serve fabric: transport, heartbeat liveness, worker loop.
+
+Three layers of coverage:
+
+* spec grammar for the process-level fault kinds (kill / hang / slowpipe);
+* **loopback** supervision scenarios — the worker loop runs in-process on a
+  shared ``ManualClock``, so every heartbeat emission, missed deadline, and
+  death verdict lands at an exact logical round (fully deterministic, no
+  wall clock anywhere);
+* **real OS processes** — ``multiprocessing`` spawn workers over pipes,
+  including a worker that SIGKILLs itself mid-run and is detected purely by
+  missed heartbeats.
+
+The byte-identity acceptance test against the real model's sequential-greedy
+oracle lives in ``tests/test_serve_fabric.py`` (it shares that module's
+prebuilt env/oracle fixtures).
+"""
+import pytest
+
+from repro.runtime.fabric import CrossProcessFabric, Request, XFabricConfig
+from repro.runtime.faults import FaultSpec, parse_faults, split_process_specs
+from repro.runtime.transport import ManualClock, MonotonicClock, make_process_spawn
+from repro.runtime.worker import SyntheticReplica, make_loopback_spawn
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_parse_process_fault_kinds():
+    specs = parse_faults("kill@step=7,hang@step=3:replica=1,slowpipe@secs=0.5:replica=0")
+    assert [s.kind for s in specs] == ["kill", "hang", "slowpipe"]
+    assert specs[0].step == 7 and specs[0].replica is None
+    assert specs[1].replica == 1
+    assert specs[2].secs == 0.5 and specs[2].times == 0  # slowpipe persists
+
+
+def test_process_fault_validation():
+    with pytest.raises(ValueError, match="step"):
+        FaultSpec(kind="kill")
+    with pytest.raises(ValueError, match="step"):
+        FaultSpec(kind="hang")
+    with pytest.raises(ValueError, match="secs"):
+        FaultSpec(kind="slowpipe")
+
+
+def test_split_process_specs():
+    specs = parse_faults("kill@step=2,stall@secs=3,slowpipe@secs=1,poison@rid=0")
+    proc, slow, rest = split_process_specs(specs)
+    assert [s.kind for s in proc] == ["kill"]
+    assert [s.kind for s in slow] == ["slowpipe"]
+    assert sorted(s.kind for s in rest) == ["poison", "stall"]
+
+
+def test_injector_check_ignores_process_kinds():
+    from repro.runtime.faults import FaultInjector
+
+    inj = FaultInjector(parse_faults("kill@step=1,hang@step=1,slowpipe@secs=1"))
+    # no exception, no stall: process kinds act at the transport layer
+    assert inj.check(0, 1) == 0.0
+    assert inj.log == []
+
+
+# ---------------------------------------------------------------------------
+# loopback supervision (deterministic manual clock)
+# ---------------------------------------------------------------------------
+
+GEN = 5
+
+
+def _expected(rid):
+    return [rid * 1000 + i for i in range(GEN + 1)]
+
+
+def _run_loopback(faults="", n_req=6, *, workers=2, slots=2, miss_limit=4,
+                  queue_limit=0, deadlines=None, max_spawns=4):
+    clock = ManualClock()
+    spawn = make_loopback_spawn(
+        lambda w, inc: SyntheticReplica(slots, replica_id=w),
+        clock, heartbeat_every=1.0,
+    )
+    reqs = [Request(rid=i, prompt=list(range(4)), gen=GEN) for i in range(n_req)]
+    for rid, dl in (deadlines or {}).items():
+        reqs[rid].deadline = dl
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(
+            workers=workers, slots_per_worker=slots, heartbeat_every=1.0,
+            heartbeat_miss_limit=miss_limit, spawn_grace=0.0, poll_every=1.0,
+            queue_limit=queue_limit, max_spawns=max_spawns, max_rounds=10_000,
+        ),
+        clock=clock, specs=parse_faults(faults),
+    )
+    return fab, fab.run()
+
+
+def test_loopback_clean_run_exactly_once():
+    fab, res = _run_loopback()
+    assert len(res) == 6
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+    assert fab.stats["kills"] == 0
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+    assert fab.stats["spawns"] == 2  # initial fleet only
+
+
+def test_sigkill_detected_by_heartbeats_only():
+    """A killed worker is pure silence: no exception path exists by
+    construction (the loopback kill just stops the loop).  Death must be
+    declared after exactly miss_limit missed deadlines, in-flight rids
+    re-enqueued at the queue front, and the replacement serves them."""
+    fab, res = _run_loopback("kill@step=3:replica=0")
+    assert fab.stats["kills"] == 1
+    assert fab.stats["heartbeat_misses"] == 4  # == miss_limit, deterministic
+    assert fab.stats["requeued"] == 2          # both of worker 0's slots
+    assert fab.stats["spawns"] == 3            # fleet + 1 replacement
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+
+
+def test_hang_stops_heartbeats_worker_reaped():
+    """hang leaves the process 'alive' but silent — same verdict as a kill,
+    via the same (and only) detector: missed heartbeat deadlines."""
+    fab, res = _run_loopback("hang@step=2:replica=1")
+    assert fab.stats["kills"] == 1
+    # the hung loop was reaped (terminated), not left running
+    assert fab.stats["spawns"] == 3
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+
+
+def test_wildcard_kill_reserved_by_one_worker():
+    """kill@step=N with no replica= is charged globally at spawn: exactly one
+    worker dies fleet-wide, and the replacement is NOT re-killed."""
+    fab, res = _run_loopback("kill@step=1")
+    assert fab.stats["kills"] == 1
+    assert len(res) == 6 and all(r.error is None for r in res.values())
+
+
+def test_slowpipe_mild_delay_no_false_death():
+    """Delivery delay below the liveness window: some deadlines slip but the
+    worker is never declared dead, and streams are untouched."""
+    fab, res = _run_loopback("slowpipe@secs=2:replica=0")
+    assert fab.stats["kills"] == 0
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+
+
+def test_slowpipe_past_liveness_window_stays_exactly_once():
+    """Delay past miss_limit deadlines looks like death — the supervisor
+    kills the (healthy) worker.  Its stale messages must be discarded by
+    incarnation tag, never double-published: the replicas' streams stay
+    byte-identical with zero duplicates."""
+    fab, res = _run_loopback("slowpipe@secs=10:replica=0")
+    assert fab.stats["kills"] >= 1
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+
+
+def test_deadline_expired_while_queued_costs_no_launch():
+    # 1 worker x 1 slot: rid 2 waits behind rids 0-1 and expires in queue
+    fab, res = _run_loopback(n_req=3, workers=1, slots=1, deadlines={2: 3.0})
+    assert fab.stats["deadline_expired"] == 1
+    assert "queued" in res[2].error and res[2].tokens == []
+    # the expired request never cost an admission or a launch
+    assert fab.stats["admitted"] == 2
+    assert res[0].tokens == _expected(0) and res[1].tokens == _expected(1)
+
+
+def test_backpressure_rejects_past_high_water_mark():
+    fab, res = _run_loopback(n_req=8, queue_limit=4)
+    assert fab.stats["backpressure_rejects"] == 4
+    rejected = sorted(r.rid for r in res.values() if r.error is not None)
+    assert rejected == [4, 5, 6, 7]
+    for rid in (0, 1, 2, 3):
+        assert res[rid].tokens == _expected(rid)
+
+
+def test_duplicate_rid_submission_rejected():
+    clock = ManualClock()
+    spawn = make_loopback_spawn(lambda w, inc: SyntheticReplica(1), clock)
+    reqs = [Request(rid=0, prompt=[], gen=1), Request(rid=0, prompt=[], gen=1)]
+    with pytest.raises(ValueError, match="unique"):
+        CrossProcessFabric(spawn, reqs, XFabricConfig(workers=1), clock=clock)
+
+
+def test_all_workers_retired_raises():
+    # persistent slowpipe keeps killing worker 0's replacements; with one
+    # worker slot and max_spawns=1 the fabric runs out of capacity
+    with pytest.raises(RuntimeError, match="capacity"):
+        _run_loopback("slowpipe@secs=100", n_req=2, workers=1, slots=1,
+                      max_spawns=1)
+
+
+def test_legacy_crash_spec_is_process_death_in_worker():
+    """A PR 6 'crash' spec inside a cross-process worker has no supervisor
+    exception channel: the worker loop converts it to its own death, which
+    the supervisor sees only as silence."""
+    clock = ManualClock()
+
+    def make_replica(w, inc):
+        from repro.runtime.faults import FaultInjector
+
+        inj = FaultInjector(parse_faults("crash@step=2:replica=0")) if inc == 0 else None
+        return SyntheticReplica(2, replica_id=w,
+                                fault_hook=inj.check if inj else None)
+
+    spawn = make_loopback_spawn(make_replica, clock, heartbeat_every=1.0)
+    reqs = [Request(rid=i, prompt=[], gen=GEN) for i in range(4)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(workers=1, slots_per_worker=2, heartbeat_every=1.0,
+                      heartbeat_miss_limit=4, spawn_grace=0.0, poll_every=1.0,
+                      max_rounds=10_000),
+        clock=clock,
+    )
+    res = fab.run()
+    assert fab.stats["kills"] == 1  # detected via heartbeats, not exceptions
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+
+
+def test_checkpoint_ledger_written_on_round_one(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    clock = ManualClock()
+    spawn = make_loopback_spawn(lambda w, inc: SyntheticReplica(2), clock,
+                                heartbeat_every=1.0)
+    reqs = [Request(rid=i, prompt=[], gen=GEN) for i in range(2)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(workers=1, slots_per_worker=2, heartbeat_every=1.0,
+                      spawn_grace=0.0, poll_every=1.0, checkpoint_every=100,
+                      max_rounds=10_000),
+        clock=clock, ckpt=ckpt, params={"w": [1.0, 2.0]},
+    )
+    fab.run()
+    assert fab.stats["checkpoints"] >= 1
+    assert ckpt.latest_step() is not None  # a replacement could re-warm
+
+
+# ---------------------------------------------------------------------------
+# real OS worker processes (multiprocessing spawn)
+# ---------------------------------------------------------------------------
+
+
+def _run_process(faults="", n_req=4):
+    spawn = make_process_spawn(dict(kind="synthetic", slots=2, heartbeat_every=0.1))
+    reqs = [Request(rid=i, prompt=list(range(4)), gen=GEN) for i in range(n_req)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(
+            workers=2, slots_per_worker=2, heartbeat_every=0.1,
+            heartbeat_miss_limit=20, spawn_grace=60.0, poll_every=0.02,
+            max_rounds=500_000,
+        ),
+        clock=MonotonicClock(), specs=parse_faults(faults),
+    )
+    return fab, fab.run()
+
+
+def test_process_workers_clean_run():
+    fab, res = _run_process()
+    assert len(res) == 4
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+    assert fab.stats["kills"] == 0
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+
+
+def test_process_worker_sigkill_heartbeat_detection():
+    """The worker SIGKILLs its own pid (a real OS kill, not an exception);
+    the supervisor's pipe swallows the EOF, so the only possible detection
+    path is the heartbeat deadline — then respawn and drain."""
+    fab, res = _run_process("kill@step=3:replica=0")
+    assert fab.stats["kills"] == 1
+    assert fab.stats["heartbeat_misses"] >= 20
+    assert fab.stats["spawns"] == 3
+    for rid, r in res.items():
+        assert r.error is None and r.tokens == _expected(rid)
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
