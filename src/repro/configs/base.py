@@ -96,6 +96,14 @@ class ModelConfig:
     # -- numerics / training ----------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    # Quantized bandwidth plane (serve): "" = full precision, "int8" = store
+    # KV (per-token symmetric scales, dequantized in-kernel after the tile
+    # load) / decode expert stacks (per-expert scales read from SMEM next to
+    # the plan's expert ids) in int8.  The scales are control words on the
+    # same scalar-prefetch path as lengths / plans / ancestor masks / block
+    # tables — see core/quant.py and docs/architecture.md.
+    kv_dtype: str = ""
+    expert_dtype: str = ""
     optimizer: str = "adamw"  # adamw | adafactor
     remat: bool = True
     use_pallas: bool = False  # kernels are TPU-target; interpret-mode in tests

@@ -81,9 +81,24 @@ from repro.kernels import on_tpu, tpu_compiler_params
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def _load_kv_tile(kv_ref, scl_ref, row: int, start, bkv: int, quantized: bool):
+    """Load one (bkv, hd) KV tile as f32, dequantizing in place when the
+    cache is int8: the per-token scales are control words on the scalar-
+    prefetch path (row 0 = K scales, row 1 = V scales), multiplied right
+    after the tile load — BEFORE any dot — so the kernel is bitwise-equal
+    to running the unquantized kernel on the jnp-dequantized buffer."""
+    x = kv_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+    if quantized:
+        s = pl.load(scl_ref, (pl.dslice(row, 1), pl.dslice(start, bkv)))  # (1, bkv)
+        x = x * jnp.transpose(s)
+    return x
+
+
 def _flash_decode_kernel(
-    len_ref, anc_ref, base_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, bkv: int, n_kv: int, scale: float, T: int,
+    len_ref, anc_ref, base_ref, scl_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, bkv: int, n_kv: int, scale: float, T: int, quantized: bool,
+    paged_tbl_ref=None,
 ):
     b, t, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
 
@@ -97,11 +112,21 @@ def _flash_decode_kernel(
     anc = anc_ref[t]             # packed ancestor bitmask (-1 = chain: all set)
     base = base_ref[b]           # committed-prefix length (draft rows start here)
     kv_base = ki * bkv
+    if paged_tbl_ref is None:
+        # contiguous cache: this block's scale rows sit at b*Skv + ki*bkv
+        scl_start = b * (n_kv * bkv) + kv_base
+    else:
+        # paged pool: the scales are page metadata addressed through the SAME
+        # block-table lookup (and clamp) the KV index_map applies, so a
+        # logical block's scale rows always come from its physical page
+        last = (length - 1) // bkv
+        phys = paged_tbl_ref[b * n_kv + jnp.minimum(ki, last)]
+        scl_start = jnp.maximum(phys, 0) * bkv
 
     @pl.when(kv_base < length)
     def _compute():
         q = q_ref[0, 0, 0].astype(jnp.float32)[None]  # (1, hd)
-        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
+        k = _load_kv_tile(k_ref, scl_ref, 0, scl_start, bkv, quantized)  # (bkv, hd)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bkv)
         kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
         # rows below base are shared committed prefix; draft row base + u is
@@ -118,7 +143,7 @@ def _flash_decode_kernel(
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
         m_ref[...] = m_new
-        v = v_ref[0, 0].astype(jnp.float32)
+        v = _load_kv_tile(v_ref, scl_ref, 1, scl_start, bkv, quantized)
         acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
 
     @pl.when(ki == n_kv - 1)
@@ -127,7 +152,13 @@ def _flash_decode_kernel(
         o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
 
 
-@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def _dummy_scales() -> jnp.ndarray:
+    """Placeholder scales operand so ``num_scalar_prefetch`` stays constant
+    on the unquantized path (never loaded: ``quantized`` is static)."""
+    return jnp.ones((2, 1), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "quantized", "interpret"))
 def flash_decode_pallas(
     q: jnp.ndarray,        # (B, T, nq, hd) draft/step tokens
     k: jnp.ndarray,        # (B, nkv, Skv, hd) full cache buffer
@@ -135,8 +166,10 @@ def flash_decode_pallas(
     lengths: jnp.ndarray,  # (B*T,) int32 valid prefix length per token, >= 1
     anc_words: Optional[jnp.ndarray] = None,  # (T,) int32 ancestor bitmasks
     base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    scales: Optional[jnp.ndarray] = None,     # (2, B*Skv) f32 per-row K/V scales
     *,
     bkv: int = 128,
+    quantized: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     B, T, nq, hd = q.shape
@@ -153,8 +186,10 @@ def flash_decode_pallas(
         anc_words = jnp.full((T,), -1, jnp.int32)
     if base is None:
         base = jnp.zeros((B,), jnp.int32)
+    if scales is None:
+        scales = _dummy_scales()
 
-    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref):
+    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref, scl_ref):
         # vector-steered: blocks past token (b, t)'s valid prefix re-map to
         # its last valid block (their compute is skipped), so their DMA never
         # happens — per-token clamping against the prefetched length vector.
@@ -164,14 +199,17 @@ def flash_decode_pallas(
         last = (len_ref[b * T + t] - 1) // bkv
         return (b, h // group, jnp.minimum(ki, last), 0)
 
-    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref):
+    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref, scl_ref):
         return (b, t, h, 0)
 
-    kern = functools.partial(_flash_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T)
+    kern = functools.partial(
+        _flash_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T,
+        quantized=quantized,
+    )
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, 1, hd), qo_map),
@@ -190,7 +228,10 @@ def flash_decode_pallas(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lengths, anc_words.astype(jnp.int32), base.astype(jnp.int32), q, k, v)
+    )(
+        lengths, anc_words.astype(jnp.int32), base.astype(jnp.int32),
+        scales.astype(jnp.float32), q, k, v,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +240,9 @@ def flash_decode_pallas(
 
 
 def _flash_decode_window_kernel(
-    pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    pos_ref, scl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, bkv: int, n_kv: int, scale: float, T: int, W: int, window: int,
+    quantized: bool,
 ):
     b, t, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
 
@@ -213,12 +255,13 @@ def _flash_decode_window_kernel(
     pos = pos_ref[b * T + t]          # this token's absolute position
     head = pos_ref[b * T + (T - 1)]   # last position written to this cache
     kv_base = ki * bkv
+    scl_start = b * W + kv_base       # rolling scales are slot-addressed too
 
     # slots at/below the written prefix exist; blocks past it are re-mapped
     @pl.when(kv_base <= jnp.minimum(head, W - 1))
     def _compute():
         q = q_ref[0, 0, 0].astype(jnp.float32)[None]  # (1, hd)
-        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
+        k = _load_kv_tile(k_ref, scl_ref, 0, scl_start, bkv, quantized)  # (bkv, hd)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bkv)
         # reconstruct each slot's absolute position from the write head:
         # slot s holds the largest p <= head with p % W == s
@@ -238,7 +281,7 @@ def _flash_decode_window_kernel(
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
         m_ref[...] = m_new
-        v = v_ref[0, 0].astype(jnp.float32)
+        v = _load_kv_tile(v_ref, scl_ref, 1, scl_start, bkv, quantized)
         acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
 
     @pl.when(ki == n_kv - 1)
@@ -247,15 +290,17 @@ def _flash_decode_window_kernel(
         o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
 
 
-@functools.partial(jax.jit, static_argnames=("window", "bkv", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "bkv", "quantized", "interpret"))
 def flash_decode_window_pallas(
     q: jnp.ndarray,         # (B, T, nq, hd)
     k: jnp.ndarray,         # (B, nkv, W, hd) rolling cache buffer (slot = pos % W)
     v: jnp.ndarray,
     positions: jnp.ndarray, # (B*T,) int32 absolute position per token
+    scales: Optional[jnp.ndarray] = None,  # (2, B*W) f32 per-slot K/V scales
     *,
     window: int,
     bkv: int = 128,
+    quantized: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Window-steered decode over a rolling cache: at most two contiguous
@@ -269,8 +314,10 @@ def flash_decode_window_pallas(
     assert W % bkv == 0, "choose bkv dividing the window buffer in ops"
     n_kv = W // bkv
     grid = (B, T, nq, n_kv)
+    if scales is None:
+        scales = _dummy_scales()
 
-    def kv_map(b, t, h, ki, pos_ref):
+    def kv_map(b, t, h, ki, pos_ref, scl_ref):
         # clamp to the written prefix: before the first wrap only slots
         # [0, head] were ever written, so tail blocks re-map (compute skipped)
         head = pos_ref[b * T + (T - 1)]
@@ -278,19 +325,20 @@ def flash_decode_window_pallas(
         return (b, h // group, jnp.minimum(ki, last), 0)
 
     kern = functools.partial(
-        _flash_decode_window_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T, W=W, window=window
+        _flash_decode_window_kernel, bkv=bkv, n_kv=n_kv, scale=scale, T=T, W=W,
+        window=window, quantized=quantized,
     )
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref: (b, t, h, 0)),
+                pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref, scl_ref: (b, t, h, 0)),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref: (b, t, h, 0)),
+            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, t, h, ki, pos_ref, scl_ref: (b, t, h, 0)),
             scratch_shapes=[
                 pltpu.VMEM((1, 1), jnp.float32),
                 pltpu.VMEM((1, 1), jnp.float32),
@@ -302,7 +350,7 @@ def flash_decode_window_pallas(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(positions, q, k, v)
+    )(positions, scales.astype(jnp.float32), q, k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -311,21 +359,23 @@ def flash_decode_window_pallas(
 
 
 def _flash_decode_paged_kernel(
-    len_ref, anc_ref, base_ref, tbl_ref,
+    len_ref, anc_ref, base_ref, tbl_ref, scl_ref,
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, bkv: int, n_kv: int, scale: float, T: int,
+    *, bkv: int, n_kv: int, scale: float, T: int, quantized: bool,
 ):
     # the block table steers only the index_map (which physical page each
-    # logical KV block DMAs from); inside the block the math is the linear
+    # logical KV block DMAs from) and the scale-row address (scales are page
+    # metadata in pool-row order); inside the block the math is the linear
     # kernel's, byte for byte — kv_pos stays LOGICAL, so the length clamp and
     # ancestor mask are untouched by the physical layout
     _flash_decode_kernel(
-        len_ref, anc_ref, base_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-        acc_ref, bkv=bkv, n_kv=n_kv, scale=scale, T=T,
+        len_ref, anc_ref, base_ref, scl_ref, q_ref, k_ref, v_ref, o_ref,
+        m_ref, l_ref, acc_ref, bkv=bkv, n_kv=n_kv, scale=scale, T=T,
+        quantized=quantized, paged_tbl_ref=tbl_ref,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+@functools.partial(jax.jit, static_argnames=("page_size", "quantized", "interpret"))
 def flash_decode_paged_pallas(
     q: jnp.ndarray,        # (B, T, nq, hd)
     k: jnp.ndarray,        # (P, nkv, page_size, hd) physical page pool
@@ -334,8 +384,10 @@ def flash_decode_paged_pallas(
     table: jnp.ndarray,    # (B*max_pages,) int32 flattened block tables
     anc_words: Optional[jnp.ndarray] = None,  # (T,) int32 ancestor bitmasks
     base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    scales: Optional[jnp.ndarray] = None,     # (2, R) f32 per-pool-row K/V scales
     *,
     page_size: int,
+    quantized: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Paged flash-decode: one more prefetched control word — the block table.
@@ -360,8 +412,10 @@ def flash_decode_paged_pallas(
         anc_words = jnp.full((T,), -1, jnp.int32)
     if base is None:
         base = jnp.zeros((B,), jnp.int32)
+    if scales is None:
+        scales = _dummy_scales()
 
-    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref):
+    def kv_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref, scl_ref):
         # length clamp FIRST (logical blocks past the token's prefix re-map
         # to its last valid block; compute skipped), THEN the block-table
         # indirection to the physical page.  Unallocated entries (-1) can
@@ -370,16 +424,17 @@ def flash_decode_paged_pallas(
         phys = tbl_ref[b * max_pages + jnp.minimum(ki, last)]
         return (jnp.maximum(phys, 0), h // group, 0, 0)
 
-    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref):
+    def qo_map(b, t, h, ki, len_ref, anc_ref, base_ref, tbl_ref, scl_ref):
         return (b, t, h, 0)
 
     kern = functools.partial(
-        _flash_decode_paged_kernel, bkv=ps, n_kv=max_pages, scale=scale, T=T
+        _flash_decode_paged_kernel, bkv=ps, n_kv=max_pages, scale=scale, T=T,
+        quantized=quantized,
     )
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=4,
+            num_scalar_prefetch=5,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, 1, hd), qo_map),
@@ -400,7 +455,7 @@ def flash_decode_paged_pallas(
         interpret=interpret,
     )(
         lengths, anc_words.astype(jnp.int32), base.astype(jnp.int32),
-        table.reshape(-1).astype(jnp.int32), q, k, v,
+        table.reshape(-1).astype(jnp.int32), scales.astype(jnp.float32), q, k, v,
     )
 
 
@@ -433,6 +488,7 @@ def flash_decode(
     *,
     ancestors: Optional[jnp.ndarray] = None,  # (T,) int32 packed ancestor words
     base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    scales: Optional[jnp.ndarray] = None,     # (2, B, Skv) per-row K/V scales (int8 cache)
     bkv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -459,9 +515,16 @@ def flash_decode(
     if pad_kv:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    scl = None
+    if scales is not None:
+        scl = jnp.asarray(scales, jnp.float32)
+        if pad_kv:  # pad with ones: padded rows are masked but still multiplied
+            scl = jnp.pad(scl, ((0, 0), (0, 0), (0, pad_kv)), constant_values=1.0)
+        scl = scl.reshape(2, B * (Skv + pad_kv))
     lengths = _as_length_vector(cache_index, B, T)
     return flash_decode_pallas(
-        q, kt, vt, lengths, anc_words=ancestors, base=base, bkv=bkv_, interpret=it
+        q, kt, vt, lengths, anc_words=ancestors, base=base, scales=scl,
+        quantized=scales is not None, bkv=bkv_, interpret=it,
     )
 
 
@@ -472,6 +535,7 @@ def flash_decode_window(
     cache_index: jnp.ndarray,  # scalar | (B,) int32 position of token (b, 0)
     *,
     window: int,
+    scales: Optional[jnp.ndarray] = None,  # (2, B, W) per-slot K/V scales (int8 cache)
     bkv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -491,8 +555,12 @@ def flash_decode_window(
     if idx.ndim == 0:
         idx = jnp.broadcast_to(idx, (B,))
     positions = (idx[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]).reshape(B * T)
+    scl = None
+    if scales is not None:
+        scl = jnp.asarray(scales, jnp.float32).reshape(2, B * W)
     return flash_decode_window_pallas(
-        q, kt, vt, positions, window=window, bkv=bkv_, interpret=it
+        q, kt, vt, positions, scales=scl, window=window,
+        quantized=scales is not None, bkv=bkv_, interpret=it,
     )
 
 
@@ -506,6 +574,7 @@ def flash_decode_paged(
     page_size: int,
     ancestors: Optional[jnp.ndarray] = None,  # (T,) int32 packed ancestor words
     base: Optional[jnp.ndarray] = None,       # (B,) int32 committed-prefix length
+    scales: Optional[jnp.ndarray] = None,     # (2, R) per-pool-row K/V scales (int8 pool)
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Paged multi-token attention: :func:`flash_decode` semantics against a
@@ -525,7 +594,8 @@ def flash_decode_paged(
     kt = jnp.swapaxes(k.reshape(P, page_size, *k.shape[1:]), 1, 2)
     vt = jnp.swapaxes(v.reshape(P, page_size, *v.shape[1:]), 1, 2)
     lengths = _as_length_vector(cache_index, B, T)
+    scl = None if scales is None else jnp.asarray(scales, jnp.float32)
     return flash_decode_paged_pallas(
         q, kt, vt, lengths, pages.reshape(-1), anc_words=ancestors, base=base,
-        page_size=page_size, interpret=it,
+        scales=scl, quantized=scales is not None, page_size=page_size, interpret=it,
     )

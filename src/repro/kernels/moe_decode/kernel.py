@@ -47,7 +47,10 @@ def _pad_axis(a: jnp.ndarray, axis: int, mult: int, value=0) -> jnp.ndarray:
     return a
 
 
-def _decode_moe_kernel(ids_ref, w_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, k: int):
+def _decode_moe_kernel(
+    ids_ref, w_ref, scl_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref,
+    *, k: int, quantized: bool,
+):
     t, j, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when((t == 0) & (j == 0) & (n == 0))
@@ -55,9 +58,21 @@ def _decode_moe_kernel(ids_ref, w_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, 
         o_ref[...] = jnp.zeros_like(o_ref)
 
     row = x_ref[...].astype(jnp.float32)  # (1, d) token row for assignment (t, j)
-    g = jnp.dot(row, wg_ref[0], preferred_element_type=jnp.float32)  # (1, bf)
-    u = jnp.dot(row, wu_ref[0], preferred_element_type=jnp.float32)
-    y = jnp.dot(jax.nn.silu(g) * u, wd_ref[0], preferred_element_type=jnp.float32)  # (1, d)
+    wg = wg_ref[0].astype(jnp.float32)
+    wu = wu_ref[0].astype(jnp.float32)
+    wd = wd_ref[0].astype(jnp.float32)
+    if quantized:
+        # per-expert scales are control words in SMEM next to the plan's
+        # expert ids; the int8 tile is dequantized elementwise BEFORE the
+        # dot, so the launch is bitwise-equal to running the unquantized
+        # kernel on the jnp-dequantized stacks ((x·w)*s would not be)
+        e = ids_ref[t * k + j]
+        wg = wg * scl_ref[0, e]
+        wu = wu * scl_ref[1, e]
+        wd = wd * scl_ref[2, e]
+    g = jnp.dot(row, wg, preferred_element_type=jnp.float32)  # (1, bf)
+    u = jnp.dot(row, wu, preferred_element_type=jnp.float32)
+    y = jnp.dot(jax.nn.silu(g) * u, wd, preferred_element_type=jnp.float32)  # (1, d)
 
     # combine epilogue: accumulate into the destination token row, scaled by
     # the assignment's router weight from SMEM.  Padded f-tiles contribute
@@ -67,16 +82,18 @@ def _decode_moe_kernel(ids_ref, w_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, 
     pl.store(o_ref, (pl.ds(t, 1), slice(None)), cur + w * y)
 
 
-@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bf", "quantized", "interpret"))
 def decode_moe_pallas(
     x: jnp.ndarray,           # (T, d) decode tokens (one per sequence)
     expert_ids: jnp.ndarray,  # (T, k) int32 plan control words
     weights: jnp.ndarray,     # (T, k) f32 combine weights
-    w_gate: jnp.ndarray,      # (E, d, f)
+    w_gate: jnp.ndarray,      # (E, d, f) — int8 when quantized
     w_up: jnp.ndarray,        # (E, d, f)
     w_down: jnp.ndarray,      # (E, f, d)
+    scales: jnp.ndarray = None,  # (3, E) f32 per-expert gate/up/down scales
     *,
     bf: int = 512,
+    quantized: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Plan-steered decode MoE, (T, d) -> (T, d) f32, single launch."""
@@ -87,6 +104,8 @@ def decode_moe_pallas(
 
     ids = expert_ids.reshape(-1).astype(jnp.int32)  # (T*k,) SMEM control words
     ws = weights.reshape(-1).astype(jnp.float32)
+    if scales is None:
+        scales = jnp.ones((3, 1), jnp.float32)  # never read: quantized is static
     wg = _pad_axis(w_gate, 2, bf)
     wu = _pad_axis(w_up, 2, bf)
     wd = _pad_axis(w_down, 1, bf)
@@ -94,20 +113,20 @@ def decode_moe_pallas(
     grid = (T, k, nf)
 
     out = pl.pallas_call(
-        functools.partial(_decode_moe_kernel, k=k),
+        functools.partial(_decode_moe_kernel, k=k, quantized=quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, d), lambda t, j, n, ids_ref, w_ref: (t, 0)),
+                pl.BlockSpec((1, d), lambda t, j, n, ids_ref, w_ref, scl_ref: (t, 0)),
                 # the plan steers the DMA: only the selected expert's tiles move
-                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], 0, n)),
-                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], 0, n)),
-                pl.BlockSpec((1, bf, d), lambda t, j, n, ids_ref, w_ref: (ids_ref[t * k + j], n, 0)),
+                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref, scl_ref: (ids_ref[t * k + j], 0, n)),
+                pl.BlockSpec((1, d, bf), lambda t, j, n, ids_ref, w_ref, scl_ref: (ids_ref[t * k + j], 0, n)),
+                pl.BlockSpec((1, bf, d), lambda t, j, n, ids_ref, w_ref, scl_ref: (ids_ref[t * k + j], n, 0)),
             ],
             # whole (T, d) f32 accumulator revisited across the sequential
             # grid, flushed to HBM once at the end
-            out_specs=pl.BlockSpec((T, d), lambda t, j, n, ids_ref, w_ref: (0, 0)),
+            out_specs=pl.BlockSpec((T, d), lambda t, j, n, ids_ref, w_ref, scl_ref: (0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
         compiler_params=tpu_compiler_params(
@@ -115,5 +134,5 @@ def decode_moe_pallas(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(ids, ws, x, wg, wu, wd)
+    )(ids, ws, scales.astype(jnp.float32), x, wg, wu, wd)
     return out

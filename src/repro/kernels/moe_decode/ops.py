@@ -26,8 +26,29 @@ def decode_moe(
     *,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Plan-steered decode expert pipeline, (T, d) -> (T, d), one launch."""
-    if interpret is None and not on_tpu():
+    """Plan-steered decode expert pipeline, (T, d) -> (T, d), one launch.
+
+    When the param dict carries pre-quantized expert stacks (``w_gate_q`` et
+    al., built by ``init_moe`` under ``cfg.expert_dtype == "int8"``) the
+    decode path consumes the int8 stacks + per-expert scale control words —
+    the f32 stacks stay untouched for prefill/train.
+    """
+    if "w_gate_q" in p:
+        scales = jnp.stack(
+            [p["w_gate_s"], p["w_up_s"], p["w_down_s"]]
+        ).astype(jnp.float32)
+        if interpret is None and not on_tpu():
+            y = ref.decode_moe(
+                x, plan.expert_ids, plan.weights,
+                p["w_gate_q"], p["w_up_q"], p["w_down_q"], scales=scales,
+            )
+        else:
+            y = decode_moe_pallas(
+                x, plan.expert_ids, plan.weights,
+                p["w_gate_q"], p["w_up_q"], p["w_down_q"], scales,
+                quantized=True, interpret=bool(interpret),
+            )
+    elif interpret is None and not on_tpu():
         y = ref.decode_moe(
             x, plan.expert_ids, plan.weights, p["w_gate"], p["w_up"], p["w_down"]
         )

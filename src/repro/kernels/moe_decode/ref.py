@@ -21,13 +21,21 @@ def decode_moe(
     x: jnp.ndarray,           # (T, d)
     expert_ids: jnp.ndarray,  # (T, k) int32
     weights: jnp.ndarray,     # (T, k) f32
-    w_gate: jnp.ndarray,      # (E, d, f)
+    w_gate: jnp.ndarray,      # (E, d, f) — int8 when scales is given
     w_up: jnp.ndarray,
     w_down: jnp.ndarray,      # (E, f, d)
+    scales: jnp.ndarray | None = None,  # (3, E) f32 per-expert gate/up/down scales
 ) -> jnp.ndarray:
     T, k = expert_ids.shape
     E = w_gate.shape[0]
     xf = x.astype(jnp.float32)
+    if scales is not None:
+        # dequantize elementwise BEFORE any contraction — the same order the
+        # kernel uses, so kernel-vs-oracle stays bitwise ((x·w)*s would not)
+        s = scales.astype(jnp.float32)
+        w_gate = w_gate.astype(jnp.float32) * s[0][:, None, None]
+        w_up = w_up.astype(jnp.float32) * s[1][:, None, None]
+        w_down = w_down.astype(jnp.float32) * s[2][:, None, None]
     if T * k < E:
         wg = w_gate.astype(jnp.float32)[expert_ids]  # (T, k, d, f)
         wu = w_up.astype(jnp.float32)[expert_ids]

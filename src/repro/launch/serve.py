@@ -586,6 +586,25 @@ def make_replica_factory(
     return make
 
 
+def _dump_tokens(args, results) -> None:
+    """Write {rid: token stream} JSON for cross-run stream-identity diffs.
+
+    CI runs the same request set through two planes (e.g. quantized
+    paged+tree vs quantized width-1 contiguous) and diffs the dumps — the
+    serve loop's verify/rollback makes both equal the model's sequential
+    greedy stream, so any drift is a correctness regression, not noise.
+    """
+    if not getattr(args, "dump_tokens", ""):
+        return
+    import json
+
+    with open(args.dump_tokens, "w") as f:
+        json.dump(
+            {str(rid): list(map(int, r.tokens)) for rid, r in sorted(results.items())},
+            f,
+        )
+
+
 def run_cross_process(args, cfg, requests, params, specs, ckpt, *,
                       spec_width, branching, max_len) -> int:
     """Serve through the cross-process fabric: real OS worker processes,
@@ -608,6 +627,7 @@ def run_cross_process(args, cfg, requests, params, specs, ckpt, *,
         kind="serve", arch=args.arch, smoke=args.smoke,
         decode_plane=cfg.decode_plane, spec_tokens=spec_width,
         draft_tree=branching, paged=cfg.paged, page_size=cfg.page_size,
+        kv_dtype=cfg.kv_dtype, expert_dtype=cfg.expert_dtype,
         drafter=args.drafter, slots=args.slots, max_len=max_len, seed=0,
         faults=args.inject, launch_timeout=args.launch_timeout,
         ckpt_dir=str(ckpt.dir) if ckpt is not None else None,
@@ -633,6 +653,7 @@ def run_cross_process(args, cfg, requests, params, specs, ckpt, *,
     t0 = clock.now()
     results = fabric.run()
     wall = clock.now() - t0
+    _dump_tokens(args, results)
 
     st = fabric.stats
     finished = sum(1 for r in results.values() if r.error is None)
@@ -705,6 +726,14 @@ def main() -> None:
                          "pointer rewiring fused into the next launch)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="KV rows per physical page (0 = config default)")
+    ap.add_argument("--kv-dtype", choices=("", "int8"), default="",
+                    help="store KV cache pages in int8 with per-token scale "
+                         "control words on the scalar-prefetch path (4x "
+                         "decode KV bandwidth; dequant happens in-kernel)")
+    ap.add_argument("--expert-dtype", choices=("", "int8"), default="",
+                    help="serve decode through pre-quantized int8 expert "
+                         "stacks with per-expert scale control words "
+                         "(prefill/verify math keeps the f32 stacks)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a shared synthetic system prompt of this "
                          "many tokens to every request (exercises cross-"
@@ -719,6 +748,9 @@ def main() -> None:
                          "plane")
     ap.add_argument("--telemetry", action="store_true",
                     help="report stale-vs-fresh plan top-k agreement per launch")
+    ap.add_argument("--dump-tokens", default="",
+                    help="write {rid: token stream} JSON here after the run "
+                         "(CI diffs two runs for stream identity)")
     ap.add_argument("--fabric", type=int, default=1,
                     help="number of data-parallel serve replicas behind the "
                          "shared admission queue")
@@ -788,6 +820,8 @@ def main() -> None:
         spec_tokens=spec_width,
         paged=args.paged or cfg.paged,
         page_size=args.page_size or cfg.page_size,
+        kv_dtype=args.kv_dtype or cfg.kv_dtype,
+        expert_dtype=args.expert_dtype or cfg.expert_dtype,
     )
     telemetry = args.telemetry and cfg.decode_plane and cfg.is_moe
     mesh = make_host_mesh(args.data, args.model)
@@ -872,6 +906,7 @@ def main() -> None:
     t_start = time.perf_counter()
     results = fabric.run()
     wall = time.perf_counter() - t_start
+    _dump_tokens(args, results)
     if tmpdir is not None:
         tmpdir.cleanup()
 

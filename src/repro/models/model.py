@@ -375,8 +375,12 @@ class Model:
             if isinstance(dest, dict):
                 out = {}
                 for name, d in dest.items():
-                    if name in ("pk", "pv"):
-                        s = src[name[1:]]  # the contiguous prefill leaf (k/v)
+                    if name in ("pk", "pv", "pks", "pvs"):
+                        # the contiguous prefill leaf (k/v, or its ks/vs
+                        # per-token scale row — quantized at prefill, the
+                        # scales scatter through the SAME row map so trie
+                        # hits adopt quantized pages + scales zero-copy)
+                        s = src[name[1:]]
                         if axis == 1:  # scan-stacked: superblock axis leads
                             out[name] = d.at[:, rows].set(
                                 s[:, 0].astype(d.dtype), mode="drop"
@@ -431,6 +435,21 @@ class Model:
                 nkv, hd = leaf.shape[-2:]
                 lead = leaf.shape[:-4]  # () or (n_sb,)
                 out[pname] = leaf.reshape(*lead, -1, nkv, hd)
+            for name, pname in (("ks", "pks"), ("vs", "pvs")):
+                if name not in out:
+                    continue
+                # per-token scale rows flatten to pool-row order alongside
+                # their int8 pages; pad with ONES (the init value — padded
+                # rows are masked but a 0 scale would zero a real row if the
+                # pool were ever compacted over it)
+                leaf = out.pop(name)
+                pad = mp * ps - leaf.shape[-1]
+                if pad:
+                    cfgpad = [(0, 0)] * leaf.ndim
+                    cfgpad[-1] = (0, pad)
+                    leaf = jnp.pad(leaf, cfgpad, constant_values=1.0)
+                lead = leaf.shape[:-2]  # () or (n_sb,)
+                out[pname] = leaf.reshape(*lead, -1)
             return out
 
         scan = (
@@ -479,7 +498,10 @@ class Model:
         def fix(part, batch_axis):
             def f(kp, leaf):
                 name = getattr(kp[-1], "key", None)
-                return gather_rows(leaf, batch_axis) if name in ("k", "v") else leaf
+                # ks/vs: the per-token scale control words move with their
+                # int8 rows — an accepted node's row is only meaningful as
+                # the (int8 payload, scale) pair
+                return gather_rows(leaf, batch_axis) if name in ("k", "v", "ks", "vs") else leaf
 
             return jax.tree_util.tree_map_with_path(f, part)
 

@@ -75,7 +75,28 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
             "w_up": (jax.random.normal(ku, (d, sh * dff)) / math.sqrt(d)).astype(dtype),
             "w_down": (jax.random.normal(kd, (sh * dff, d)) * down_scale).astype(dtype),
         }
+    if cfg.expert_dtype == "int8":
+        p.update(quantize_expert_stacks(p))
     return p
+
+
+def quantize_expert_stacks(p: Params) -> Params:
+    """Pre-quantize the routed expert stacks for the decode data plane.
+
+    Returns int8 twins (``w_gate_q`` et al.) plus per-expert f32 scale
+    vectors (``w_gate_s``: (E,)) — the scale control words the decode kernel
+    reads from SMEM next to the plan's expert ids.  The f32 stacks stay in
+    the param dict untouched: prefill and training never see int8, only the
+    plan-steered decode launch does (see kernels/moe_decode/ops.decode_moe).
+    """
+    from repro.core.quant import quantize_int8
+
+    out: Params = {}
+    for name in ("w_gate", "w_up", "w_down"):
+        q, s = quantize_int8(p[name].astype(jnp.float32), axis=(1, 2))
+        out[name + "_q"] = q
+        out[name + "_s"] = s[:, 0, 0].astype(jnp.float32)  # (E,)
+    return out
 
 
 def _shared_experts(xf: jnp.ndarray, p: Params) -> jnp.ndarray:

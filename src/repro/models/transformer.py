@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.control_plane import route_topk_decode, topk_agreement
 from repro.core.plans import DecodePlan, TreePlan
+from repro.core.quant import quantize_int8
 from repro.models import layers as L
 from repro.models import mamba2, moe, rglru
 
@@ -184,6 +185,14 @@ def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtyp
         spec_slack = -(-(max(int(cfg.spec_tokens), 1) - 1) // 8) * 8
         S = min(max_len, window + spec_slack) if window else max_len
         hd = cfg.resolved_head_dim
+        # Quantized bandwidth plane: int8 KV rows with per-token f32 scale
+        # leaves ("ks"/"vs": (B, S); paged "pks"/"pvs": (R,)) — the scales
+        # are control words riding the scalar-prefetch path, and per-TOKEN
+        # granularity is what keeps speculative rollback / draft overwrite /
+        # paged CoW token-identical to sequential decode (a per-block scale
+        # would couple rows that move independently).
+        quant = cfg.kv_dtype == "int8"
+        kv_dt = jnp.int8 if quant else dtype
         if cfg.paged and not window:
             # Paged KV plane: full-attention KV lives in a flat physical page
             # pool (NO batch axis) addressed through the per-slot block table
@@ -194,14 +203,20 @@ def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtyp
             # window, and paging a W-sized buffer would buy nothing.
             pages = num_pages(cfg, batch, max_len)
             c = {
-                "pk": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), dtype),
-                "pv": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), dtype),
+                "pk": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), kv_dt),
+                "pv": jnp.zeros((pages * cfg.page_size, cfg.num_kv_heads, hd), kv_dt),
             }
+            if quant:
+                c["pks"] = jnp.ones((pages * cfg.page_size,), jnp.float32)
+                c["pvs"] = jnp.ones((pages * cfg.page_size,), jnp.float32)
         else:
             c = {
-                "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
-                "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+                "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), kv_dt),
+                "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), kv_dt),
             }
+            if quant:
+                c["ks"] = jnp.ones((batch, S), jnp.float32)
+                c["vs"] = jnp.ones((batch, S), jnp.float32)
         if kind == "moe" and cfg.decode_plane:
             # Agile decode plane: the layer's next-step DecodePlan lives in
             # the cache alongside the KV entries (uniform placeholder until
@@ -314,9 +329,19 @@ def apply_layer_prefill(
         # decode's rolling-window addressing continues seamlessly
         take = min(W, S)
         slots = jnp.arange(S - take, S, dtype=jnp.int32) % W
-        ck = cache["k"].at[:, slots].set(k[:, -take:].astype(cache["k"].dtype))
-        cv = cache["v"].at[:, slots].set(v[:, -take:].astype(cache["v"].dtype))
-        new_cache = {"k": ck, "v": cv}
+        kw, vw = k[:, -take:], v[:, -take:]
+        new_cache = {}
+        if "ks" in cache:
+            # quantize at admission: the attention math above stays full
+            # precision (prefill logits are exact); only the CACHE rows are
+            # int8 + per-token scale control words, so every decode step —
+            # speculative or sequential — reads the same quantized prefix
+            kw, vw, ksr, vsr = _quant_kv_rows(kw, vw)
+            new_cache["ks"] = cache["ks"].at[:, slots].set(ksr)
+            new_cache["vs"] = cache["vs"].at[:, slots].set(vsr)
+        ck = cache["k"].at[:, slots].set(kw.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype))
+        new_cache["k"], new_cache["v"] = ck, cv
         out = L.blockwise_attention(
             q, k, v, causal=True, local_window=window, unroll=cfg.analysis_unroll
         )
@@ -600,6 +625,32 @@ def _spec_positions(lengths: jnp.ndarray, T: int) -> jnp.ndarray:
     return lengths[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)[None, :]
 
 
+# ---------------------------------------------------------------------------
+# quantized bandwidth plane: per-token int8 KV rows + scale control words
+# ---------------------------------------------------------------------------
+
+
+def _quant_kv_rows(k: jnp.ndarray, v: jnp.ndarray):
+    """Quantize new KV rows per TOKEN: (..., nkv, hd) -> int8 rows + one f32
+    scale per row.  The row is the unit speculative rollback, tree commit,
+    and paged CoW move, so quantizing at row granularity keeps every cache
+    mutation a plain (int8-row, scale) pair move — bit-identical under any
+    reordering the serve plane performs."""
+    kq, ks_ = quantize_int8(k.astype(jnp.float32), axis=(-2, -1))
+    vq, vs_ = quantize_int8(v.astype(jnp.float32), axis=(-2, -1))
+    return kq, vq, ks_[..., 0, 0].astype(jnp.float32), vs_[..., 0, 0].astype(jnp.float32)
+
+
+def _deq(c: jnp.ndarray, s: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Dequantized f32 view of a (..., nkv, hd) cache buffer for the
+    masked-jnp paths: the jnp twins dequantize the buffer then run the
+    existing full-precision math — the kernel path's dequant-after-tile-load
+    is bitwise-equal to exactly this."""
+    if s is None:
+        return c
+    return c.astype(jnp.float32) * s[..., None, None].astype(jnp.float32)
+
+
 def _decode_attn_prefix_spec(
     xn: jnp.ndarray,  # (B, T, d)
     p: Params,
@@ -616,26 +667,36 @@ def _decode_attn_prefix_spec(
     pos = _spec_positions(lengths, T)
     q, k, v = L._qkv(xn, p, cfg, pos)
     bidx = jnp.arange(B)[:, None]
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["ks"].at[bidx, pos].set(ksr)
+        cvs = cache["vs"].at[bidx, pos].set(vsr)
     ck = cache["k"].at[bidx, pos].set(k.astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, pos].set(v.astype(cache["v"].dtype))
     if cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode
 
-        out = flash_decode(q, ck, cv, pos)  # (B, T, nq, hd)
+        scl = None if cks is None else jnp.stack([cks, cvs])
+        out = flash_decode(q, ck, cv, pos, scales=scl)  # (B, T, nq, hd)
     else:
         S = ck.shape[1]
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
+        ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
         valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]  # (B, T, S)
         scale = 1.0 / math.sqrt(hd)
         qg = q.reshape(B, T, nkv, groups, hd)
-        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
         s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = jnp.einsum("bngts,bsnh->btngh", w, cvf.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
+    return y, nc
 
 
 def _decode_attn_prefix_tree(
@@ -662,20 +723,27 @@ def _decode_attn_prefix_tree(
     pos = lengths[:, None] + depths[None, :]  # rotary positions
     q, k, v = L._qkv(xn, p, cfg, pos)
     bidx = jnp.arange(B)[:, None]
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["ks"].at[bidx, rows].set(ksr)
+        cvs = cache["vs"].at[bidx, rows].set(vsr)
     ck = cache["k"].at[bidx, rows].set(k.astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, rows].set(v.astype(cache["v"].dtype))
     if cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode
 
+        scl = None if cks is None else jnp.stack([cks, cvs])
         out = flash_decode(
             q, ck, cv, lengths,
             ancestors=jnp.asarray(tree.ancestor_words(), jnp.int32),
-            base=lengths,
+            base=lengths, scales=scl,
         )  # (B, T, nq, hd)
     else:
         S = ck.shape[1]
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
+        ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
         table = jnp.asarray(tree.ancestor_table(), bool)  # (T, T)
         u = jnp.arange(S)[None, :] - lengths[:, None]  # (B, S) draft-row index
         in_draft = (u >= 0) & (u < T)
@@ -685,13 +753,16 @@ def _decode_attn_prefix_tree(
         )  # (B, T, S)
         scale = 1.0 / math.sqrt(hd)
         qg = q.reshape(B, T, nkv, groups, hd)
-        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
         s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = jnp.einsum("bngts,bsnh->btngh", w, cvf.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
+    return y, nc
 
 
 def _decode_attn_rolling_spec(
@@ -716,16 +787,23 @@ def _decode_attn_rolling_spec(
     q, k, v = L._qkv(xn, p, cfg, pos)
     bidx = jnp.arange(B)[:, None]
     slots = jnp.remainder(pos, W)
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["ks"].at[bidx, slots].set(ksr)
+        cvs = cache["vs"].at[bidx, slots].set(vsr)
     ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
     limit = min(window, W) if window else W
     if cfg.decode_plane and cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode_window
 
-        out = flash_decode_window(q, ck, cv, lengths, window=limit)
+        scl = None if cks is None else jnp.stack([cks, cvs])
+        out = flash_decode_window(q, ck, cv, lengths, window=limit, scales=scl)
     else:
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
+        ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
         head = pos[:, -1]  # (B,) last written absolute position
         slot = jnp.arange(W)
         write = jnp.remainder(head, W)
@@ -738,13 +816,16 @@ def _decode_attn_rolling_spec(
         )  # (B, T, W)
         scale = 1.0 / math.sqrt(hd)
         qg = q.reshape(B, T, nkv, groups, hd)
-        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
         s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+        out = jnp.einsum("bngts,bsnh->btngh", w, cvf.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
+    return y, nc
 
 
 def _paged_rows(pages: jnp.ndarray, pos: jnp.ndarray, ps: int, R: int) -> jnp.ndarray:
@@ -802,6 +883,11 @@ def _apply_commit(
         )
         new_cache["pk"] = ck.at[dst_rows].set(ck[src_rows], mode="drop")
         new_cache["pv"] = cv.at[dst_rows].set(cv[src_rows], mode="drop")
+        if "pks" in cache:
+            # scales are page metadata: the accepted rows' scale control
+            # words move with the int8 payload, same gather/scatter maps
+            for n in ("pks", "pvs"):
+                new_cache[n] = cache[n].at[dst_rows].set(cache[n][src_rows], mode="drop")
         return new_cache
     ck, cv = cache["k"], cache["v"]
     B, W = ck.shape[0], ck.shape[1]
@@ -810,7 +896,35 @@ def _apply_commit(
     dst_slot = jnp.where(dst >= 0, jnp.remainder(dst, W), W)
     new_cache["k"] = ck.at[bidx, dst_slot].set(ck[bidx, src_slot], mode="drop")
     new_cache["v"] = cv.at[bidx, dst_slot].set(cv[bidx, src_slot], mode="drop")
+    if "ks" in cache:
+        for n in ("ks", "vs"):
+            new_cache[n] = cache[n].at[bidx, dst_slot].set(cache[n][bidx, src_slot], mode="drop")
     return new_cache
+
+
+def cow_copy_page(cache: Params, old_page: int, new_page: int, page_size: int) -> Params:
+    """Copy-on-write page duplication: after
+    :meth:`repro.core.pages.PageTable.ensure_writable` rebinds a shared page,
+    copy the old physical page's rows into the fresh one — the int8 payload
+    AND the per-row scale leaves together.  A page is only meaningful as the
+    (int8 rows, scale rows) pair: copying pk/pv but aliasing pks/pvs would
+    let the writer's next row write corrupt the sibling branch still reading
+    the shared page's scales.
+    """
+    o0, n0 = int(old_page) * page_size, int(new_page) * page_size
+
+    def fix(part, stacked):
+        def f(kp, leaf):
+            name = getattr(kp[-1], "key", None)
+            if name not in ("pk", "pv", "pks", "pvs"):
+                return leaf
+            if stacked:  # scan-stacked: superblock axis leads
+                return leaf.at[:, n0 : n0 + page_size].set(leaf[:, o0 : o0 + page_size])
+            return leaf.at[n0 : n0 + page_size].set(leaf[o0 : o0 + page_size])
+
+        return jax.tree_util.tree_map_with_path(f, part)
+
+    return {"scan": fix(cache["scan"], True), "rest": fix(cache["rest"], False)}
 
 
 def _decode_attn_paged_spec(
@@ -831,18 +945,24 @@ def _decode_attn_paged_spec(
     pos = _spec_positions(lengths, T)
     q, k, v = L._qkv(xn, p, cfg, pos)
     rows = _paged_rows(pages, pos, ps, R)
+    cks = cvs = None
+    if "pks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["pks"].at[rows].set(ksr, mode="drop")
+        cvs = cache["pvs"].at[rows].set(vsr, mode="drop")
     ck = cache["pk"].at[rows].set(k.astype(cache["pk"].dtype), mode="drop")
     cv = cache["pv"].at[rows].set(v.astype(cache["pv"].dtype), mode="drop")
     if cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode_paged
 
-        out = flash_decode_paged(q, ck, cv, pos, pages, page_size=ps)
+        scl = None if cks is None else jnp.stack([cks, cvs])
+        out = flash_decode_paged(q, ck, cv, pos, pages, page_size=ps, scales=scl)
     else:
         Smax = pages.shape[1] * ps
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
-        vk = _paged_view(ck, pages, ps)  # (B, Smax, nkv, hd)
-        vv = _paged_view(cv, pages, ps)
+        vk = _paged_view(_deq(ck, cks), pages, ps)  # (B, Smax, nkv, hd)
+        vv = _paged_view(_deq(cv, cvs), pages, ps)
         mapped = jnp.repeat(pages >= 0, ps, axis=1)  # (B, Smax)
         valid = mapped[:, None, :] & (
             jnp.arange(Smax)[None, None, :] <= pos[:, :, None]
@@ -855,7 +975,10 @@ def _decode_attn_paged_spec(
         out = jnp.einsum("bngts,bsnh->btngh", w, vv.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"pk": ck, "pv": cv}
+    nc = {"pk": ck, "pv": cv}
+    if cks is not None:
+        nc["pks"], nc["pvs"] = cks, cvs
+    return y, nc
 
 
 def _decode_attn_paged_tree(
@@ -879,22 +1002,28 @@ def _decode_attn_paged_tree(
     pos = lengths[:, None] + depths[None, :]  # rotary positions
     q, k, v = L._qkv(xn, p, cfg, pos)
     rows = _paged_rows(pages, lrows, ps, R)
+    cks = cvs = None
+    if "pks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["pks"].at[rows].set(ksr, mode="drop")
+        cvs = cache["pvs"].at[rows].set(vsr, mode="drop")
     ck = cache["pk"].at[rows].set(k.astype(cache["pk"].dtype), mode="drop")
     cv = cache["pv"].at[rows].set(v.astype(cache["pv"].dtype), mode="drop")
     if cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode_paged
 
+        scl = None if cks is None else jnp.stack([cks, cvs])
         out = flash_decode_paged(
             q, ck, cv, lengths, pages, page_size=ps,
             ancestors=jnp.asarray(tree.ancestor_words(), jnp.int32),
-            base=lengths,
+            base=lengths, scales=scl,
         )
     else:
         Smax = pages.shape[1] * ps
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         groups = cfg.num_heads // nkv
-        vk = _paged_view(ck, pages, ps)
-        vv = _paged_view(cv, pages, ps)
+        vk = _paged_view(_deq(ck, cks), pages, ps)
+        vv = _paged_view(_deq(cv, cvs), pages, ps)
         mapped = jnp.repeat(pages >= 0, ps, axis=1)  # (B, Smax)
         table = jnp.asarray(tree.ancestor_table(), bool)  # (T, T)
         u = jnp.arange(Smax)[None, :] - lengths[:, None]  # (B, Smax) draft-row index
@@ -912,7 +1041,10 @@ def _decode_attn_paged_tree(
         out = jnp.einsum("bngts,bsnh->btngh", w, vv.astype(jnp.float32))
         out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"pk": ck, "pv": cv}
+    nc = {"pk": ck, "pv": cv}
+    if cks is not None:
+        nc["pks"], nc["pvs"] = cks, cvs
+    return y, nc
 
 
 def _decode_attn_rolling_tree(
@@ -945,6 +1077,11 @@ def _decode_attn_rolling_tree(
     q, k, v = L._qkv(xn, p, cfg, pos)
     bidx = jnp.arange(B)[:, None]
     slots = jnp.remainder(lrows, W)
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = cache["ks"].at[bidx, slots].set(ksr)
+        cvs = cache["vs"].at[bidx, slots].set(vsr)
     ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
     cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
     limit = min(window, W) if window else W
@@ -968,13 +1105,17 @@ def _decode_attn_rolling_tree(
     )  # (B, T, W)
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, T, nkv, groups, hd)
-    s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
+    s = jnp.einsum("btngh,bsnh->bngts", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
     s = jnp.where(valid[:, None, None, :, :], s, L.NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bngts,bsnh->btngh", w, cv.astype(jnp.float32))
+    out = jnp.einsum("bngts,bsnh->btngh", w, cvf.astype(jnp.float32))
     out = out.reshape(B, T, cfg.num_heads, hd).astype(xn.dtype)
     y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
+    return y, nc
 
 
 def _decode_attn_rolling(
@@ -991,8 +1132,16 @@ def _decode_attn_rolling(
     positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
     q, k, v = L._qkv(xn, p, cfg, positions)
     write = jnp.remainder(cache_index, W)
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["ks"], ksr, write, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["vs"], vsr, write, axis=1)
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
     # validity: slot position must be within [cache_index - limit + 1, cache_index]
     limit = min(window, W) if window else W
     if cfg.decode_plane and cfg.use_pallas and window:
@@ -1000,11 +1149,13 @@ def _decode_attn_rolling(
         # the scalar-prefetch path; at most W KV bytes move per head
         from repro.kernels.flash_attention import flash_decode_window
 
+        scl = None if cks is None else jnp.stack([cks, cvs])
         out = flash_decode_window(
-            q, ck, cv, jnp.broadcast_to(cache_index, (B,)).astype(jnp.int32), window=limit
+            q, ck, cv, jnp.broadcast_to(cache_index, (B,)).astype(jnp.int32),
+            window=limit, scales=scl,
         )
         y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
-        return y, {"k": ck, "v": cv}
+        return y, nc
     slot = jnp.arange(W)
     # absolute position stored in slot s (rolling): the largest p <= cache_index with p % W == s
     offset = jnp.remainder(write - slot, W)
@@ -1012,14 +1163,15 @@ def _decode_attn_rolling(
     valid = (abs_pos >= 0) & (abs_pos > cache_index - limit)
     scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
     groups = cfg.num_heads // cfg.num_kv_heads
+    ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
     qg = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.resolved_head_dim)
-    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
     s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
+    out = jnp.einsum("bngst,btnh->bsngh", w, cvf.astype(jnp.float32))
     out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(xn.dtype)
     y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    return y, nc
 
 
 def _decode_attn_prefix(
@@ -1041,22 +1193,32 @@ def _decode_attn_prefix(
     B = xn.shape[0]
     positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
     q, k, v = L._qkv(xn, p, cfg, positions)
+    cks = cvs = None
+    if "ks" in cache:
+        k, v, ksr, vsr = _quant_kv_rows(k, v)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["ks"], ksr, cache_index, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["vs"], vsr, cache_index, axis=1)
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
     if cfg.use_pallas:
         from repro.kernels.flash_attention import flash_decode
 
-        out = flash_decode(q, ck, cv, cache_index)
+        scl = None if cks is None else jnp.stack([cks, cvs])
+        out = flash_decode(q, ck, cv, cache_index, scales=scl)
     else:
         S = ck.shape[1]
         valid = jnp.arange(S) <= cache_index
         scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
         groups = cfg.num_heads // cfg.num_kv_heads
+        ckf, cvf = _deq(ck, cks), _deq(cv, cvs)
         qg = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.resolved_head_dim)
-        s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+        s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32), ckf.astype(jnp.float32)) * scale
         s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bngst,btnh->bsngh", w, cv.astype(jnp.float32))
+        out = jnp.einsum("bngst,btnh->bsngh", w, cvf.astype(jnp.float32))
         out = out.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim).astype(xn.dtype)
     y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(out.dtype))
-    return y, {"k": ck, "v": cv}
+    nc = {"k": ck, "v": cv}
+    if cks is not None:
+        nc["ks"], nc["vs"] = cks, cvs
+    return y, nc

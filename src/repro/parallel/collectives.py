@@ -10,22 +10,24 @@
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+# Hoisted to core.quant (the serve-side quantized bandwidth plane shares the
+# same symmetric-int8 + scale-control-word scheme); re-exported here so wire
+# callers and existing imports keep working unchanged.
+from repro.core.quant import dequantize_int8, quantize_int8
 
-def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric per-tensor int8 quantization; scale is the control word."""
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "hierarchical_grad_sync",
+    "tree_bytes",
+    "control_bytes",
+]
 
 
 def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:

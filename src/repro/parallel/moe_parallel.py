@@ -44,8 +44,10 @@ def _moe_param_specs(p_example: Params) -> Params:
     """in_specs pytree for the MoE param dict: experts over model, rest replicated."""
     specs: Params = {}
     for k in p_example:
-        if k in ("w_gate", "w_up", "w_down"):
+        if k in ("w_gate", "w_up", "w_down", "w_gate_q", "w_up_q", "w_down_q"):
             specs[k] = P("model", None, None)
+        elif k in ("w_gate_s", "w_up_s", "w_down_s"):
+            specs[k] = P("model")  # (E,) scale words ride the expert axis
         elif k == "shared":
             specs[k] = {kk: P() for kk in p_example[k]}
         else:

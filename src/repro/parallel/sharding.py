@@ -62,10 +62,17 @@ _MODEL_AXIS_PREFS: Dict[str, Tuple[int, ...]] = {
     "dt_bias": (0,),
     # frontend stub
     "proj": (1,),
+    # per-expert int8 scale control words (E,): expert axis, same as stacks
+    "w_gate_s": (0,),
+    "w_up_s": (0,),
+    "w_down_s": (0,),
 }
 
-# Expert-stacked params (leading E axis): shard experts over "model".
-_EXPERT_PARAMS = {"w_gate", "w_up", "w_down"}
+# Expert-stacked params (leading E axis): shard experts over "model".  The
+# int8 decode twins ("_q") shard identically so each shard's quantized slice
+# sits next to its f32 stack; the (E,) scale control words follow on the
+# same axis via _MODEL_AXIS_PREFS.
+_EXPERT_PARAMS = {"w_gate", "w_up", "w_down", "w_gate_q", "w_up_q", "w_down_q"}
 
 # Always-replicated small params.
 _REPLICATED = {"ln1", "ln2", "final_norm", "q_norm", "k_norm", "norm_scale", "router"}
@@ -217,7 +224,7 @@ def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
     spec = [None] * len(shape)
     if stack:
         spec[0] = None
-    if name not in ("pk", "pv") and len(shape) > stack:
+    if name not in ("pk", "pv", "pks", "pvs") and len(shape) > stack:
         spec[stack] = baxes
 
     def try_model(ax: int) -> bool:
@@ -227,7 +234,13 @@ def cache_spec_for(path, shape: Tuple[int, ...], batch: int, mesh: Mesh) -> P:
             return True
         return False
 
-    if name in ("pk", "pv"):
+    if name in ("pks", "pvs"):
+        # paged per-token scale control words (R,): like the pool they index,
+        # no batch axis — and they stay REPLICATED: the (R,) f32 vector is
+        # tiny next to the int8 pool, and the pk/pv rows usually shard on the
+        # KV-head axis the scales don't have.
+        pass
+    elif name in ("pk", "pv"):
         # paged KV pool (R, nkv, hd): NO batch axis — the pool is shared
         # across slots and addressed through the replicated block table, so
         # the batch never touches its layout.  Same preference order as the

@@ -362,6 +362,8 @@ def _build_replica(spec: dict):
         spec_tokens=width,
         paged=bool(spec.get("paged", cfg.paged)),
         page_size=int(spec.get("page_size") or cfg.page_size),
+        kv_dtype=str(spec.get("kv_dtype") or cfg.kv_dtype),
+        expert_dtype=str(spec.get("expert_dtype") or cfg.expert_dtype),
     )
     mesh = make_host_mesh(1, 1)
     params = Model(cfg).init(jax.random.PRNGKey(int(spec.get("seed", 0))))

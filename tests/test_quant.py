@@ -1,0 +1,409 @@
+"""Quantized bandwidth plane: int8 KV pages + int8 expert stacks with scale
+control words on the scalar-prefetch path.
+
+Contract, layer by layer:
+
+* core — ``quantize_int8``/``dequantize_int8`` round-trip preserves the
+  input dtype by default (bf16 in, bf16 out) and the blockwise ``axis=``
+  variant scales each block independently;
+* kernel — the quantized launches (int8 tiles + per-row scale control
+  words, dequant INSIDE the kernel before the dot) are BITWISE equal to the
+  same launch fed the dequantized f32 buffers, on every path: chain,
+  ancestor-masked tree, rolling window across the wrap, and paged through
+  the block table (scales compose after the length clamp / ancestor mask /
+  page lookup, so one code path serves all four);
+* model — quantized speculative ``decode_tokens`` streams token-identical
+  to quantized sequential greedy, contiguous and paged; rolling-window
+  layers stay identical across the wrap point;
+* pages — copy-on-write must duplicate a page as the (int8 rows, scale
+  rows) PAIR: aliased scale rows would let the writer's next row write
+  corrupt the sibling branch still reading the shared page;
+* checkpoint — int8 leaves and their scale leaves round-trip dtype-exact,
+  so a re-warmed replica decodes the same quantized stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.quant import dequantize_int8, quantize_int8
+from repro.models import transformer as T
+from repro.models.model import Model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _moe_cfg(**kw):
+    return dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# core: shared quantization helpers
+# ---------------------------------------------------------------------------
+
+
+def test_dequantize_int8_preserves_bf16_roundtrip_dtype():
+    """bf16 in -> bf16 out by default: the scale carries the target dtype, so
+    collectives and cache reads come back in the compute dtype without an
+    explicit cast at every call site."""
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((4, 8)), jnp.bfloat16
+    )
+    q, s = quantize_int8(x, axis=1)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.bfloat16
+    y = dequantize_int8(q, s)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(x, np.float32), atol=0.05, rtol=0.05
+    )
+    # explicit override still wins
+    assert dequantize_int8(q, s, dtype=jnp.float32).dtype == jnp.float32
+
+
+def test_quantize_int8_blockwise_scales_each_block():
+    """axis= variant: a huge row must not flatten a tiny row's resolution."""
+    x = jnp.asarray([[1000.0] * 8, [0.01] * 8], jnp.float32)
+    q, s = quantize_int8(x, axis=1)
+    assert s.shape == (2, 1)
+    y = dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=0.02)
+
+
+def _quant_rows(x):
+    """Per-token (per-row) int8 cache quantization, (B, S, nkv, hd) ->
+    (int8 cache, (B, S) f32 scales) — the layout the model writes."""
+    q, s = quantize_int8(x.astype(jnp.float32), axis=(-2, -1))
+    return q, s[..., 0, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel: quantized launches bitwise-equal the dequantized-f32 launches
+# ---------------------------------------------------------------------------
+
+
+def test_flash_decode_quantized_bitwise_chain_and_ragged():
+    from repro.kernels.flash_attention import flash_decode
+
+    rng = np.random.default_rng(0)
+    B, Tn, nq, nkv, hd, S = 3, 2, 4, 2, 16, 48
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    kq, ks = _quant_rows(ck)
+    vq, vs = _quant_rows(cv)
+    idx = jnp.asarray([0, 13, 29], jnp.int32)
+    got = flash_decode(
+        q, kq, vq, idx, scales=jnp.stack([ks, vs]), bkv=16, interpret=True
+    )
+    want = flash_decode(
+        q, kq.astype(jnp.float32) * ks[..., None, None],
+        vq.astype(jnp.float32) * vs[..., None, None], idx, bkv=16, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_decode_quantized_bitwise_tree_masked():
+    """Scales compose after the ancestor mask: a branchy draft tree over an
+    int8 cache equals the dequantized launch node-for-node."""
+    from repro.kernels.flash_attention import flash_decode
+
+    rng = np.random.default_rng(1)
+    B, nq, nkv, hd, S, base = 2, 4, 2, 16, 32, 9
+    # 4-node tree: root -> {1, 2}, 2 -> 3
+    ancestors = jnp.asarray([0b0001, 0b0011, 0b0101, 0b1101], jnp.int32)
+    Tn = ancestors.shape[0]
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    kq, ks = _quant_rows(ck)
+    vq, vs = _quant_rows(cv)
+    bvec = jnp.full((B,), base, jnp.int32)
+    got = flash_decode(
+        q, kq, vq, bvec, ancestors=ancestors, base=bvec,
+        scales=jnp.stack([ks, vs]), bkv=16, interpret=True,
+    )
+    want = flash_decode(
+        q, kq.astype(jnp.float32) * ks[..., None, None],
+        vq.astype(jnp.float32) * vs[..., None, None],
+        bvec, ancestors=ancestors, base=bvec, bkv=16, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# bases cover pre-fill, the fill boundary, straddling the wrap, steady state
+@pytest.mark.parametrize("base", [0, 13, 17, 40])
+def test_flash_decode_window_quantized_bitwise_across_wrap(base):
+    from repro.kernels.flash_attention import flash_decode_window
+
+    rng = np.random.default_rng(base)
+    B, Tn, nq, nkv, hd, W = 2, 3, 4, 2, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, W, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, W, nkv, hd)), jnp.float32)
+    kq, ks = _quant_rows(ck)
+    vq, vs = _quant_rows(cv)
+    got = flash_decode_window(
+        q, kq, vq, jnp.int32(base), window=W,
+        scales=jnp.stack([ks, vs]), bkv=8, interpret=True,
+    )
+    want = flash_decode_window(
+        q, kq.astype(jnp.float32) * ks[..., None, None],
+        vq.astype(jnp.float32) * vs[..., None, None],
+        jnp.int32(base), window=W, bkv=8, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_decode_paged_quantized_bitwise_vs_contiguous():
+    """Paged pool scales ride the block-table lookup: the (2, R) pool-row
+    scales through the identity table equal the contiguous quantized launch,
+    which equals the dequantized launch — all three bitwise."""
+    from repro.kernels.flash_attention import flash_decode, flash_decode_paged
+
+    rng = np.random.default_rng(2)
+    B, Tn, nq, nkv, hd, S, ps = 2, 2, 4, 2, 16, 32, 8
+    q = jnp.asarray(rng.standard_normal((B, Tn, nq, hd)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    kq, ks = _quant_rows(ck)
+    vq, vs = _quant_rows(cv)
+    idx = jnp.asarray([9, 27], jnp.int32)
+
+    contig = flash_decode(
+        q, kq, vq, idx, scales=jnp.stack([ks, vs]), bkv=ps, interpret=True
+    )
+    pool_k = kq.reshape(B * S, nkv, hd)
+    pool_v = vq.reshape(B * S, nkv, hd)
+    pool_scl = jnp.stack([ks.reshape(-1), vs.reshape(-1)])
+    pages = (
+        jnp.arange(B * (S // ps), dtype=jnp.int32).reshape(B, S // ps)
+    )
+    paged = flash_decode_paged(
+        q, pool_k, pool_v, idx, pages, page_size=ps,
+        scales=pool_scl, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(contig))
+
+
+def test_decode_moe_quantized_bitwise_vs_dequantized_oracle():
+    """int8 expert stacks + per-expert scale words == the f32 oracle run on
+    elementwise-dequantized stacks (same multiply-before-dot order)."""
+    from repro.kernels.moe_decode import ref
+
+    rng = np.random.default_rng(3)
+    Tn, k, E, d, f = 4, 2, 8, 16, 32
+    x = jnp.asarray(rng.standard_normal((Tn, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, E, (Tn, k)), jnp.int32)
+    w = jnp.asarray(rng.random((Tn, k)), jnp.float32)
+    stacks, scales = [], []
+    for shape in ((E, d, f), (E, d, f), (E, f, d)):
+        q, s = quantize_int8(
+            jnp.asarray(rng.standard_normal(shape), jnp.float32), axis=(1, 2)
+        )
+        stacks.append(q)
+        scales.append(s[:, 0, 0])
+    scl = jnp.stack(scales).astype(jnp.float32)
+    got = ref.decode_moe(x, ids, w, *stacks, scales=scl)
+    deq = [
+        st.astype(jnp.float32) * sc[:, None, None]
+        for st, sc in zip(stacks, scl)
+    ]
+    want = ref.decode_moe(x, ids, w, *deq)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# model: quantized speculative streams == quantized sequential greedy
+# ---------------------------------------------------------------------------
+
+
+def _sequential_tokens(cfg, params, prompts, max_len, gen):
+    model = Model(dataclasses.replace(cfg, spec_tokens=1))
+    cache = model.init_cache(prompts.shape[0], max_len)
+    logits, cache = jax.jit(model.prefill)(params, prompts, cache)
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec = jax.jit(model.decode_step)
+    S = prompts.shape[1]
+    out = [toks]
+    for i in range(gen):
+        logits, cache = dec(params, cache, toks, jnp.int32(S + i))
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks)
+    return out
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_quantized_spec_decode_token_identical_to_sequential(paged):
+    Tn, B, S = 4, 2, 8
+    cfg = _moe_cfg(
+        decode_plane=True, kv_dtype="int8", expert_dtype="int8",
+        page_size=4 if paged else 0,
+    )
+    max_len = S + 2 * Tn + 1 if not paged else 24  # whole pages when paged
+    mspec = Model(dataclasses.replace(cfg, spec_tokens=Tn))
+    params = mspec.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    seq_toks = _sequential_tokens(cfg, params, prompts, max_len, 2 * Tn)
+
+    cache = mspec.init_cache(B, max_len)
+    _, cache = jax.jit(mspec.prefill)(params, prompts, cache)
+    pages = None
+    if paged:  # paged caches seed through contiguous prefill + pagination
+        mspec = Model(dataclasses.replace(mspec.cfg, paged=True))
+        cache = mspec.paginate_cache(cache, max_len)
+        pages = T.identity_page_table(mspec.cfg, B, max_len)
+    dtok = jax.jit(mspec.decode_tokens)
+    for launch in range(2):
+        draft = jnp.stack(seq_toks[launch * Tn : (launch + 1) * Tn], axis=1)
+        lens = jnp.full((B,), S + launch * Tn, jnp.int32)
+        acc = jnp.full((B,), 0 if launch == 0 else Tn - 1, jnp.int32)
+        if paged:
+            lg, cache = dtok(params, cache, draft, lens, acc, pages=pages)
+        else:
+            lg, cache = dtok(params, cache, draft, lens, acc)
+        for t in range(Tn):
+            np.testing.assert_array_equal(
+                np.asarray(jnp.argmax(lg[:, t], -1)),
+                np.asarray(seq_toks[launch * Tn + t + 1]),
+                err_msg=f"launch {launch} t {t}",
+            )
+
+
+def test_quantized_paged_chain_bitwise_equals_contiguous():
+    """paginate_cache keeps the quantized plane bitwise: the (R,) pool
+    scales through the identity table reproduce the contiguous quantized
+    decode_tokens logits exactly."""
+    Tn, B, S, max_len = 4, 2, 8, 32
+    cfg = _moe_cfg(
+        decode_plane=True, spec_tokens=Tn, page_size=8,
+        kv_dtype="int8", expert_dtype="int8",
+    )
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = m.init_cache(B, max_len)
+    _, cache = jax.jit(m.prefill)(params, prompts, cache)
+    draft = jax.random.randint(jax.random.PRNGKey(2), (B, Tn), 0, cfg.vocab_size)
+    lens = jnp.full((B,), S, jnp.int32)
+    acc = jnp.zeros((B,), jnp.int32)
+    lg_c, _ = jax.jit(m.decode_tokens)(params, cache, draft, lens, acc)
+
+    pm = Model(dataclasses.replace(cfg, paged=True))
+    pcache = pm.paginate_cache(cache, max_len)
+    pages = T.identity_page_table(pm.cfg, B, max_len)
+    lg_p, _ = jax.jit(pm.decode_tokens)(params, pcache, draft, lens, acc, pages=pages)
+    np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+
+
+def test_quantized_rolling_window_spec_crosses_wrap():
+    """Rolling-window + int8: speculative launches across the wrap point
+    reproduce the quantized sequential trace (per-token scales wrap with
+    their slots, so eviction drops the scale with its row)."""
+    W, Tn = 8, 3
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-32b"), num_layers=1,
+        attention_kind="local", local_window=W, decode_plane=True,
+        kv_dtype="int8",
+    )
+    B, S, gen = 2, 6, 6
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    max_len = S + gen + Tn + 1
+    mspec = Model(dataclasses.replace(cfg, spec_tokens=Tn))
+    params = mspec.init(jax.random.PRNGKey(0))
+    seq_toks = _sequential_tokens(cfg, params, prompts, max_len, gen)
+
+    cache = mspec.init_cache(B, max_len)
+    _, cache = jax.jit(mspec.prefill)(params, prompts, cache)
+    dtok = jax.jit(mspec.decode_tokens)
+    for launch in range(2):  # second launch crosses the wrap at W=8
+        draft = jnp.stack(seq_toks[launch * Tn : (launch + 1) * Tn], axis=1)
+        lens = jnp.full((B,), S + launch * Tn, jnp.int32)
+        acc = jnp.full((B,), 0 if launch == 0 else Tn - 1, jnp.int32)
+        lg, cache = dtok(params, cache, draft, lens, acc)
+        for t in range(Tn):
+            np.testing.assert_array_equal(
+                np.asarray(jnp.argmax(lg[:, t], -1)),
+                np.asarray(seq_toks[launch * Tn + t + 1]),
+                err_msg=f"launch {launch} t {t}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# pages: copy-on-write duplicates the (int8 rows, scale rows) pair
+# ---------------------------------------------------------------------------
+
+
+def test_paged_cow_deep_copies_scale_rows():
+    from repro.core.pages import PageTable
+
+    cfg = _moe_cfg(decode_plane=True, paged=True, page_size=4, kv_dtype="int8")
+    m = Model(cfg)
+    ps = cfg.page_size
+    cache = m.init_cache(2, 16)
+    blk = cache["scan"]["b0"]
+    # seed distinct payloads + scales on physical page 0 and share it: slot 0
+    # and slot 1 both map logical page 0 -> physical page 0
+    blk["pk"] = blk["pk"].at[:, 0:ps].set(7)
+    blk["pks"] = blk["pks"].at[:, 0:ps].set(0.5)
+    n_pages = blk["pk"].shape[1] // ps
+    pt = PageTable(slots=2, max_pages=16 // ps, num_pages=n_pages, page_size=ps)
+    assert pt.alloc() == 0         # slot 0's page (deterministic lowest-first)
+    pt.table[0, 0] = 0
+    pt.adopt(1, 0, 0)              # slot 1 shares it (prefix-trie hit)
+
+    old = pt.ensure_writable(1, 0)
+    assert old == 0
+    new = int(pt.table[1, 0])
+    assert new != 0
+    out = T.cow_copy_page(cache, old, new, ps)
+    ob = out["scan"]["b0"]
+    n0 = new * ps
+    # payload AND scales copied into the fresh page...
+    np.testing.assert_array_equal(np.asarray(ob["pk"][:, n0 : n0 + ps]), 7)
+    np.testing.assert_array_equal(np.asarray(ob["pks"][:, n0 : n0 + ps]), 0.5)
+    # ...and NOT aliased: the writer overwriting its private rows leaves the
+    # sibling's shared page (payload and scales alike) untouched
+    mut = {
+        "scan": jax.tree.map(lambda x: x, out["scan"]),
+        "rest": out["rest"],
+    }
+    mb = mut["scan"]["b0"]
+    mb["pk"] = mb["pk"].at[:, n0 : n0 + ps].set(-3)
+    mb["pks"] = mb["pks"].at[:, n0 : n0 + ps].set(9.0)
+    np.testing.assert_array_equal(np.asarray(mb["pk"][:, 0:ps]), 7)
+    np.testing.assert_array_equal(np.asarray(mb["pks"][:, 0:ps]), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: int8 + scale leaves round-trip dtype-exact
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrips_int8_expert_stacks(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    cfg = _moe_cfg(decode_plane=True, expert_dtype="int8", kv_dtype="int8")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    names = [
+        jax.tree_util.keystr(p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    ]
+    assert any("w_gate_q" in n for n in names)
+    assert any("w_gate_s" in n for n in names)
+
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(3, params, {})
+    abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    p2, _, step, _ = mgr.restore(abs_p, {})
+    assert step == 3
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_flatten_with_path(p2)[0],
+    ):
+        assert a.dtype == b.dtype, jax.tree_util.keystr(pa)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
