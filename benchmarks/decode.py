@@ -742,6 +742,189 @@ def _bench_quant(cfg) -> dict:
     return out
 
 
+def _bench_programs(cfg) -> dict:
+    """The request-level control-flow plane (PR 10): compiled token automata
+    steering constrained + fork/join decode.
+
+    Structural claims: (1) a constrained serve fabric through tree drafts,
+    paged KV, int8 KV/experts, and one injected crash + checkpoint re-warm
+    streams TOKEN-IDENTICAL to a sequential Python oracle applying the same
+    automaton mask per step, with ZERO tokens emitted outside the mask;
+    (2) a 2-way fork off a page-aligned prompt copies ZERO KV rows (branches
+    bind the prompt's pages through the prefix trie); (3) steering the
+    drafter by the automaton's allowed set achieves accepts/launch >= the
+    unsteered drafter on the same JSON-constrained prompts without changing
+    a single committed token.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.plans import TreePlan
+    from repro.core.programs import compile_program, masked_argmax, program_slots
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeReplica, degrade_ladder, make_replica_factory
+    from repro.parallel.sharding import param_shardings
+    from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+    from repro.runtime.faults import FaultInjector, parse_faults
+
+    out = {}
+    tree = TreePlan.from_branching([2]).validate()
+    Tn = tree.num_nodes
+    cq = dataclasses.replace(
+        cfg, decode_plane=True, spec_tokens=Tn, paged=True, page_size=4,
+        kv_dtype="int8", expert_dtype="int8",
+    )
+    mesh = make_host_mesh(1, 1)
+    params = Model(cq).init(jax.random.PRNGKey(0))
+    gen, slots, n_req = 10, 2, 3
+    spec = {"segments": [{"kind": "json_schema", "schema": {
+        "type": "object",
+        "properties": {"a": {"type": "integer", "maxDigits": 2}},
+    }}]}
+    prompts = [
+        np.random.default_rng(i).integers(0, cfg.vocab_size, size=8).astype(np.int32)
+        for i in range(n_req)
+    ]
+    max_len = 8 + gen + Tn
+    ladder = degrade_ladder(tree, Tn)
+    auto = compile_program(spec, cq.vocab_size).automaton
+
+    def run_fabric(specs, ckpt, checkpoint_every=0):
+        inj = FaultInjector(parse_faults(specs)) if specs else None
+        make = make_replica_factory(
+            cq, mesh, slots, max_len, params, ladder,
+            fault_hook=inj.check if inj else None, launch_timeout=30.0, ckpt=ckpt,
+        )
+
+        def restore_params(mgr):
+            abs_p = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+            )
+            p, _, _, _ = mgr.restore(
+                abs_p, {}, param_shardings=param_shardings(abs_p, mesh)
+            )
+            return p
+
+        fabric = ServeFabric(
+            make,
+            [Request(rid=i, prompt=prompts[i], gen=gen, program=spec)
+             for i in range(n_req)],
+            FabricConfig(
+                n_replicas=2, launch_timeout=30.0,
+                checkpoint_every=checkpoint_every,
+                max_degrade_level=len(ladder) - 1, synthetic_step_times=True,
+            ),
+            ckpt=ckpt, restore_params=restore_params if ckpt else None,
+            params=params,
+        )
+        return fabric.run(), fabric.stats
+
+    # (1) masked sequential oracle (spec width 1, unpaged, same int8 params)
+    c1 = dataclasses.replace(cq, spec_tokens=1, paged=False)
+    m1 = Model(c1)
+    pre1, dec1 = jax.jit(m1.prefill), jax.jit(m1.decode_step)
+    oracles = {}
+    for i, prompt in enumerate(prompts):
+        cache1 = m1.init_cache(1, max_len)
+        lg1, cache1 = pre1(params, jnp.asarray(prompt)[None], cache1)
+        st = auto.start
+        tok = masked_argmax(np.asarray(lg1[0]), auto.mask(st))
+        st = auto.step(st, tok)
+        stream = [tok]
+        for s in range(gen):
+            if auto.is_accept(st):
+                break
+            lg1, cache1 = dec1(
+                params, cache1, jnp.asarray([tok], jnp.int32),
+                jnp.int32(len(prompt) + s),
+            )
+            tok = masked_argmax(np.asarray(lg1[0]), auto.mask(st))
+            st = auto.step(st, tok)
+            stream.append(tok)
+        oracles[i] = stream
+
+    with tempfile.TemporaryDirectory() as d:
+        faulted, stats = run_fabric(
+            "crash@step=3:replica=0",
+            CheckpointManager(d, keep=2), checkpoint_every=2,
+        )
+    out["streams_match_oracle"] = int(all(
+        faulted[rid].error is None and faulted[rid].tokens == oracles[rid]
+        for rid in oracles
+    ))
+    out["masked_emissions"] = stats["prog_masked_emissions"]
+    out["constrained_tokens"] = stats["prog_tokens"]
+    out["states_visited"] = stats["prog_states_visited"]
+    out["serve_crashes"] = stats["crashes"]
+    assert out["streams_match_oracle"] == 1, (
+        "constrained serve diverged from the masked sequential oracle"
+    )
+    assert out["masked_emissions"] == 0, (
+        "constrained decode emitted tokens outside the automaton's mask"
+    )
+
+    # (2) fork/join: 2 branches off one page-aligned prompt, zero KV copies
+    def drain(rep, requests):
+        results, queue = {}, list(requests)
+        for _ in range(500):
+            while queue and len(rep.free_slots()) >= program_slots(
+                getattr(queue[0], "program", None)
+            ):
+                rep.admit(queue.pop(0))
+            if not rep.has_work():
+                if not queue:
+                    return results
+                continue
+            for res in rep.step():
+                results[res.rid] = res
+        raise AssertionError("replica did not drain")
+
+    fork_spec = {"fork": 2, "join": "all", "segments": [
+        {"kind": "json_schema", "schema": {"enum": [17, 42]}},
+        {"kind": "literal", "text": ";ok"},
+    ]}
+    rep = ServeReplica(cq, mesh, slots, max_len, params, tree=tree)
+    fork_res = drain(
+        rep, [Request(rid=0, prompt=prompts[0], gen=gen, program=fork_spec)]
+    )
+    out["fork_kv_rows_copied"] = rep.fork_kv_rows_copied
+    out["forks_started"] = rep.forks_started
+    out["fork_branches"] = len(fork_res[0].branches or [])
+    out["masked_emissions"] += rep.prog_masked_emissions
+    assert out["fork_kv_rows_copied"] == 0, (
+        "page-aligned fork must share prompt pages, not copy KV rows"
+    )
+    assert out["fork_branches"] == 2
+
+    # (3) steered vs unsteered drafter on the same constrained prompts
+    rates, streams = {}, {}
+    for steer in (True, False):
+        rep = ServeReplica(
+            cq, mesh, slots, max_len, params, tree=tree, steer_drafter=steer
+        )
+        res = drain(
+            rep,
+            [Request(rid=i, prompt=prompts[i], gen=gen, program=spec)
+             for i in range(n_req)],
+        )
+        rates[steer] = rep.accepted_total / max(rep.launches, 1)
+        streams[steer] = {rid: r.tokens for rid, r in res.items()}
+        out["masked_emissions"] += rep.prog_masked_emissions
+    out["accepts_per_launch_steered"] = rates[True]
+    out["accepts_per_launch_unsteered"] = rates[False]
+    out["constrained_accepts_ratio"] = rates[True] / max(rates[False], 1e-9)
+    out["steering_preserves_streams"] = int(streams[True] == streams[False])
+    assert out["constrained_accepts_ratio"] >= 1.0, (
+        "steered drafting must not lose accepts/launch vs unsteered",
+        rates,
+    )
+    assert out["steering_preserves_streams"] == 1, (
+        "steering changed a committed token"
+    )
+    assert out["masked_emissions"] == 0
+    return out
+
+
 def _bench_xproc(cfg) -> dict:
     """The cross-process fabric's recovery ledger, three ways.
 
@@ -1132,6 +1315,7 @@ def run() -> dict:
         "xproc": _bench_xproc(cfg),
         "paged": _bench_paged(cfg),
         "quant": _bench_quant(cfg),
+        "programs": _bench_programs(cfg),
     }
     if sharded is not None:
         out["sharded"] = sharded
@@ -1326,6 +1510,32 @@ def main() -> None:
         f"{qt['kv_bytes_int8']/1e3:.1f} KB ({qt['kv_bytes_ratio']:.3f}x), "
         f"expert bytes {qt['expert_bytes_f32']/1e3:.0f} -> "
         f"{qt['expert_bytes_int8']/1e3:.0f} KB ({qt['expert_bytes_ratio']:.3f}x)"
+    )
+
+    pr = results["programs"]
+    assert pr["streams_match_oracle"] == 1 and pr["masked_emissions"] == 0, (
+        "constrained serve must match the masked sequential oracle with zero "
+        "masked-token emissions", pr,
+    )
+    assert pr["fork_kv_rows_copied"] == 0, (
+        "a page-aligned fork must bind prompt pages by pointer", pr,
+    )
+    assert pr["constrained_accepts_ratio"] >= 1.0, (
+        "automaton-steered drafting must not lose accepts/launch", pr,
+    )
+    assert pr["steering_preserves_streams"] == 1, (
+        "drafter steering must never change a committed token", pr,
+    )
+    print(
+        f"# programs: constrained serve (tree + paged + int8, "
+        f"{pr['serve_crashes']} crash) token-identical to the masked oracle "
+        f"({pr['constrained_tokens']} constrained tokens, "
+        f"{pr['states_visited']} states, {pr['masked_emissions']} masked "
+        f"emissions); fork: {pr['forks_started']} fork x "
+        f"{pr['fork_branches']} branches, {pr['fork_kv_rows_copied']} KV rows "
+        f"copied; steering {pr['accepts_per_launch_unsteered']:.2f} -> "
+        f"{pr['accepts_per_launch_steered']:.2f} accepts/launch "
+        f"({pr['constrained_accepts_ratio']:.2f}x), streams unchanged"
     )
 
     if "sharded" not in results:

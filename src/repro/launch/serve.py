@@ -72,11 +72,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.programs import compile_program, masked_argmax, program_slots
 from repro.runtime.fabric import Request, Result
 from repro.runtime.faults import RequestRejected
 
@@ -122,6 +124,7 @@ class ServeReplica:
         replica_id: int = 0,
         launch_timeout: Optional[float] = None,
         drafter_key: int = 7,
+        steer_drafter: bool = True,
     ):
         import jax
         import jax.numpy as jnp
@@ -217,6 +220,28 @@ class ServeReplica:
         self.requests: List[Optional[Request]] = [None] * B
         self.emitted: List[List[int]] = [[] for _ in range(B)]
 
+        # request-level control-flow plane: per-slot compiled program +
+        # automaton state.  ``prog_state[b]`` is the state after slot b's
+        # full emitted stream; ``prog_rows[b, p]`` mirrors it per committed
+        # stream position (rollback-exact: only accepted positions are ever
+        # written, exactly like the KV rows they ride next to).  Fork groups
+        # track the K branch slots serving one request until join.
+        self.steer_drafter = bool(steer_drafter)
+        self.programs: List[Optional[Any]] = [None] * B
+        self.prog_state = np.full((B,), -1, np.int32)
+        self.prog_rows = np.full((B, max_len + 1), -1, np.int32)
+        self.fork_branch = np.full((B,), -1, np.int32)
+        self.forks: Dict[int, dict] = {}
+        self._prog_cache: Dict[str, Any] = {}
+        self.prog_states_seen: set = set()
+        self.prog_tokens = 0
+        self.prog_mask_frac_sum = 0.0
+        self.prog_mask_cnt = 0
+        self.prog_masked_emissions = 0  # emitted tokens outside the mask: MUST stay 0
+        self.forks_started = 0
+        self.forks_live_max = 0
+        self.fork_kv_rows_copied = 0
+
         self.steps = 0            # launch counter — the fault-spec step index
         self.launches = 0
         self.prefills = 0
@@ -233,8 +258,17 @@ class ServeReplica:
 
     def in_flight(self) -> List[Request]:
         """Requests currently being served, in slot order (= admission order
-        for the supervisor's front-of-queue re-admission on crash)."""
-        return [r for r in self.requests if r is not None]
+        for the supervisor's front-of-queue re-admission on crash).  Fork
+        branches share one request, which must requeue exactly ONCE — its
+        program spec rides the Request, so re-admission re-forks from
+        scratch and the deterministic re-run stays byte-identical."""
+        out: List[Request] = []
+        seen: set = set()
+        for r in self.requests:
+            if r is not None and r.rid not in seen:
+                seen.add(r.rid)
+                out.append(r)
+        return out
 
     def has_work(self) -> bool:
         return bool(self.active.any())
@@ -255,6 +289,20 @@ class ServeReplica:
         if self.paged:
             meta["pager"] = self.pager.snapshot()
             meta["trie"] = self.trie.snapshot()
+        progs = {
+            str(b): {"state": int(self.prog_state[b]),
+                     "branch": int(self.fork_branch[b]),
+                     "emitted": len(self.emitted[b])}
+            for b in range(self.B)
+            if self.active[b] and self.programs[b] is not None
+        }
+        if progs:
+            # informational ledger entry: automaton state is DERIVED state
+            # (recomputable from the emitted stream), so re-warm replays the
+            # requeued request's program rather than restoring these words —
+            # but the ledger records them so a snapshot pins what the crash
+            # interrupted
+            meta["programs"] = progs
         return meta
 
     def paged_stats(self) -> dict:
@@ -308,26 +356,67 @@ class ServeReplica:
         return rows
 
     # ------------------------------------------------------------------
+    def _compiled_program(self, spec: Optional[dict]):
+        """Compile (and cache) a request's program spec; specs are small
+        JSON dicts, so the cache key is their canonical dump."""
+        if not spec:
+            return None
+        key = json.dumps(spec, sort_keys=True)
+        prog = self._prog_cache.get(key)
+        if prog is None:
+            prog = compile_program(spec, self.cfg.vocab_size)
+            self._prog_cache[key] = prog
+        return prog
+
     def admit(self, req: Request) -> int:
-        """Prefill ``req`` into a free slot; returns the slot index.
+        """Prefill ``req`` into a free slot; returns the (first) slot index.
 
         Raises :class:`RequestRejected` for prompts that can never finish
         within the slot budget (checked BEFORE any launch), and lets the
         fault hook veto the admission (poisoned prompts) while no state has
-        been touched."""
+        been touched.
+
+        A request carrying a fork program admits into ``fork`` slots off ONE
+        shared admission prefill: every branch writes the same prefilled
+        prompt (under the paged plane branch 0 publishes the prompt's full
+        pages to the prefix trie and later branches bind them by pointer —
+        zero KV rows copied per fork), and branch ``i``'s first token is the
+        ``i``-th best *allowed* token of the prefill logits, so the K
+        continuations diverge at the fork point and nowhere earlier.
+        """
         jnp = self._jnp
+        spec = getattr(req, "program", None)
+        try:
+            prog = self._compiled_program(spec)
+        except ValueError as err:
+            raise RequestRejected(f"bad program spec: {err}", rid=req.rid)
+        k = prog.fork if prog is not None else 1
         if len(req.prompt) + req.gen + self.T > self.max_len:
             raise RequestRejected(
                 f"prompt len {len(req.prompt)} + gen {req.gen} + spec width "
                 f"{self.T} exceeds the slot budget {self.max_len}",
                 rid=req.rid,
             )
+        if k > self.B:
+            raise RequestRejected(
+                f"program forks {k} ways but the replica has {self.B} slots",
+                rid=req.rid,
+            )
+        if prog is not None and len(prog.automaton.allowed(prog.automaton.start)) < k:
+            raise RequestRejected(
+                f"program forks {k} ways but its grammar allows only "
+                f"{len(prog.automaton.allowed(prog.automaton.start))} first tokens",
+                rid=req.rid,
+            )
         free = self.free_slots()
-        if not free:
-            raise RuntimeError(f"replica {self.replica_id}: no free slot")
+        if len(free) < k:
+            raise RuntimeError(
+                f"replica {self.replica_id}: no free slot "
+                f"({k} needed, {len(free)} available)"
+            )
         if self.fault_hook is not None:
             self.fault_hook(self.replica_id, self.steps + 1, "admit", (req.rid,))
-        b = free[0]
+        slots = free[:k]
         t0 = time.perf_counter()
         prompt_np = np.asarray(req.prompt, np.int32)
         prompt = jnp.asarray(prompt_np)
@@ -340,25 +429,70 @@ class ServeReplica:
                 logits1, one = self._prefill(self.params, prompt[None], one, fe)
             else:
                 logits1, one = self._prefill(self.params, prompt[None], one)
-            if self.paged:
-                rows = self._bind_pages(b, prompt_np)
-                self.cache = self._admit(self.cache, one, b, jnp.asarray(rows))
-            else:
-                self.cache = self._admit(self.cache, one, b)
+            for i, b in enumerate(slots):
+                copied0 = self.admit_copy_rows if self.paged else 0
+                if self.paged:
+                    rows = self._bind_pages(b, prompt_np)
+                    self.cache = self._admit(self.cache, one, b, jnp.asarray(rows))
+                else:
+                    self.cache = self._admit(self.cache, one, b)
+                if i > 0:
+                    self.fork_kv_rows_copied += (
+                        self.admit_copy_rows - copied0 if self.paged
+                        else len(prompt_np)
+                    )
         self.prefill_ms += (time.perf_counter() - t0) * 1e3
         self.prefills += 1
-        first = int(jnp.argmax(logits1[0]))
-        self.lengths[b] = len(req.prompt)
-        self.last_tok[b] = first
-        self.prev_accept[b] = 0
-        self.gen_left[b] = req.gen
-        self.active[b] = True
-        self.history[b] = [first]
-        self.requests[b] = req
-        self.emitted[b] = [first]
-        if self._drafter is not None:
-            self._drafter.admit(b, prompt)
-        return b
+        lg1 = np.asarray(logits1[0])
+        if prog is not None:
+            auto = prog.automaton
+            mask = auto.mask(auto.start)
+            neg = np.finfo(np.float32).min
+            order = np.argsort(-np.where(mask, lg1.astype(np.float32), neg),
+                               kind="stable")
+            firsts = [int(order[i]) for i in range(k)]
+            self.prog_mask_cnt += k
+            self.prog_mask_frac_sum += k * (1.0 - float(mask.mean()))
+            self.prog_states_seen.add(int(auto.start))
+        else:
+            firsts = [int(np.argmax(lg1))]
+        if k > 1:
+            self.forks[req.rid] = {
+                "req": req, "k": k, "join": prog.join,
+                "streams": {}, "accepted": {}, "retired": set(),
+            }
+            self.forks_started += 1
+            self.forks_live_max = max(
+                self.forks_live_max,
+                sum(1 for b in range(self.B)
+                    if self.active[b] and self.fork_branch[b] >= 0) + k,
+            )
+        for i, b in enumerate(slots):
+            first = firsts[i]
+            self.lengths[b] = len(req.prompt)
+            self.last_tok[b] = first
+            self.prev_accept[b] = 0
+            self.gen_left[b] = req.gen
+            self.active[b] = True
+            self.history[b] = [first]
+            self.requests[b] = req
+            self.emitted[b] = [first]
+            self.programs[b] = prog
+            self.fork_branch[b] = i if k > 1 else -1
+            if prog is not None:
+                st = prog.automaton.step(prog.automaton.start, first)
+                if st < 0:
+                    self.prog_masked_emissions += 1
+                self.prog_state[b] = st
+                self.prog_rows[b] = -1
+                self.prog_rows[b, len(req.prompt)] = st
+                self.prog_states_seen.add(int(st))
+                self.prog_tokens += 1
+            else:
+                self.prog_state[b] = -1
+            if self._drafter is not None:
+                self._drafter.admit(b, prompt)
+        return slots[0]
 
     # ------------------------------------------------------------------
     def step(self) -> List[Result]:
@@ -388,10 +522,27 @@ class ServeReplica:
 
         T, B = self.T, self.B
         # ---- draft: one launch's tokens for every slot ---------------------
-        # a chain is the degenerate tree, so ONE fill path serves both shapes
+        # a chain is the degenerate tree, so ONE fill path serves both shapes.
+        # Program-constrained slots steer every drafter by the automaton's
+        # allowed set (the draft model through logit masks, the host
+        # heuristics through a post-fill clamp): drafting a token the masked
+        # verifier must reject is a wasted node, so constraints RAISE accept
+        # rates rather than fighting speculation.
+        def _guide(b):
+            if not self.steer_drafter or not self.active[b]:
+                return None
+            prog = self.programs[b]
+            if prog is None:
+                return None
+            return (prog.automaton, int(self.prog_state[b]))
+
         if self._drafter is not None and T > 1:
             self._drafter.catch_up()
-            toks = self._drafter.propose(self.last_tok, self.lengths, self._propose_tree)
+            guides = [_guide(b) for b in range(B)]
+            toks = self._drafter.propose(
+                self.last_tok, self.lengths, self._propose_tree,
+                guides if any(g is not None for g in guides) else None,
+            )
         else:
             toks = np.zeros((B, T), np.int32)
             for b in range(B):
@@ -400,6 +551,15 @@ class ServeReplica:
                         self.history[b], int(self.last_tok[b]), self._propose_tree
                     )
         toks[:, 0] = self.last_tok
+        if T > 1 and self.steer_drafter:
+            from repro.launch.speculative import steer_tree_tokens
+
+            for b in range(B):
+                g = _guide(b)
+                if g is not None and g[1] >= 0:
+                    toks[b] = steer_tree_tokens(
+                        toks[b], self._propose_tree, g[0], g[1], self.history[b]
+                    )
 
         # ---- one speculative launch over the ragged pool -------------------
         if self.paged:
@@ -442,16 +602,61 @@ class ServeReplica:
         else:
             logits, self.cache = out
         self.launches += 1
-        y = np.asarray(jnp.argmax(logits, -1))  # (B, T) verified tokens
+        # np.array (not asarray): programmed slots overwrite rows with the
+        # masked argmax, and jax buffers view as read-only
+        y = np.array(jnp.argmax(logits, -1))  # (B, T) verified tokens
+
+        # ---- constraint masks inside the verify step -----------------------
+        # per draft node, the automaton state implied by the node's root-path
+        # draft tokens selects the allowed set its emission is masked with;
+        # along the accepted path draft tokens ARE the emitted stream, so the
+        # masked emissions equal what a sequential masked loop would produce
+        lg = None
+        parents = self._propose_tree.parents
+        for b in range(B):
+            prog = self.programs[b]
+            if prog is None or not self.active[b]:
+                continue
+            auto = prog.automaton
+            if auto.is_accept(int(self.prog_state[b])):
+                continue  # stream already complete: nothing to emit
+            if lg is None:
+                lg = np.asarray(logits)  # (B, T, V), pulled once per launch
+            A = auto.tree_states(int(self.prog_state[b]), toks[b], parents)
+            for t in range(T):
+                st = int(A[t])
+                if st < 0 or auto.is_accept(st):
+                    continue  # unreachable node (or past the stop): don't-care
+                m = auto.mask(st)
+                y[b, t] = masked_argmax(lg[b, t], m)
+                self.prog_mask_cnt += 1
+                self.prog_mask_frac_sum += 1.0 - float(m.mean())
 
         # ---- greedy verify / rollback --------------------------------------
         path_pad = np.tile(np.arange(T, dtype=np.int32), (B, 1))
         acc_n = np.zeros((B,), np.int32)
+        prog_done = np.zeros((B,), bool)
         for b in range(B):
             if not self.active[b]:
                 self.lengths[b] = 0  # park finished slots at depth 0
                 continue
-            path = greedy_accept_tree(toks[b], y[b], self._propose_tree, int(self.gen_left[b]))
+            prog = self.programs[b]
+            if prog is not None and prog.automaton.is_accept(int(self.prog_state[b])):
+                # accepted at admission (single-token grammar): emit nothing
+                prog_done[b] = True
+                continue
+            if prog is not None:
+                from repro.launch.speculative import accept_tree_program
+
+                path, _, fin = accept_tree_program(
+                    toks[b], y[b], self._propose_tree, int(self.gen_left[b]),
+                    prog.automaton, int(self.prog_state[b]),
+                )
+                prog_done[b] = fin
+            else:
+                path = greedy_accept_tree(
+                    toks[b], y[b], self._propose_tree, int(self.gen_left[b])
+                )
             a = len(path)
             path_pad[b, :a] = path
             accepted = [int(y[b, p]) for p in path]
@@ -462,6 +667,20 @@ class ServeReplica:
                 self._drafter.observe(b, [int(self.last_tok[b])] + accepted[:-1])
             self.history[b].extend(accepted)
             self.emitted[b].extend(accepted)
+            if prog is not None:
+                # advance the carried automaton state by the accepted
+                # emissions only (rollback-exact: rejected nodes never touch
+                # it) and mirror it per committed stream position
+                auto = prog.automaton
+                st = int(self.prog_state[b])
+                for i, tok in enumerate(accepted):
+                    if st < 0 or auto.trans[st, tok] < 0:
+                        self.prog_masked_emissions += 1
+                    st = auto.step(st, tok)
+                    self.prog_rows[b, int(self.lengths[b]) + 1 + i] = st
+                    self.prog_states_seen.add(int(st))
+                self.prog_state[b] = st
+                self.prog_tokens += a
             self.accepted_total += a
             self.drafted_total += T
             self.accept_hist[a] += 1
@@ -490,22 +709,29 @@ class ServeReplica:
             if not self.active[b]:
                 continue
             self.lengths[b] += acc_n[b]
-            if self.gen_left[b] <= 0 or self.lengths[b] + T > self.max_len:
+            if (
+                prog_done[b]
+                or self.gen_left[b] <= 0
+                or self.lengths[b] + T > self.max_len
+            ):
                 req = self.requests[b]
-                done.append(Result(
-                    rid=req.rid, tokens=list(self.emitted[b]), replica=self.replica_id
-                ))
-                self.active[b] = False
-                self.requests[b] = None
-                self.emitted[b] = []
-                if self.paged:
-                    # retire: release every page reference (trie keeps shared
-                    # ones alive) and void the slot's pending commit row — its
-                    # freed pages may be re-bound before the next launch
-                    self.pager.free_slot(b)
-                    if self._pending_commit is not None:
-                        self._pending_commit[0][b] = -1
-                        self._pending_commit[1][b] = -1
+                if self.fork_branch[b] >= 0:
+                    # a fork branch never publishes alone: record its stream
+                    # in the group and let the join policy pick the result
+                    grp = self.forks[req.rid]
+                    i = int(self.fork_branch[b])
+                    grp["streams"][i] = list(self.emitted[b])
+                    grp["accepted"][i] = bool(prog_done[b])
+                else:
+                    done.append(Result(
+                        rid=req.rid, tokens=list(self.emitted[b]),
+                        replica=self.replica_id,
+                    ))
+                self._retire_slot(b)
+        for rid in list(self.forks):
+            res = self._maybe_resolve_fork(rid)
+            if res is not None:
+                done.append(res)
         if self.page_telemetry:
             stp = self.paged_stats()
             print(f"[replica {self.replica_id} step {self.steps}] paged: "
@@ -514,6 +740,70 @@ class ServeReplica:
                   f"{stp['pages_shared_per_admission']:.2f}, fragmentation "
                   f"{stp['fragmentation']:.3f}")
         return done
+
+    # ------------------------------------------------------------------
+    def _retire_slot(self, b: int) -> None:
+        """Release slot ``b``: host control words reset, pages recycled, the
+        slot's pending fused-commit row voided (its freed pages may be
+        re-bound before the next launch)."""
+        self.active[b] = False
+        self.requests[b] = None
+        self.emitted[b] = []
+        self.programs[b] = None
+        self.prog_state[b] = -1
+        self.fork_branch[b] = -1
+        if self.paged:
+            self.pager.free_slot(b)
+            if self._pending_commit is not None:
+                self._pending_commit[0][b] = -1
+                self._pending_commit[1][b] = -1
+
+    def _maybe_resolve_fork(self, rid: int) -> Optional[Result]:
+        """Join/stop for one fork group.
+
+        ``join="first"``: the winner is the branch whose ACCEPTED stream is
+        shortest (ties to the lowest branch index) — a pure function of the
+        branch streams, so the outcome is identical across chain, tree,
+        paged, and quantized planes.  A live branch already too long to beat
+        the best accepted stream can never win and is retired on the spot,
+        recycling its slot and pages.  ``join="all"`` runs every branch to
+        completion and publishes all streams (concatenated in branch order,
+        with the per-branch split in ``Result.branches``).
+        """
+        grp = self.forks[rid]
+        k, join = grp["k"], grp["join"]
+        streams, acc = grp["streams"], grp["accepted"]
+        if join == "first":
+            wins = [(len(streams[i]), i) for i in streams if acc.get(i)]
+            if wins:
+                best = min(wins)
+                for b in range(self.B):
+                    if (
+                        self.active[b]
+                        and self.requests[b] is not None
+                        and self.requests[b].rid == rid
+                    ):
+                        j = int(self.fork_branch[b])
+                        # to win, branch j must still accept at a length
+                        # >= emitted+1; retire it the moment that bound
+                        # can no longer beat ``best``
+                        if (len(self.emitted[b]) + 1, j) > best:
+                            grp["retired"].add(j)
+                            self._retire_slot(b)
+        if len(streams) + len(grp["retired"]) < k:
+            return None
+        cands = [i for i in streams if acc.get(i)] or sorted(streams)
+        win = min(cands, key=lambda i: (len(streams[i]), i))
+        del self.forks[rid]
+        if join == "all":
+            ordered = [streams[i] for i in sorted(streams)]
+            return Result(
+                rid=rid, tokens=[t for s in ordered for t in s],
+                replica=self.replica_id, branches=ordered,
+            )
+        return Result(
+            rid=rid, tokens=list(streams[win]), replica=self.replica_id,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -690,6 +980,15 @@ def run_cross_process(args, cfg, requests, params, specs, ckpt, *,
         print(f"FABRIC ERROR: {st['duplicates']} duplicate / "
               f"{st['dropped']} dropped results")
         code = 1
+    if getattr(args, "program", ""):
+        print(f"programs: {st['prog_tokens']} constrained tokens, "
+              f"{st['forks_started']} forks, {st['fork_kv_rows_copied']} "
+              f"KV rows copied at fork, {st['prog_masked_emissions']} "
+              f"masked emissions")
+        if st["prog_masked_emissions"]:
+            print(f"FABRIC ERROR: {st['prog_masked_emissions']} tokens "
+                  f"emitted outside their automaton's allowed set")
+            code = 1
     return code
 
 
@@ -751,6 +1050,13 @@ def main() -> None:
     ap.add_argument("--dump-tokens", default="",
                     help="write {rid: token stream} JSON here after the run "
                          "(CI diffs two runs for stream identity)")
+    ap.add_argument("--program", default="",
+                    help="request control-flow program applied to every "
+                         "request: inline JSON spec or @path/to/spec.json "
+                         "(automaton segments of kind json_schema / literal "
+                         "/ tokens, optional \"fork\": K and \"join\"); "
+                         "compiled to flat int32 token-automaton tables by "
+                         "repro.core.programs and enforced inside verify")
     ap.add_argument("--fabric", type=int, default=1,
                     help="number of data-parallel serve replicas behind the "
                          "shared admission queue")
@@ -835,6 +1141,17 @@ def main() -> None:
     # bind its full pages straight from the prefix trie
     buckets = sorted({max(4, S // 2), max(4, (3 * S) // 4), S})
     rng = np.random.default_rng(0)
+    prog_spec = None
+    if args.program:
+        raw = args.program
+        if raw.startswith("@"):
+            with open(raw[1:]) as f:
+                raw = f.read()
+        prog_spec = json.loads(raw)
+        compile_program(prog_spec, cfg.vocab_size)  # fail fast on a bad spec
+        if program_slots(prog_spec) > B:
+            ap.error(f"--program forks {program_slots(prog_spec)} ways but "
+                     f"--slots is {B}")
     sys_prompt = np.asarray(
         rng.integers(0, cfg.vocab_size, size=args.shared_prefix), np.int32
     )
@@ -849,6 +1166,7 @@ def main() -> None:
                 ),
             ]),
             gen=args.gen,
+            program=prog_spec,
         )
         for i in range(n_req)
     ]
@@ -930,6 +1248,14 @@ def main() -> None:
         print(f"plan telemetry: stale-vs-fresh top-k agreement "
               f"mean {np.mean(st['agreements']):.3f} min {np.min(st['agreements']):.3f} "
               f"over {len(st['agreements'])} launches")
+    if args.program:
+        frac = st["prog_mask_frac_sum"] / max(st["prog_mask_cnt"], 1)
+        print(f"programs: {st['prog_tokens']} constrained tokens, "
+              f"{st['prog_states_visited']} automaton states visited, "
+              f"masked-token fraction {frac:.3f}, {st['forks_started']} forks "
+              f"(live max {st['forks_live_max']}, {st['fork_kv_rows_copied']} "
+              f"KV rows copied at fork), {st['prog_masked_emissions']} "
+              f"masked emissions")
     if args.fabric > 1 or specs:
         print(f"fabric: {st['crashes']} crashes, {st['rejoins']} rejoins "
               f"({st['rewarm_prefills']} re-warm prefills, {st['restores']} "
@@ -955,6 +1281,10 @@ def main() -> None:
     if args.expect_shared_pages and st["pages_shared"] == 0:
         print("FABRIC ERROR: --expect-shared-pages set but no page was shared "
               "across admissions")
+        sys.exit(1)
+    if st["prog_masked_emissions"]:
+        print(f"FABRIC ERROR: {st['prog_masked_emissions']} tokens emitted "
+              f"outside their automaton's allowed set")
         sys.exit(1)
 
 

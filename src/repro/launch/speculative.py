@@ -24,10 +24,26 @@ Drafting policies live here too:
 * :class:`ModelDrafter` — a small draft model batched through the same
   decode plane as the target (per-depth batched ``decode_tokens`` launches
   over the slot pool), emitting top-k branching drafts.
+
+Request programs (``core.programs``) hook in at two points, and the two
+must stay consistent:
+
+* :func:`accept_tree_program` is the program-aware verify walk — emissions
+  advance the automaton and the walk stops the moment it enters an
+  accepting state (earliest-accept), so no token past the grammar's end is
+  ever committed;
+* :func:`steer_tree_tokens` (host drafters) and ``ModelDrafter.propose``'s
+  ``guides`` (draft-model logit masking) clamp every drafted token to the
+  automaton's allowed set at its node's state.  Steering never changes
+  which tokens get committed — the masked verify does that — it only stops
+  drafters proposing tokens the verifier is guaranteed to reject, which is
+  why constrained streams speed speculation up instead of fighting it.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.plans import TreePlan
 
@@ -71,6 +87,39 @@ def greedy_accept_tree(draft_row, verified_row, tree: TreePlan, budget: int) -> 
     return path
 
 
+def accept_tree_program(draft_row, verified_row, tree: TreePlan, budget: int,
+                        automaton, state0: int) -> Tuple[List[int], int, bool]:
+    """Program-aware greedy tree verification.
+
+    Same walk as :func:`greedy_accept_tree` — the verified emissions along
+    the accepted path equal draft tokens, so advancing the automaton by each
+    emission tracks exactly the committed stream's state — plus the
+    earliest-accept stop: the walk ends the moment an emission drives the
+    automaton into an accepting state, so nothing past the grammar's end is
+    committed even when deeper draft nodes happen to match.
+
+    Returns ``(path, state_after, done)``: the accepted node path, the
+    automaton state after the path's emissions (this becomes the slot's
+    carried state — rollback-exact, because rejected nodes never advanced
+    it), and whether the stream completed.
+    """
+    kids = tree.children()
+    path = [0]
+    cur = 0
+    st = int(state0)
+    while True:
+        want = int(verified_row[cur])
+        st = automaton.step(st, want)
+        if st < 0 or automaton.is_accept(st) or len(path) >= budget:
+            break
+        nxt = next((c for c in kids[cur] if int(draft_row[c]) == want), None)
+        if nxt is None:
+            break
+        path.append(nxt)
+        cur = nxt
+    return path, st, automaton.is_accept(st)
+
+
 # ---------------------------------------------------------------------------
 # tree drafters (host-side heuristics)
 # ---------------------------------------------------------------------------
@@ -111,6 +160,48 @@ def draft_tree_ngram(history, last_tok: int, tree: TreePlan) -> List[int]:
 
 
 TREE_DRAFTERS = {"repeat": draft_tree_repeat, "ngram": draft_tree_ngram}
+
+
+def steer_tree_tokens(toks_row, tree: TreePlan, automaton, state0: int,
+                      history: Sequence[int] = ()) -> np.ndarray:
+    """Clamp a filled draft tree to the automaton's allowed sets.
+
+    Walks the tree in topological order carrying the automaton state per
+    node (node 0 is the already-committed last token, so its state is the
+    slot state itself).  A drafted token outside its node's allowed set is
+    replaced — preferring historical followers that ARE allowed, then the
+    lowest allowed ids — and duplicate siblings are diversified across the
+    allowed set (a duplicate sibling can never out-accept its twin, so the
+    slot is free hedging).  Past an accepting or rejected state the draft is
+    dead weight either way and passes through untouched.
+    """
+    toks = [int(v) for v in toks_row]
+    kids = tree.children()
+    states = [-1] * tree.num_nodes
+    states[0] = int(state0)
+    for node, children in enumerate(kids):
+        if not children:
+            continue
+        ps = states[node]
+        if ps < 0 or automaton.is_accept(ps):
+            for c in children:
+                states[c] = ps  # stream already ended (or died): don't-care
+            continue
+        allow = automaton.allowed(ps)
+        allow_set = {int(v) for v in allow}
+        cand = [f for f in _followers(history, toks[node], len(children) + 4)
+                if f in allow_set]
+        used: set = set()
+        for c in children:
+            if toks[c] not in allow_set or toks[c] in used:
+                pick = next((f for f in cand if f not in used), None)
+                if pick is None:
+                    pick = next((int(v) for v in allow if int(v) not in used),
+                                int(allow[0]))
+                toks[c] = pick
+            used.add(toks[c])
+            states[c] = automaton.step(ps, toks[c])
+    return np.asarray(toks, np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -194,12 +285,20 @@ class ModelDrafter:
             self._advance(toks, lens)
             self.fed = self.fed + adv
 
-    def propose(self, last_tok, lengths, tree: TreePlan):
+    def propose(self, last_tok, lengths, tree: TreePlan, guides=None):
         """(B,) last accepted tokens + committed lengths -> (B, T) tree tokens.
 
         One batched draft launch per tree depth; children of the spine node
         at depth d get the draft model's top-``len(children)`` tokens, the
         first child (the spine) continues from the top-1.
+
+        ``guides`` (optional, per slot) is ``(automaton, state)`` for
+        program-constrained slots or None: the draft model's logits are
+        masked to the automaton's allowed set at the slot's spine state
+        before ranking, so branching spends its sibling budget on tokens the
+        masked verifier could actually accept.  Sibling ranks past the
+        allowed-set size fall back to the top allowed token (a duplicate
+        hedge beats a guaranteed rejection).
         """
         np = self._np
         B = len(last_tok)
@@ -210,14 +309,31 @@ class ModelDrafter:
         toks[:, 0] = last_tok
         cur = np.asarray(last_tok, np.int32).copy()
         pos = np.asarray(lengths, np.int32).copy()
+        states = [None if guides is None or guides[b] is None
+                  else int(guides[b][1]) for b in range(B)]
         for d, node in enumerate(spine):
             children = kids[node]
             if not children:
                 break
             logits = self._advance(cur, pos)
-            top = np.argsort(-logits, axis=-1)[:, : len(children)]
+            top = np.argsort(-logits, axis=-1)[:, : len(children)].copy()
+            for b in range(B):
+                if states[b] is None:
+                    continue
+                auto, st = guides[b][0], states[b]
+                if st < 0 or auto.is_accept(st):
+                    continue  # stream over (or dead): draft is don't-care
+                allow = auto.allowed(st)
+                neg = np.finfo(np.float32).min
+                masked = np.where(auto.mask(st), logits[b].astype(np.float32), neg)
+                order = np.argsort(-masked)
+                for rank in range(len(children)):
+                    top[b, rank] = order[rank] if rank < len(allow) else order[0]
             for rank, child in enumerate(children):
                 toks[:, child] = top[:, rank]
+            for b in range(B):
+                if states[b] is not None and states[b] >= 0:
+                    states[b] = guides[b][0].step(states[b], int(top[b, 0]))
             cur = top[:, 0].astype(np.int32)
             pos += 1
         return toks

@@ -23,6 +23,16 @@ pure cache read on the decode critical path.  The data plane is the
 capacity-sort-free single-launch kernel (:mod:`repro.kernels.moe_decode`)
 and attention reads only the valid cache prefix
 (:mod:`repro.kernels.flash_attention.decode`).
+
+Request-level control flow (:mod:`repro.core.programs`) rides the SAME host
+control-word path as ``lengths``/``prev_accept`` and never enters this
+stack: token-automaton state is derived per committed stream position, the
+constraint mask is applied to the verify logits on the host, and rollback
+under speculative rejection is exact because the length-clamp and commit
+invariants already guarantee that only accepted rows are ever visible to
+the next launch — a masked verified token occupies exactly the cache row an
+unmasked one would, so fork/join and constrained decode need no kernel or
+stack changes.
 """
 from __future__ import annotations
 

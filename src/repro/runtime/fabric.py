@@ -49,6 +49,7 @@ from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.checkpoint import CheckpointManager
+from repro.core.programs import program_slots
 from repro.runtime.faults import (
     ReplicaCrash,
     RequestRejected,
@@ -63,6 +64,11 @@ class Request:
     prompt: Any  # 1-D int32 array of prompt token ids
     gen: int     # tokens to generate after the prefill token
     deadline: Optional[float] = None  # absolute fabric-clock time; None = no deadline
+    # request program spec (core.programs.compile_program input): constrained
+    # decoding + fork/join control flow.  A JSON dict so it rides the wire
+    # and survives requeue — crash recovery re-runs the program from scratch
+    # and determinism makes the re-run byte-identical.
+    program: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +78,7 @@ class Result:
     replica: int = -1           # replica that completed (or rejected) the request
     error: Optional[str] = None
     retries: int = 0            # admission retries this request consumed
+    branches: Optional[List[List[int]]] = None  # per-branch streams (join="all")
 
 
 # make_replica(replica_id, degrade_level, params_or_None, shrunk) -> replica.
@@ -150,6 +157,11 @@ class ServeFabric:
             "prefill_ms": 0.0, "agreements": [],
             # paged KV plane counters (zero when replicas are unpaged)
             "paged_admissions": 0, "pages_shared": 0, "admit_copy_rows": 0,
+            # request-program counters (zero when no request carries one)
+            "prog_tokens": 0, "prog_states_visited": 0,
+            "prog_mask_frac_sum": 0.0, "prog_mask_cnt": 0,
+            "prog_masked_emissions": 0, "forks_started": 0,
+            "forks_live_max": 0, "fork_kv_rows_copied": 0,
         }
 
     # ------------------------------------------------------------------
@@ -182,6 +194,16 @@ class ServeFabric:
         self.stats["paged_admissions"] += getattr(rep, "admissions_paged", 0)
         self.stats["pages_shared"] += getattr(rep, "pages_shared_total", 0)
         self.stats["admit_copy_rows"] += getattr(rep, "admit_copy_rows", 0)
+        self.stats["prog_tokens"] += getattr(rep, "prog_tokens", 0)
+        self.stats["prog_states_visited"] += len(getattr(rep, "prog_states_seen", ()))
+        self.stats["prog_mask_frac_sum"] += getattr(rep, "prog_mask_frac_sum", 0.0)
+        self.stats["prog_mask_cnt"] += getattr(rep, "prog_mask_cnt", 0)
+        self.stats["prog_masked_emissions"] += getattr(rep, "prog_masked_emissions", 0)
+        self.stats["forks_started"] += getattr(rep, "forks_started", 0)
+        self.stats["forks_live_max"] = max(
+            self.stats["forks_live_max"], getattr(rep, "forks_live_max", 0)
+        )
+        self.stats["fork_kv_rows_copied"] += getattr(rep, "fork_kv_rows_copied", 0)
 
     def _requeue_in_flight(self, rep: Any) -> None:
         """Return a dying replica's in-flight requests to the queue front
@@ -336,6 +358,14 @@ class ServeFabric:
             if req.rid in self.results:
                 self.queue.popleft()  # dedup: already answered elsewhere
                 continue
+            # fork programs need K slots at once; wait for the pool to drain
+            # rather than hit the replica's free-slot guard (a fork wider
+            # than the whole pool passes through: admit rejects it for good)
+            free = rep.free_slots()
+            n_free = free if isinstance(free, int) else len(free)
+            needed = program_slots(getattr(req, "program", None))
+            if n_free < needed <= getattr(rep, "B", needed):
+                break
             try:
                 rep.admit(req)
             except RequestRejected as err:
@@ -563,6 +593,8 @@ class CrossProcessFabric:
             "admitted": 0,
             # absorbed worker counters (from shutdown stats messages)
             "launches": 0, "prefills": 0, "accepted": 0, "drafted": 0,
+            "prog_tokens": 0, "prog_masked_emissions": 0,
+            "forks_started": 0, "fork_kv_rows_copied": 0,
         }
         for req in requests:
             self.submit(req)
@@ -674,12 +706,17 @@ class CrossProcessFabric:
     # ------------------------------------------------------------------
     # message pump + liveness
     # ------------------------------------------------------------------
+    def _slots_of(self, rid: int) -> int:
+        """Decode slots a dispatched rid holds on its worker (fork width)."""
+        req = self.by_rid.get(rid)
+        return program_slots(getattr(req, "program", None)) if req is not None else 1
+
     def _handle_admit_failed(self, w: int, p: dict) -> None:
         rid = int(p["rid"])
         self.assigned.pop(rid, None)
         if rid in self.order[w]:
             self.order[w].remove(rid)
-        self.free[w] += 1
+        self.free[w] += self._slots_of(rid)
         if p.get("kind") == "rejected":
             self.stats["rejected"] += 1
             self._publish(Result(rid=rid, tokens=[], replica=w, error=str(p.get("error"))))
@@ -719,7 +756,7 @@ class CrossProcessFabric:
                         self.assigned.pop(int(rid), None)
                         if int(rid) in self.order[w]:
                             self.order[w].remove(int(rid))
-                        self.free[w] += 1
+                        self.free[w] += self._slots_of(int(rid))
                 elif tag == "admitted":
                     pass
                 elif tag == "admit_failed":
@@ -732,6 +769,12 @@ class CrossProcessFabric:
                     self.stats["prefills"] += int(p.get("prefills", 0))
                     self.stats["accepted"] += int(p.get("accepted", 0))
                     self.stats["drafted"] += int(p.get("drafted", 0))
+                    self.stats["prog_tokens"] += int(p.get("prog_tokens", 0))
+                    self.stats["prog_masked_emissions"] += int(
+                        p.get("prog_masked_emissions", 0))
+                    self.stats["forks_started"] += int(p.get("forks_started", 0))
+                    self.stats["fork_kv_rows_copied"] += int(
+                        p.get("fork_kv_rows_copied", 0))
 
     def _check_liveness(self) -> None:
         now = self.clock.now()
@@ -768,16 +811,29 @@ class CrossProcessFabric:
                         error="deadline expired while queued (never launched)",
                     ))
                     continue
+                needed = program_slots(getattr(req, "program", None))
+                if needed > self.cfg.slots_per_worker:
+                    self.queue.popleft()
+                    self.stats["rejected"] += 1
+                    self._publish(Result(
+                        rid=req.rid, tokens=[],
+                        error=f"program forks {needed} ways but workers have "
+                              f"{self.cfg.slots_per_worker} slots",
+                    ))
+                    continue
+                if self.free[w] < needed:
+                    break  # fork needs more slots than this worker has free
                 self.queue.popleft()
                 prompt = req.prompt if req.prompt is not None else []
                 self.handles[w].send(("admit", {
                     "rid": int(req.rid),
                     "prompt": [int(t) for t in list(prompt)],
                     "gen": int(req.gen),
+                    "program": getattr(req, "program", None),
                 }))
                 self.assigned[req.rid] = w
                 self.order[w].append(req.rid)
-                self.free[w] -= 1
+                self.free[w] -= needed
                 self.stats["admitted"] += 1
 
     def _maybe_checkpoint(self) -> None:

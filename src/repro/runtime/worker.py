@@ -49,7 +49,11 @@ from repro.runtime.faults import (
 
 # Duck-typed stand-ins for fabric.Request / fabric.Result: the worker module
 # must stay importable without jax (fabric pulls in the checkpoint stack).
-WireRequest = namedtuple("WireRequest", "rid prompt gen")
+# ``program`` carries the request's control-flow program spec (a JSON dict)
+# across the process boundary; it defaults to None so flat requests — and
+# every pre-program caller — construct with three positional fields.
+WireRequest = namedtuple("WireRequest", "rid prompt gen program")
+WireRequest.__new__.__defaults__ = (None,)
 WireResult = namedtuple("WireResult", "rid tokens")
 
 
@@ -171,6 +175,10 @@ class WorkerLoop:
             "prefills": getattr(r, "prefills", 0),
             "accepted": getattr(r, "accepted_total", 0),
             "drafted": getattr(r, "drafted_total", 0),
+            "prog_tokens": getattr(r, "prog_tokens", 0),
+            "prog_masked_emissions": getattr(r, "prog_masked_emissions", 0),
+            "forks_started": getattr(r, "forks_started", 0),
+            "fork_kv_rows_copied": getattr(r, "fork_kv_rows_copied", 0),
         }
 
     # -- fault plumbing ----------------------------------------------------
@@ -201,7 +209,8 @@ class WorkerLoop:
     def _admit(self, p: dict) -> None:
         req = WireRequest(int(p["rid"]),
                           np.asarray(p.get("prompt") or [], dtype=np.int32),
-                          int(p["gen"]))
+                          int(p["gen"]),
+                          p.get("program"))
         try:
             self.replica.admit(req)
         except RequestRejected as e:

@@ -193,3 +193,45 @@ def test_shape_mismatch_still_strict_not_torn(tmp_path):
     )
     with pytest.raises(ValueError, match="shape"):
         mgr.restore(bad, {})
+
+
+def test_torn_quantized_snapshot_restores_payload_and_scales_together(tmp_path):
+    """Quantized trees checkpoint as PAIRED leaves — the int8 payload and
+    its f32 scale rows.  When the newest snapshot is torn through only the
+    payload file, restore must fall back to the older step for BOTH members
+    of every pair: a step-2 payload dequantized with step-1 scales would be
+    silent garbage, not a crash."""
+    from repro.core.quant import dequantize_int8, quantize_int8
+
+    def qtree(seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (16, 8)) * (seed + 1)
+        q, s = quantize_int8(w, axis=1)
+        return {"experts": {"w_q": q, "w_s": s}}
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    p1, p2 = qtree(0), qtree(3)
+    mgr.save(1, p1, {}, {"ledger": [[0, [1, 2]]], "round": 4})
+    mgr.save(2, p2, {}, {"ledger": [[0, [1, 2, 3]]], "round": 8})
+    # tear ONLY the int8 payload leaf of the newest snapshot
+    step2 = Path(tmp_path) / "step_00000002"
+    victims = [
+        f for f in sorted(step2.glob("params.*.npy"))
+        if np.lib.format.read_magic(open(f, "rb")) and np.load(f).dtype == np.int8
+    ]
+    assert victims, "no int8 leaf found in the snapshot"
+    victims[0].write_bytes(victims[0].read_bytes()[:16])
+
+    p, _, step, extra = mgr.restore(_abs(p1), {})
+    assert step == 1  # fell back — never mixed step-2 scales over step-1 q
+    np.testing.assert_array_equal(
+        np.asarray(p["experts"]["w_q"]), np.asarray(p1["experts"]["w_q"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(p["experts"]["w_s"]), np.asarray(p1["experts"]["w_s"])
+    )
+    # the admission ledger rides the same snapshot as the weights it matches
+    assert extra["ledger"] == [[0, [1, 2]]] and extra["round"] == 4
+    # and the pair still dequantizes to the step-1 weights bit-for-bit
+    want = dequantize_int8(p1["experts"]["w_q"], p1["experts"]["w_s"])
+    got = dequantize_int8(p["experts"]["w_q"], p["experts"]["w_s"])
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))

@@ -1,0 +1,628 @@
+"""Request-level control-flow plane: compiled token automata steering
+constrained + fork/join decode, proven differentially.
+
+Contract under test: a constrained serve trace — chain, tree-draft, paged,
+quantized, even with an injected crash + checkpoint re-warm — must be
+TOKEN-IDENTICAL to an unconstrained sequential Python loop applying the same
+automaton mask per step (the oracle).  Fork admission must share prompt pages
+through the prefix trie (zero KV rows copied per fork), join must retire
+losers and recycle their pages, and drafter steering must never change a
+committed token (it only raises accept rates).
+
+The automaton layer itself is jax-free, so it is first exercised with unit
+tests plus a ~200-automaton property sweep; the end-to-end differential
+claims then run against the real speculative decode plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.plans import TreePlan
+from repro.core.programs import (
+    TokenAutomaton,
+    compile_program,
+    default_token_strs,
+    masked_argmax,
+    program_slots,
+    random_automaton,
+    schema_to_ast,
+)
+from repro.launch.speculative import accept_tree_program, steer_tree_tokens
+from repro.runtime.fabric import FabricConfig, Request, ServeFabric
+from repro.runtime.faults import FaultInjector, RequestRejected, parse_faults
+
+V = 256  # smoke vocab: token t <-> chr(t), so JSON punctuation is addressable
+
+
+def _chars(text: str) -> list:
+    return [ord(c) for c in text]
+
+
+# ---------------------------------------------------------------------------
+# automaton construction: schema subset, literals, concat (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_json_schema_object_walks_and_accepts():
+    auto = TokenAutomaton.from_json_schema(
+        {"type": "object", "properties": {
+            "a": {"type": "integer", "maxDigits": 2},
+            "b": {"type": "boolean"},
+        }},
+        default_token_strs(V),
+    )
+    assert auto.accepts(_chars('{"a":7,"b":true}'))
+    assert auto.accepts(_chars('{"a":42,"b":false}'))
+    assert not auto.accepts(_chars('{"a":7}'))          # missing property
+    assert not auto.accepts(_chars('{"a":777,"b":true}'))  # 3 digits
+    assert not auto.accepts(_chars('{"b":true,"a":7}'))    # declaration order
+    assert not auto.accepts(_chars('{"a":7,"b":true}}'))   # past the accept
+
+
+def test_enum_const_string_array_schemas():
+    strs = default_token_strs(V)
+    enum = TokenAutomaton.from_json_schema({"enum": ["yes", "no"]}, strs)
+    assert enum.accepts(_chars('"yes"')) and enum.accepts(_chars('"no"'))
+    assert not enum.accepts(_chars('"maybe"'))
+    const = TokenAutomaton.from_json_schema({"const": 17}, strs)
+    assert const.accepts(_chars("17")) and not const.accepts(_chars("18"))
+    s = TokenAutomaton.from_json_schema(
+        {"type": "string", "minLength": 1, "maxLength": 2, "charset": "ab"}, strs
+    )
+    assert s.accepts(_chars('"a"')) and s.accepts(_chars('"ab"'))
+    assert not s.accepts(_chars('""')) and not s.accepts(_chars('"abc"'))
+    arr = TokenAutomaton.from_json_schema(
+        {"type": "array", "items": {"type": "boolean"},
+         "minItems": 1, "maxItems": 2}, strs
+    )
+    assert arr.accepts(_chars("[true]"))
+    assert arr.accepts(_chars("[true,false]"))
+    assert not arr.accepts(_chars("[]"))
+
+
+def test_literal_concat_chains_at_earliest_accept():
+    a = TokenAutomaton.from_token_literal(_chars("<t>"), V)
+    b = TokenAutomaton.from_token_literal(_chars("</t>"), V)
+    ab = a.concat(b)
+    assert ab.accepts(_chars("<t></t>"))
+    assert not ab.accepts(_chars("<t>"))
+    # earliest-accept: the decoder stops AT the accept, never walks past it
+    st = ab.walk(ab.start, _chars("<t></t>"))
+    assert ab.is_accept(st) and ab.allowed(st).size == 0
+
+
+def test_compile_program_spec_validation():
+    spec = {"segments": [{"kind": "literal", "text": "ab"}]}
+    prog = compile_program(spec, V)
+    assert prog.fork == 1 and prog.automaton.accepts(_chars("ab"))
+    assert program_slots(spec) == 1
+    assert program_slots(None) == 1
+    assert program_slots({"fork": 3, "segments": []}) == 3
+    with pytest.raises(ValueError):
+        compile_program({"segments": [{"kind": "meteor"}]}, V)
+    with pytest.raises(ValueError):
+        compile_program({"fork": 0, "segments": [{"kind": "literal", "text": "a"}]}, V)
+    with pytest.raises(ValueError):
+        compile_program(
+            {"join": "sideways", "segments": [{"kind": "literal", "text": "a"}]}, V
+        )
+    with pytest.raises(ValueError):
+        compile_program({"segments": []}, V)
+
+
+def test_snapshot_roundtrip_and_control_bytes():
+    auto = TokenAutomaton.from_json_schema({"enum": [10, 20]}, default_token_strs(V))
+    snap = auto.snapshot()
+    back = TokenAutomaton.from_snapshot(snap)
+    assert np.array_equal(back.trans, auto.trans)
+    assert np.array_equal(back.accept, auto.accept)
+    assert back.start == auto.start
+    # flat trans table + accept vector + one state word ride the launch
+    assert auto.control_bytes() == auto.trans.nbytes + auto.accept.shape[0] + 4
+
+
+# ---------------------------------------------------------------------------
+# property sweep: ~200 random automata, constrained greedy emission (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_random_automata_no_masked_emission_and_grammar_acceptance():
+    """The emission rule under test is exactly the serve loop's: masked
+    argmax over (random) scores, stop at earliest accept.  Over 200 random
+    automata: every emitted token is in the allowed set of the state it was
+    emitted from, no visited state is dead, and every stream that reaches
+    accept is accepted by its own source automaton."""
+    rng = np.random.default_rng(0)
+    vocab = 24
+    finished = 0
+    for trial in range(200):
+        auto = random_automaton(rng, vocab)
+        st = auto.start
+        stream = []
+        for _ in range(64):
+            if auto.is_accept(st):
+                break
+            allow = auto.allowed(st)
+            assert allow.size > 0, f"trial {trial}: dead state {st}"
+            scores = rng.standard_normal(vocab).astype(np.float32)
+            tok = masked_argmax(scores, auto.mask(st))
+            assert int(auto.trans[st, tok]) >= 0, (
+                f"trial {trial}: emitted masked token {tok} from state {st}"
+            )
+            stream.append(tok)
+            st = auto.step(st, tok)
+        if auto.is_accept(st):
+            finished += 1
+            assert auto.accepts(stream), f"trial {trial}: {stream}"
+        # rollback-exactness: replaying the stream lands on the same state
+        assert auto.walk(auto.start, stream) == st
+    assert finished >= 150  # the spine-to-accept invariant keeps most finite
+
+
+def test_tree_states_match_sequential_replay():
+    """``tree_states`` (the per-node automaton states masking tree verify)
+    must equal stepping sequentially along each node's root path — the
+    rollback-exactness the masked verify relies on."""
+    rng = np.random.default_rng(1)
+    tree = TreePlan.from_branching([2, 2]).validate()
+    parents = tree.parents
+    for _ in range(50):
+        auto = random_automaton(rng, 24)
+        toks = rng.integers(0, 24, size=tree.num_nodes).astype(np.int32)
+        state0 = auto.start
+        A = auto.tree_states(state0, toks, parents)
+        for t in range(tree.num_nodes):
+            path = []
+            n = t
+            while n > 0:
+                path.append(n)
+                n = int(parents[n])
+            st = state0
+            for n in reversed(path):
+                st = auto.step(st, int(toks[n]))
+            assert A[t] == st, (t, A, st)
+
+
+def test_steer_tree_tokens_only_proposes_allowed():
+    rng = np.random.default_rng(2)
+    tree = TreePlan.from_branching([2, 2]).validate()
+    for _ in range(50):
+        auto = random_automaton(rng, 24)
+        toks = rng.integers(0, 24, size=tree.num_nodes).astype(np.int32)
+        steered = steer_tree_tokens(toks, tree, auto, auto.start)
+        A = auto.tree_states(auto.start, steered, tree.parents)
+        kids = tree.children()
+        for t in range(1, tree.num_nodes):
+            p = int(tree.parents[t])
+            if A[p] < 0 or auto.is_accept(A[p]):
+                continue  # pass-through region: parent rejected or finished
+            assert int(auto.trans[A[p], int(steered[t])]) >= 0, (
+                f"steered disallowed token at node {t}"
+            )
+        # sibling drafts under a live parent never duplicate each other
+        for p, cs in enumerate(kids):
+            if A[p] >= 0 and not auto.is_accept(A[p]) and len(cs) > 1:
+                vals = [int(steered[c]) for c in cs]
+                if len(auto.allowed(A[p])) >= len(vals):
+                    assert len(set(vals)) == len(vals)
+
+
+def test_accept_tree_program_matches_python_reference():
+    """The constrained accept rule: walk the verified spine while (a) the
+    automaton allows each verified token, (b) the draft agreed, (c) budget
+    remains, stopping at earliest accept."""
+    rng = np.random.default_rng(3)
+    tree = TreePlan.from_branching([2, 2]).validate()
+    for _ in range(50):
+        auto = random_automaton(rng, 24)
+        draft = rng.integers(0, 24, size=tree.num_nodes).astype(np.int32)
+        verified = rng.integers(0, 24, size=tree.num_nodes).astype(np.int32)
+        path, st, fin = accept_tree_program(draft, verified, tree, 3, auto, auto.start)
+        assert path[0] == 0 and len(path) <= 3
+        # replay: every hop's verified token was allowed and matched a child
+        ref_st = auto.start
+        kids = tree.children()
+        cur = 0
+        for nxt in path[1:]:
+            want = int(verified[cur])
+            ref_st = auto.step(ref_st, want)
+            assert ref_st >= 0 and int(draft[nxt]) == want
+            assert nxt in kids[cur]
+            cur = nxt
+        want = int(verified[cur])
+        end = auto.step(ref_st, want)
+        assert st == end and fin == auto.is_accept(end)
+
+
+# ---------------------------------------------------------------------------
+# differential harness: constrained serve vs the masked sequential oracle
+# ---------------------------------------------------------------------------
+
+GEN = 10
+WIDTH = 3
+SCHEMA = {"type": "object", "properties": {"a": {"type": "integer", "maxDigits": 2}}}
+SPEC = {"segments": [{"kind": "json_schema", "schema": SCHEMA}]}
+
+
+def _requests(cfg, spec, n=3, gen=GEN):
+    rng = np.random.default_rng(0)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=(6, 9)[i % 2]).astype(np.int32),
+            gen=gen,
+            program=spec,
+        )
+        for i in range(n)
+    ]
+
+
+def _masked_oracle(cfg, params, requests, spec, max_len):
+    """Per-request sequential greedy with the SAME automaton mask applied at
+    every step — the reference every constrained plane must reproduce."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import Model
+
+    c1 = dataclasses.replace(cfg, spec_tokens=1, paged=False)
+    m1 = Model(c1)
+    pre1 = jax.jit(m1.prefill)
+    dec1 = jax.jit(m1.decode_step)
+    auto = compile_program(spec, cfg.vocab_size).automaton
+    out = {}
+    for req in requests:
+        cache = m1.init_cache(1, max_len)
+        lg, cache = pre1(params, jnp.asarray(req.prompt)[None], cache)
+        st = auto.start
+        tok = masked_argmax(np.asarray(lg[0]), auto.mask(st))
+        st = auto.step(st, tok)
+        stream = [tok]
+        for s in range(req.gen):
+            if auto.is_accept(st):
+                break
+            lg, cache = dec1(
+                params, cache, jnp.asarray([tok], jnp.int32),
+                jnp.int32(len(req.prompt) + s),
+            )
+            tok = masked_argmax(np.asarray(lg[0]), auto.mask(st))
+            st = auto.step(st, tok)
+            stream.append(tok)
+        assert auto.walk(auto.start, stream) >= 0  # oracle never emits masked
+        out[req.rid] = stream
+    return out
+
+
+def _run_fabric(cfg, mesh, params, requests, *, tree=None, specs="",
+                ckpt=None, checkpoint_every=0, n_replicas=1, max_len=None,
+                slots=2):
+    from repro.launch.serve import degrade_ladder, make_replica_factory
+    from repro.parallel.sharding import param_shardings
+
+    inj = FaultInjector(parse_faults(specs)) if specs else None
+    T = tree.num_nodes if tree is not None else cfg.spec_tokens
+    ladder = degrade_ladder(tree, T)
+    make = make_replica_factory(
+        cfg, mesh, slots, max_len, params, ladder,
+        fault_hook=inj.check if inj else None, launch_timeout=30.0, ckpt=ckpt,
+    )
+
+    def restore_params(mgr):
+        import jax
+
+        abs_p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        p, _, _, _ = mgr.restore(
+            abs_p, {}, param_shardings=param_shardings(abs_p, mesh)
+        )
+        return p
+
+    fabric = ServeFabric(
+        make, list(requests),
+        FabricConfig(
+            n_replicas=n_replicas, launch_timeout=30.0,
+            checkpoint_every=checkpoint_every,
+            max_degrade_level=len(ladder) - 1, synthetic_step_times=True,
+        ),
+        ckpt=ckpt, restore_params=restore_params if ckpt else None,
+        params=params,
+    )
+    return fabric.run(), fabric.stats
+
+
+@pytest.fixture(scope="module")
+def env():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), decode_plane=True, spec_tokens=WIDTH
+    )
+    mesh = make_host_mesh(1, 1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    requests = _requests(cfg, SPEC)
+    max_len = 9 + GEN + WIDTH
+    return {"cfg": cfg, "mesh": mesh, "params": params,
+            "requests": requests, "max_len": max_len}
+
+
+@pytest.fixture(scope="module")
+def oracle(env):
+    return _masked_oracle(
+        env["cfg"], env["params"], env["requests"], SPEC, env["max_len"]
+    )
+
+
+def _assert_token_identical(results, oracle, requests):
+    for req in requests:
+        res = results[req.rid]
+        assert res.error is None, f"rid {req.rid} errored: {res.error}"
+        assert res.tokens == oracle[req.rid], (
+            f"rid {req.rid}: constrained stream {res.tokens} != "
+            f"masked oracle {oracle[req.rid]}"
+        )
+
+
+def test_constrained_chain_matches_masked_oracle(env, oracle):
+    """Chain speculation under a JSON-schema automaton: streams must equal
+    the masked sequential oracle, with zero masked-token emissions and the
+    telemetry counters live."""
+    results, stats = _run_fabric(
+        env["cfg"], env["mesh"], env["params"], env["requests"],
+        max_len=env["max_len"],
+    )
+    _assert_token_identical(results, oracle, env["requests"])
+    assert stats["prog_masked_emissions"] == 0
+    assert stats["prog_tokens"] > 0 and stats["prog_states_visited"] > 0
+    assert stats["prog_mask_cnt"] > 0
+    assert stats["prog_mask_frac_sum"] / stats["prog_mask_cnt"] > 0.5
+    # every finished stream is a word of the source grammar
+    auto = compile_program(SPEC, env["cfg"].vocab_size).automaton
+    for req in env["requests"]:
+        toks = results[req.rid].tokens
+        if len(toks) < req.gen + 1:  # finished before gen exhaustion
+            assert auto.accepts(toks)
+
+
+def test_constrained_tree_paged_int8_crash_matches_masked_oracle(env, tmp_path):
+    """ACCEPTANCE: tree drafts + paged KV + int8 KV/experts + one injected
+    crash and checkpoint re-warm — the constrained streams are still
+    token-identical to the masked sequential oracle (run on the same
+    quantized params, spec width 1, unpaged)."""
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.models.model import Model
+
+    tree = TreePlan.from_branching([2]).validate()
+    assert tree.num_nodes == WIDTH
+    cq = dataclasses.replace(
+        env["cfg"], paged=True, page_size=4, kv_dtype="int8", expert_dtype="int8"
+    )
+    params = Model(cq).init(jax.random.PRNGKey(0))
+    requests = _requests(cq, SPEC)
+    ckpt = CheckpointManager(tmp_path / "prog", keep=2)
+    results, stats = _run_fabric(
+        cq, env["mesh"], params, requests, tree=tree,
+        specs="crash@step=3", ckpt=ckpt, checkpoint_every=2,
+        max_len=env["max_len"],
+    )
+    assert stats["crashes"] == 1 and stats["rejoins"] == 1
+    assert stats["rewarm_prefills"] >= 1
+    assert stats["dropped"] == 0 and stats["duplicates"] == 0
+    assert stats["prog_masked_emissions"] == 0
+    oq = _masked_oracle(cq, params, requests, SPEC, env["max_len"])
+    _assert_token_identical(results, oq, requests)
+
+
+# ---------------------------------------------------------------------------
+# fork/join: page sharing, loser retirement, adversarial draft rejection
+# ---------------------------------------------------------------------------
+
+
+def _replica(env, cfg, *, slots, tree=None, **kw):
+    from repro.launch.serve import ServeReplica
+
+    return ServeReplica(
+        cfg, env["mesh"], slots, env["max_len"], env["params"], tree=tree, **kw
+    )
+
+
+def _drain(rep, requests):
+    results = {}
+    queue = list(requests)
+    for _ in range(500):
+        while queue and len(rep.free_slots()) >= program_slots(
+            getattr(queue[0], "program", None)
+        ):
+            rep.admit(queue.pop(0))
+        if not rep.has_work():
+            if not queue:
+                return results
+            continue
+        for res in rep.step():
+            results[res.rid] = res
+    raise AssertionError("replica did not drain")
+
+
+def test_fork_shares_prompt_pages_zero_copy(env):
+    """3-way fork off one page-aligned prompt: one admission prefill, zero
+    KV rows copied, every prompt page refcounted K+1 (K branches + trie)."""
+    cfg = dataclasses.replace(env["cfg"], paged=True, page_size=4)
+    rep = _replica(env, cfg, slots=3)
+    spec = {"fork": 3, "join": "first",
+            "segments": [{"kind": "json_schema", "schema": {"enum": [17, 42, 99]}}]}
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    req = Request(rid=0, prompt=prompt, gen=GEN, program=spec)
+    rep.admit(req)
+    assert rep.prefills == 1  # ONE shared admission prefill for all branches
+    assert rep.fork_kv_rows_copied == 0
+    assert rep.forks_started == 1 and rep.forks_live_max == 3
+    tables = [rep.pager.table[b, :2].copy() for b in range(3)]
+    for t in tables[1:]:  # branches alias the same physical prompt pages
+        assert np.array_equal(t, tables[0])
+    for page in tables[0]:
+        assert rep.pager.refcounts[int(page)] == 4  # 3 branches + the trie
+    # the 3 continuations diverge at the fork point and nowhere earlier
+    firsts = {int(rep.last_tok[b]) for b in range(3)}
+    assert firsts <= {ord("1"), ord("4"), ord("9")} and len(firsts) == 3
+
+    results = _drain(rep, [])
+    assert set(results) == {0}
+    auto = compile_program(spec, cfg.vocab_size).automaton
+    assert auto.accepts(results[0].tokens)
+    assert rep.prog_masked_emissions == 0
+    assert not rep.forks and not rep.active.any()
+    # losers' pages recycled: only the trie still pins the prompt pages
+    for page in tables[0]:
+        assert rep.pager.refcounts[int(page)] == 1
+    assert int((rep.pager.refcounts > 0).sum()) == 2
+
+
+def test_fork_join_first_retires_longer_branch_early(env):
+    """join="first": the branch that accepts with the shortest stream wins;
+    a sibling that cannot beat it anymore is retired mid-flight and its
+    slot recycled."""
+    cfg = dataclasses.replace(env["cfg"], paged=True, page_size=4)
+    rep = _replica(env, cfg, slots=2)
+    # "7" accepts after 1 token; "1234" needs 4 — the loser is provably
+    # beaten after the winner lands and must be retired early
+    spec = {"fork": 2, "join": "first",
+            "segments": [{"kind": "json_schema", "schema": {"enum": [7, 1234]}}]}
+    prompt = np.random.default_rng(6).integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    results = _drain(rep, [Request(rid=0, prompt=prompt, gen=GEN, program=spec)])
+    assert results[0].tokens == [ord("7")]
+    assert rep.prog_masked_emissions == 0
+    assert not rep.forks and not rep.active.any()
+    # everything but the trie-pinned prompt pages went back to the pool
+    assert int((rep.pager.refcounts > 1).sum()) == 0
+
+
+def test_fork_join_all_publishes_every_branch(env):
+    cfg = env["cfg"]
+    rep = _replica(env, cfg, slots=2)
+    spec = {"fork": 2, "join": "all",
+            "segments": [{"kind": "json_schema", "schema": {"enum": [17, 42]}}]}
+    prompt = np.random.default_rng(7).integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    results = _drain(rep, [Request(rid=0, prompt=prompt, gen=GEN, program=spec)])
+    res = results[0]
+    assert res.branches is not None and len(res.branches) == 2
+    auto = compile_program(spec, cfg.vocab_size).automaton
+    for branch in res.branches:
+        assert auto.accepts(branch)
+    assert {tuple(b) for b in res.branches} == {
+        tuple(_chars("17")), tuple(_chars("42"))
+    }
+    assert res.tokens == res.branches[0] + res.branches[1]
+
+
+def test_fork_branch_rejects_mid_draft_while_sibling_commits(env):
+    """Adversarial: with steering OFF the unconstrained ngram drafter keeps
+    proposing tokens the automaton masks, so branches reject draft nodes
+    mid-verify constantly — while the sibling on the same launch commits.
+    Every branch stream must still equal its forced-first-token masked
+    sequential oracle."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import Model
+
+    tree = TreePlan.from_branching([2]).validate()
+    cfg = env["cfg"]
+    rep = _replica(env, cfg, slots=2, tree=tree, steer_drafter=False)
+    spec = {"fork": 2, "join": "all",
+            "segments": [
+                {"kind": "json_schema", "schema": {"enum": [17, 42]}},
+                {"kind": "literal", "text": ";ok"},
+            ]}
+    prompt = np.random.default_rng(8).integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    results = _drain(rep, [Request(rid=0, prompt=prompt, gen=GEN, program=spec)])
+    res = results[0]
+    assert res.error is None and len(res.branches) == 2
+    assert rep.prog_masked_emissions == 0
+    # some draft node was rejected by the masked verify (accept rate < 1)
+    assert rep.accepted_total < rep.drafted_total
+
+    # forced-first-token oracle per branch
+    auto = compile_program(spec, cfg.vocab_size).automaton
+    c1 = dataclasses.replace(cfg, spec_tokens=1)
+    m1 = Model(c1)
+    pre1, dec1 = jax.jit(m1.prefill), jax.jit(m1.decode_step)
+    cache0 = m1.init_cache(1, env["max_len"])
+    lg0, _ = pre1(env["params"], jnp.asarray(prompt)[None], cache0)
+    neg = np.finfo(np.float32).min
+    order = np.argsort(
+        -np.where(auto.mask(auto.start), np.asarray(lg0[0], np.float32), neg),
+        kind="stable",
+    )
+    for i, branch in enumerate(res.branches):
+        tok = int(order[i])
+        st = auto.step(auto.start, tok)
+        cache = m1.init_cache(1, env["max_len"])
+        _, cache = pre1(env["params"], jnp.asarray(prompt)[None], cache)
+        stream = [tok]
+        for s in range(GEN):
+            if auto.is_accept(st):
+                break
+            lg, cache = dec1(
+                env["params"], cache, jnp.asarray([tok], jnp.int32),
+                jnp.int32(len(prompt) + s),
+            )
+            tok = masked_argmax(np.asarray(lg[0]), auto.mask(st))
+            st = auto.step(st, tok)
+            stream.append(tok)
+        assert branch == stream, f"branch {i}: {branch} != oracle {stream}"
+
+
+def test_fork_wider_than_pool_is_rejected_permanently(env):
+    rep = _replica(env, env["cfg"], slots=2)
+    spec = {"fork": 3, "segments": [{"kind": "json_schema", "schema": {"enum": [1, 2, 3]}}]}
+    with pytest.raises(RequestRejected):
+        rep.admit(Request(rid=0, prompt=np.zeros((4,), np.int32), gen=2, program=spec))
+    spec1 = {"fork": 2, "segments": [{"kind": "literal", "text": "ab"}]}
+    with pytest.raises(RequestRejected):  # grammar offers only 1 first token
+        rep.admit(Request(rid=1, prompt=np.zeros((4,), np.int32), gen=2, program=spec1))
+    assert not rep.active.any()  # rejects leave no slot or page state behind
+
+
+# ---------------------------------------------------------------------------
+# drafter steering: constrained accept rate must not regress vs unsteered
+# ---------------------------------------------------------------------------
+
+
+def test_steered_drafter_beats_unsteered_on_constrained_stream(env):
+    """REGRESSION (satellite 4): steering repeat/ngram drafts by the
+    automaton's allowed set must (a) never change a committed token and
+    (b) achieve accepts/launch >= the unsteered drafter on the same
+    JSON-constrained prompts."""
+    tree = TreePlan.from_branching([2]).validate()
+    rates = {}
+    for steer in (True, False):
+        rep = _replica(env, env["cfg"], slots=2, tree=tree, steer_drafter=steer)
+        results = _drain(rep, _requests(env["cfg"], SPEC))
+        assert rep.prog_masked_emissions == 0
+        rates[steer] = rep.accepted_total / max(rep.launches, 1)
+        streams = {rid: res.tokens for rid, res in results.items()}
+        if steer:
+            ref = streams
+        else:
+            assert streams == ref  # steering never changes committed tokens
+    assert rates[True] >= rates[False], rates
+
+
+def test_model_drafter_guided_by_automaton(env):
+    """The 1-layer draft model's logits are masked per spine depth, so its
+    proposals stay inside the grammar; streams match the masked oracle."""
+    cfg = env["cfg"]
+    rep = _replica(env, cfg, slots=2, drafter="model")
+    requests = _requests(cfg, SPEC, n=2)
+    results = _drain(rep, requests)
+    assert rep.prog_masked_emissions == 0
+    oracle = _masked_oracle(cfg, env["params"], requests, SPEC, env["max_len"])
+    for req in requests:
+        assert results[req.rid].tokens == oracle[req.rid]

@@ -283,3 +283,151 @@ def test_process_worker_sigkill_heartbeat_detection():
     for rid, r in res.items():
         assert r.error is None and r.tokens == _expected(rid)
     assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fork programs over the wire: kill mid-fork, exactly-once re-admission
+# ---------------------------------------------------------------------------
+
+
+def test_wire_request_program_passthrough():
+    """``WireRequest`` keeps 3-positional construction (program defaults to
+    None) and the admit message's program dict survives the wire."""
+    from repro.runtime.worker import WireRequest
+
+    legacy = WireRequest(1, [2, 3], 4)
+    assert legacy.program is None
+    spec = {"fork": 2, "segments": [{"kind": "literal", "text": "ab"}]}
+    forked = WireRequest(1, [2, 3], 4, spec)
+    assert forked.program == spec
+
+
+class ForkingSyntheticReplica(SyntheticReplica):
+    """SyntheticReplica honoring a request's fork program: K branch slots
+    serve one rid off a single admission, branch ``i`` streaming
+    ``rid*1000 + i*100 + j``, resolved into ONE result at join — so a
+    duplicated or partially re-admitted fork is byte-detectable."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.branch = [0] * self.slots
+        self.fork_k = {}
+        self.fork_done = {}
+        self.seen_programs = {}
+        self.admitted_rids = []
+
+    def in_flight(self):
+        out, seen = [], set()
+        for r in self.requests:
+            if r is not None and r.rid not in seen:
+                seen.add(r.rid)
+                out.append(r)
+        return out
+
+    def admit(self, req):
+        from repro.core.programs import program_slots
+
+        k = program_slots(getattr(req, "program", None))
+        free = [i for i, r in enumerate(self.requests) if r is None]
+        if len(free) < k:
+            raise RuntimeError("no free slot")
+        if self.fault_hook is not None:
+            self.fault_hook(self.replica_id, self.steps + 1,
+                            phase="admit", rids=(req.rid,))
+        self.seen_programs[req.rid] = getattr(req, "program", None)
+        self.admitted_rids.append(req.rid)
+        self.fork_k[req.rid] = k
+        self.fork_done[req.rid] = {}
+        for i, slot in enumerate(free[:k]):
+            self.requests[slot] = req
+            self.branch[slot] = i
+            self.emitted[slot] = [req.rid * 1000 + i * 100]
+            self.gen_left[slot] = int(req.gen)
+        self.prefills += 1
+        return free[0]
+
+    def step(self):
+        from repro.runtime.worker import WireResult
+
+        if not self.has_work():
+            return []
+        self.steps += 1
+        rids = tuple(r.rid for r in self.requests if r is not None)
+        if self.fault_hook is not None:
+            self.fault_hook(self.replica_id, self.steps, phase="launch", rids=rids)
+        self.launches += 1
+        done = []
+        for slot, req in enumerate(self.requests):
+            if req is None:
+                continue
+            i = self.branch[slot]
+            self.emitted[slot].append(
+                req.rid * 1000 + i * 100 + len(self.emitted[slot])
+            )
+            self.gen_left[slot] -= 1
+            self.accepted_total += 1
+            self.drafted_total += 1
+            if self.gen_left[slot] <= 0:
+                self.fork_done[req.rid][i] = list(self.emitted[slot])
+                self.requests[slot] = None
+                self.emitted[slot] = []
+                if len(self.fork_done[req.rid]) == self.fork_k[req.rid]:
+                    streams = self.fork_done.pop(req.rid)
+                    del self.fork_k[req.rid]
+                    done.append(WireResult(
+                        req.rid,
+                        [t for b in sorted(streams) for t in streams[b]],
+                    ))
+        return done
+
+
+def _expected_fork(rid, gen, k=2):
+    return [rid * 1000 + b * 100 + j for b in range(k) for j in range(gen + 1)]
+
+
+def test_kill_mid_fork_readmits_both_continuations_exactly_once():
+    """A worker SIGKILL'd with a 2-way fork in flight: the parent rid is
+    re-queued ONCE (branches share one request), the replacement re-admits
+    BOTH continuations off a single admission, and the published stream has
+    no duplicated or missing branch bytes."""
+    spec = {"fork": 2, "join": "all",
+            "segments": [{"kind": "literal", "text": "ab"}]}
+    clock = ManualClock()
+    replicas = []
+
+    def make_replica(w, inc):
+        rep = ForkingSyntheticReplica(2, replica_id=w)
+        replicas.append(rep)
+        return rep
+
+    spawn = make_loopback_spawn(make_replica, clock, heartbeat_every=1.0)
+    reqs = [Request(rid=i, prompt=list(range(4)), gen=GEN, program=spec)
+            for i in range(4)]
+    fab = CrossProcessFabric(
+        spawn, reqs,
+        XFabricConfig(workers=2, slots_per_worker=2, heartbeat_every=1.0,
+                      heartbeat_miss_limit=4, spawn_grace=0.0, poll_every=1.0,
+                      max_spawns=4, max_rounds=10_000),
+        clock=clock, specs=parse_faults("kill@step=3:replica=0"),
+    )
+    res = fab.run()
+    assert fab.stats["kills"] == 1 and fab.stats["requeued"] >= 1
+    assert fab.stats["duplicates"] == 0 and fab.stats["dropped"] == 0
+    assert len(res) == 4
+    for rid, r in res.items():
+        assert r.error is None
+        assert r.tokens == _expected_fork(rid, GEN)  # both branches, no dup bytes
+    # the program spec crossed the wire to every admission
+    seen = {}
+    for rep in replicas:
+        seen.update(rep.seen_programs)
+    assert all(seen[r.rid] == spec for r in reqs)
+    # exactly-once re-admission: the killed worker's rid was admitted once
+    # per incarnation, everyone else exactly once
+    admits = {}
+    for rep in replicas:
+        for rid in rep.admitted_rids:
+            admits[rid] = admits.get(rid, 0) + 1
+    requeued = [rid for rid, n in admits.items() if n == 2]
+    assert sum(admits.values()) == 4 + len(requeued)
+    assert len(requeued) >= 1  # the in-flight fork really was replayed
